@@ -1,0 +1,55 @@
+"""Paper Figure 4: cache-hit potential, TPF vs brTPF.
+
+(a) #hits for LRU caches of increasing capacity (and unlimited);
+(b) #hits with an unlimited cache across page sizes.
+
+Validation targets (section 7.1): TPF #hits >> brTPF #hits at every
+cache size; brTPF maxMpR=15 achieves ~150% of the #hits of maxMpR=30;
+curves flatten once capacity covers all distinct requests; page size has
+no impact on #hits.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.core import LRUCache
+
+from .common import emit, run_sequence, timed
+
+
+def _hits(kind: str, mpr: int, cache_size: Optional[int],
+          page_size: int = 100) -> int:
+    cache = LRUCache(cache_size)
+    server, _ = run_sequence(kind, page_size=page_size, max_mpr=mpr,
+                             cache=cache)
+    return cache.hits
+
+
+def run(full: bool = False) -> Dict:
+    sizes = ([2_500, 5_000, 10_000, 50_000, 100_000, 250_000, 500_000,
+              None] if full else [2_500, 10_000, 50_000, None])
+    out: Dict = {"by_size": {}, "by_pagesize": {}}
+    for label, kind, mpr in [("tpf", "tpf", 30), ("brtpf15", "brtpf", 15),
+                             ("brtpf30", "brtpf", 30)]:
+        out["by_size"][label] = {}
+        for cs in sizes:
+            hits, dt = timed(_hits, kind, mpr, cs)
+            out["by_size"][label][cs] = hits
+            emit(f"cache_hits/{label}_size{cs or 'inf'}", dt * 1e6,
+                 f"hits={hits}")
+
+    pagesizes = [100, 500, 2000] if not full else [100, 250, 500, 1000,
+                                                   2000]
+    for label, kind, mpr in [("tpf", "tpf", 30), ("brtpf15", "brtpf", 15),
+                             ("brtpf30", "brtpf", 30)]:
+        out["by_pagesize"][label] = {}
+        for ps in pagesizes:
+            hits, dt = timed(_hits, kind, mpr, None, page_size=ps)
+            out["by_pagesize"][label][ps] = hits
+            emit(f"cache_hits/{label}_ps{ps}", dt * 1e6, f"hits={hits}")
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    run(full="--full" in sys.argv)

@@ -1,0 +1,89 @@
+"""Shared benchmark fixtures: dataset, workload, engine runners.
+
+Scales default small enough for one CPU core; pass ``--full`` to
+``benchmarks.run`` (or use the env var ``REPRO_BENCH_FULL=1``) for the
+EXPERIMENTS.md configuration.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import BrTPFClient, BrTPFServer, LRUCache, TPFClient
+from repro.data.watdiv import (WatDivData, WatDivScale, generate,
+                               generate_workload)
+
+FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+
+
+@dataclasses.dataclass
+class BenchConfig:
+    scale: WatDivScale
+    num_queries: int
+    request_budget: int
+    seed: int = 0
+
+    @classmethod
+    def default(cls) -> "BenchConfig":
+        if FULL:
+            # ~0.5M triples, the paper's 145-query selection
+            return cls(WatDivScale(users=20000, products=8000,
+                                   reviews=30000, retailers=100,
+                                   genres=60, cities=120, tags=300),
+                       num_queries=145, request_budget=100_000)
+        # ~25K triples, 48 queries: CI-friendly
+        return cls(WatDivScale(users=1500, products=600, reviews=2500,
+                               retailers=24, genres=30, cities=40,
+                               tags=80),
+                   num_queries=48, request_budget=15_000)
+
+
+@functools.lru_cache(maxsize=2)
+def dataset(seed: int = 0, full: Optional[bool] = None) -> WatDivData:
+    cfg = BenchConfig.default()
+    return generate(cfg.scale, seed=cfg.seed + seed)
+
+
+@functools.lru_cache(maxsize=4)
+def workload(seed: int = 1):
+    cfg = BenchConfig.default()
+    return tuple(generate_workload(dataset(), cfg.num_queries, seed=seed))
+
+
+def make_server(page_size: int = 100, max_mpr: int = 30,
+                cache: Optional[LRUCache] = None) -> BrTPFServer:
+    return BrTPFServer(dataset().store, page_size=page_size,
+                       max_mpr=max_mpr, cache=cache)
+
+
+def run_sequence(client_kind: str, page_size: int = 100,
+                 max_mpr: int = 30, cache: Optional[LRUCache] = None,
+                 per_query: bool = False):
+    """Execute the workload; returns (server, per-query results list)."""
+    cfg = BenchConfig.default()
+    server = make_server(page_size, max_mpr, cache)
+    results = []
+    for name, bgp in workload():
+        if client_kind == "tpf":
+            client = TPFClient(server, request_budget=cfg.request_budget)
+        else:
+            client = BrTPFClient(server, max_mpr=max_mpr,
+                                 request_budget=cfg.request_budget)
+        res = client.execute(bgp)
+        results.append((name, res))
+    return server, results
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0)
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,62 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU) vs jnp oracle.
+
+On this CPU container, interpret-mode timings measure Python dispatch,
+not TPU performance -- the derived column therefore also reports the
+*work geometry* (compare-grid cells per launch) that the roofline model
+uses for the TPU projection in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import bindjoin, ops, tpf_match
+from repro.kernels import ref
+
+from .common import emit
+
+
+def _time(fn, *args, reps=5, **kw):
+    fn(*args, **kw)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(full: bool = False) -> Dict:
+    rng = np.random.default_rng(0)
+    out: Dict = {}
+    shapes = [(4096, 30), (16384, 50)] if not full else [
+        (4096, 30), (16384, 50), (65536, 128), (262144, 50)]
+    for t, m in shapes:
+        cand = jnp.asarray(rng.integers(0, 1000, (t, 3)), jnp.int32)
+        pats = jnp.asarray(rng.integers(-1, 1000, (m, 3)), jnp.int32)
+        valid = jnp.ones((m,), jnp.int32)
+
+        dt_ref = _time(lambda: jax.block_until_ready(
+            bindjoin(cand, pats, valid, use_pallas=False)))
+        dt_pal = _time(lambda: jax.block_until_ready(
+            bindjoin(cand, pats, valid, use_pallas=True)))
+        cells = t * m
+        out[(t, m)] = (dt_ref, dt_pal)
+        emit(f"kernels/bindjoin_T{t}_M{m}_ref", dt_ref * 1e6,
+             f"cells={cells}")
+        emit(f"kernels/bindjoin_T{t}_M{m}_pallas_interp", dt_pal * 1e6,
+             f"cells={cells}")
+
+        vec = jnp.asarray(ops.pattern_vec_from((3, -1, -1)))
+        dt_m = _time(lambda: jax.block_until_ready(
+            tpf_match(cand, vec, use_pallas=False)))
+        emit(f"kernels/tpf_match_T{t}_ref", dt_m * 1e6, f"rows={t}")
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    run(full="--full" in sys.argv)

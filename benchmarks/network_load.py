@@ -1,0 +1,85 @@
+"""Paper Figure 2: network load -- #req and dataRecv, TPF vs brTPF.
+
+Reproduces: (a) overall #req vs maxMpR, (b) overall dataRecv vs maxMpR,
+(c,d) per-query better/worse counts, (e,f) difference-magnitude buckets
+for maxMpR=30.
+
+Validation targets (paper section 5.3): brTPF's overall #req falls
+monotonically with maxMpR, down to a few percent of TPF's; dataRecv is
+53.5%-79.6% of TPF's and also falls with maxMpR.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from .common import emit, run_sequence, timed
+
+
+def max_mpr_values(full: bool) -> List[int]:
+    return list(range(5, 55, 5)) if full else [5, 15, 30, 50]
+
+
+def run(full: bool = False) -> Dict:
+    out: Dict = {"brtpf": {}}
+    (server, tpf_results), t_tpf = timed(run_sequence, "tpf")
+    tpf = {
+        "req": server.counters.num_requests,
+        "recv": server.counters.data_received,
+        "per_query": [(r.num_requests, r.data_received, r.timed_out)
+                      for _, r in tpf_results],
+    }
+    out["tpf"] = tpf
+    emit("network_load/tpf", t_tpf * 1e6 / max(len(tpf_results), 1),
+         f"req={tpf['req']};recv={tpf['recv']}")
+
+    for mpr in max_mpr_values(full):
+        (server, br_results), t_br = timed(
+            run_sequence, "brtpf", max_mpr=mpr)
+        row = {
+            "req": server.counters.num_requests,
+            "recv": server.counters.data_received,
+            "per_query": [(r.num_requests, r.data_received, r.timed_out)
+                          for _, r in br_results],
+        }
+        out["brtpf"][mpr] = row
+        emit(f"network_load/brtpf_mpr{mpr}",
+             t_br * 1e6 / max(len(br_results), 1),
+             f"req={row['req']};recv={row['recv']};"
+             f"req_frac={row['req'] / max(tpf['req'], 1):.3f};"
+             f"recv_frac={row['recv'] / max(tpf['recv'], 1):.3f}")
+
+    # Fig 2(c,d): per-query win counts at each maxMpR
+    for mpr, row in out["brtpf"].items():
+        better_req = worse_req = better_recv = worse_recv = 0
+        for (tq, tr, _), (bq, br_, _) in zip(tpf["per_query"],
+                                             row["per_query"]):
+            better_req += bq < tq
+            worse_req += bq > tq
+            better_recv += br_ < tr
+            worse_recv += br_ > tr
+        row["wins"] = (better_req, worse_req, better_recv, worse_recv)
+        emit(f"network_load/wins_mpr{mpr}", 0.0,
+             f"req_better={better_req};req_worse={worse_req};"
+             f"recv_better={better_recv};recv_worse={worse_recv}")
+
+    # Fig 2(e,f): difference-magnitude buckets for maxMpR=30
+    mpr30 = out["brtpf"].get(30)
+    if mpr30:
+        buckets = {}
+        for (tq, tr, _), (bq, br_, _) in zip(tpf["per_query"],
+                                             mpr30["per_query"]):
+            diff = tq - bq
+            mag = 0
+            while abs(diff) >= 10 ** (mag + 1):
+                mag += 1
+            key = f"{'+' if diff >= 0 else '-'}1e{mag}"
+            buckets[key] = buckets.get(key, 0) + 1
+        mpr30["req_diff_buckets"] = buckets
+        emit("network_load/diff_buckets_mpr30", 0.0,
+             ";".join(f"{k}={v}" for k, v in sorted(buckets.items())))
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    run(full="--full" in sys.argv)

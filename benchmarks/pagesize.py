@@ -1,0 +1,35 @@
+"""Paper section 5.3, second experiment: page-size sensitivity.
+
+Claim C2: page size (100..2000 data triples/page) has no considerable
+impact on #req or dataRecv for either interface -- the relative
+TPF/brTPF differences are page-size independent.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from .common import emit, run_sequence, timed
+
+
+def run(full: bool = False) -> Dict:
+    sizes = [100, 250, 500, 1000, 2000] if full else [100, 500, 2000]
+    out: Dict = {}
+    for kind, mpr in [("tpf", None), ("brtpf", 15), ("brtpf", 30)]:
+        label = kind if mpr is None else f"{kind}{mpr}"
+        out[label] = {}
+        for ps in sizes:
+            (server, results), dt = timed(
+                run_sequence, kind, page_size=ps,
+                max_mpr=mpr if mpr else 30)
+            row = {"req": server.counters.num_requests,
+                   "recv": server.counters.data_received}
+            out[label][ps] = row
+            emit(f"pagesize/{label}_ps{ps}",
+                 dt * 1e6 / max(len(results), 1),
+                 f"req={row['req']};recv={row['recv']}")
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    run(full="--full" in sys.argv)

@@ -1,0 +1,86 @@
+"""Roofline report: aggregate dry-run artifacts into the baseline table.
+
+Reads ``artifacts/dryrun/*.json`` (produced by repro.launch.dryrun) and
+emits one row per (arch x shape x mesh) cell with the three roofline
+terms, the dominant bottleneck, and the useful-compute ratio. This is
+the source of EXPERIMENTS.md section Roofline.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from .common import emit
+
+ART = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "artifacts", "dryrun")
+
+
+def load_records(mesh_filter: str = "") -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        if path.endswith("skips.json"):
+            continue
+        with open(path) as f:
+            rec = json.load(f)
+        if mesh_filter and rec.get("mesh") != mesh_filter:
+            continue
+        recs.append(rec)
+    return recs
+
+
+def run(full: bool = False) -> List[Dict]:
+    recs = load_records()
+    if not recs:
+        emit("roofline/no_artifacts", 0.0,
+             "run `python -m repro.launch.dryrun` first")
+        return []
+    for rec in recs:
+        r = rec["roofline"]
+        name = f"roofline/{rec['arch']}__{rec['shape']}__{rec['mesh']}"
+        emit(
+            name,
+            rec.get("compile_s", 0.0) * 1e6,
+            f"compute={r['compute_s']:.4f}s;"
+            f"memory={r['memory_s']:.4f}s;"
+            f"collective={r['collective_s']:.4f}s;"
+            f"dominant={r['dominant']};"
+            f"useful_ratio={r['useful_flops_ratio']:.3f};"
+            f"fraction={r['roofline_fraction']:.3f};"
+            f"mem_gb={rec['memory_analysis']['temp_size_gb']:.1f}")
+    skips = os.path.join(ART, "skips.json")
+    if os.path.exists(skips):
+        with open(skips) as f:
+            for s in json.load(f):
+                emit(f"roofline/{s['arch']}__{s['shape']}__SKIP", 0.0,
+                     s["reason"])
+    return recs
+
+
+def markdown_table(mesh: str = "pod16x16") -> str:
+    """EXPERIMENTS.md-ready table for one mesh."""
+    rows = ["| arch | shape | compute s | memory s | collective s | "
+            "dominant | useful ratio | roofline frac | mem GB/dev |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for rec in load_records(mesh):
+        r = rec["roofline"]
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {r['compute_s']:.4f} "
+            f"| {r['memory_s']:.4f} | {r['collective_s']:.4f} "
+            f"| {r['dominant']} | {r['useful_flops_ratio']:.3f} "
+            f"| {r['roofline_fraction']:.3f} "
+            f"| {rec['memory_analysis']['temp_size_gb']:.1f} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    import sys
+    if "--markdown" in sys.argv:
+        mesh = sys.argv[sys.argv.index("--markdown") + 1] \
+            if len(sys.argv) > sys.argv.index("--markdown") + 1 \
+            else "pod16x16"
+        print(markdown_table(mesh))
+    else:
+        run(full="--full" in sys.argv)

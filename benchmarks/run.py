@@ -1,0 +1,41 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Default scales are CI-friendly;
+``--full`` (or REPRO_BENCH_FULL=1) switches to the EXPERIMENTS.md
+configuration. ``--only <prefix>`` restricts to one bench family.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    full = "--full" in sys.argv
+    only = None
+    if "--only" in sys.argv:
+        only = sys.argv[sys.argv.index("--only") + 1]
+
+    print("name,us_per_call,derived")
+    benches = []
+    from . import network_load, pagesize, throughput, cache_hits, kernels
+    benches = [
+        ("network_load", network_load.run),
+        ("pagesize", pagesize.run),
+        ("throughput", throughput.run),
+        ("cache_hits", cache_hits.run),
+        ("kernels", kernels.run),
+    ]
+    try:
+        from . import roofline_report
+        benches.append(("roofline", roofline_report.run))
+    except ImportError:
+        pass
+
+    for name, fn in benches:
+        if only and not name.startswith(only):
+            continue
+        fn(full=full)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Distributed brTPF: the triple store sharded over a device mesh.
+
+Each mesh shard acts as one brTPF server of a federation; a request
+(triple pattern + attached bindings) is broadcast, the Pallas bind-join
+kernel filters shard-locally, and fixed-capacity pages are all-gathered
+back -- the paper's client/server split expressed as JAX collectives.
+
+Run:  PYTHONPATH=src python examples/federation_demo.py
+(single CPU device here; the dry-run lowers the same request step on the
+ 256/512-chip production meshes -- see EXPERIMENTS.md.)
+"""
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+from repro.core import (TriplePattern, TripleStore, brtpf_select,
+                        encode_var)
+from repro.core.federation import FederatedStore
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    triples = np.unique(
+        rng.integers(0, 64, size=(5000, 3)).astype(np.int32), axis=0)
+    store = TripleStore(triples)
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+    fed = FederatedStore.build(store.triples, mesh)
+    print(f"store: {len(store)} triples across {mesh.size} shard(s)")
+
+    V = encode_var
+    tp = TriplePattern(V(0), 7, V(1))
+    omega = rng.integers(0, 64, size=(12, 2)).astype(np.int32)
+    omega[rng.random((12, 2)) < 0.3] = -1
+
+    got = fed.execute(tp, omega, max_mpr=16, capacity=1024)
+    want = brtpf_select(store, tp, omega)
+    assert (set(map(tuple, got.tolist()))
+            == set(map(tuple, want.tolist())))
+    print(f"brTPF request: pattern (?s 7 ?o) + {omega.shape[0]} bindings")
+    print(f"distributed result: {got.shape[0]} triples "
+          f"(== host oracle: {want.shape[0]})")
+
+    # what actually crossed the wire, per the paper's argument:
+    req_bytes = omega.nbytes + 3 * 4
+    tpf_bytes = store.match(tp).shape[0] * 12
+    brtpf_bytes = got.shape[0] * 12
+    print(f"\nwire model: request {req_bytes} B; "
+          f"TPF response would be {tpf_bytes} B; "
+          f"brTPF response {brtpf_bytes} B "
+          f"({100 * brtpf_bytes / max(tpf_bytes, 1):.1f}%)")
+
+
+if __name__ == "__main__":
+    main()

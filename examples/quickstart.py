@@ -1,0 +1,55 @@
+"""Quickstart: TPF vs brTPF on a small RDF graph.
+
+Builds a toy dataset, runs the same BGP query through both client
+algorithms against the same combined server, and prints the paper's
+network metrics side by side.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (BrTPFClient, BrTPFServer, TPFClient,
+                        TermDictionary, evaluate_bgp_reference, parse_bgp,
+                        store_from_ntriples)
+
+
+def main() -> None:
+    d = TermDictionary()
+    rng = np.random.default_rng(0)
+    lines = []
+    for i in range(200):
+        lines.append(f"user{i} livesIn city{rng.integers(6)}")
+        for _ in range(3):
+            lines.append(f"user{i} likes product{rng.integers(40)}")
+    for p in range(40):
+        lines.append(f"product{p} hasGenre genre{rng.integers(5)}")
+    store = store_from_ntriples(lines, d)
+    print(f"dataset: {len(store)} triples, {d.__len__()} terms")
+
+    query = """
+        ?u livesIn city0
+        ?u likes ?p
+        ?p hasGenre genre0
+    """
+    bgp = parse_bgp(query, d)
+    expected = evaluate_bgp_reference(store.triples, bgp)
+    print(f"query: 3-pattern BGP, {expected.shape[0]} solutions\n")
+
+    header = f"{'client':8s} {'#req':>6s} {'dataRecv':>9s} {'solutions':>9s}"
+    print(header)
+    print("-" * len(header))
+    for name, make in [
+        ("TPF", lambda srv: TPFClient(srv)),
+        ("brTPF", lambda srv: BrTPFClient(srv, max_mpr=30)),
+    ]:
+        server = BrTPFServer(store, page_size=100, max_mpr=30)
+        res = make(server).execute(bgp)
+        assert np.array_equal(np.unique(res.solutions, axis=0), expected)
+        print(f"{name:8s} {res.num_requests:6d} {res.data_received:9d} "
+              f"{res.solutions.shape[0]:9d}")
+    print("\nbrTPF computes the identical result with a fraction of the"
+          " requests/transfer (paper section 5).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""End-to-end driver (the paper's kind): serve a query workload to many
+concurrent clients through the brTPF server and report throughput.
+
+This is paper section 6 in miniature: a WatDiv-like dataset, concurrent
+clients split across distinct query sets, a 4-worker origin server with
+calibrated service costs, a 5-minute timeout, with/without the shared
+HTTP cache -- comparing the TPF and brTPF interfaces end to end.
+
+Run:  PYTHONPATH=src python examples/serve_queries.py [--clients 16]
+"""
+import argparse
+
+from repro.core.sim import (calibrate, collect_traces, simulate,
+                            split_workload)
+from repro.core import BrTPFServer
+from repro.data.watdiv import WatDivScale, generate, generate_workload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=16)
+    ap.add_argument("--queries", type=int, default=48)
+    ap.add_argument("--cache", action="store_true")
+    args = ap.parse_args()
+
+    data = generate(WatDivScale(users=1000, products=400, reviews=1500),
+                    seed=0)
+    wl = generate_workload(data, num_queries=args.queries, seed=1)
+    print(f"dataset: {data.num_triples} triples; "
+          f"workload: {len(wl)} queries; clients: {args.clients}")
+
+    params = calibrate(BrTPFServer(data.store), wl)
+    rows = []
+    for kind, mpr in [("tpf", None), ("brtpf", 30)]:
+        server = BrTPFServer(data.store, max_mpr=mpr or 30)
+        traces = collect_traces(server, wl, kind, max_mpr=mpr,
+                                request_budget=20_000)
+        per_client = split_workload(traces, args.clients)
+        for use_cache in ([False, True] if args.cache else [False]):
+            res = simulate(per_client, params, use_cache=use_cache,
+                           wrap=True)
+            rows.append((kind, use_cache, res))
+
+    print(f"\n{'client':8s} {'cache':6s} {'completed/hr':>12s} "
+          f"{'timeouts':>8s} {'avg QET':>8s}")
+    for kind, cached, res in rows:
+        print(f"{kind:8s} {str(cached):6s} {res.completed:12d} "
+              f"{res.timeouts:8d} {res.avg_qet:7.1f}s")
+    print("\nbrTPF sustains more completed queries under the same load"
+          " (paper section 6); the cache helps both but does not let"
+          " TPF overtake (section 7).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Train a small LM end-to-end through the brTPF data plane.
+
+Data curation is a BGP query over the corpus metadata store executed by
+the brTPF client (the paper's technique as the framework's data plane);
+the selected documents stream into packed LM batches; training runs with
+AdamW, async checkpointing, and automatic failure recovery.
+
+Run:  PYTHONPATH=src python examples/train_lm.py --steps 200
+      PYTHONPATH=src python examples/train_lm.py --m100  # ~100M params
+"""
+import argparse
+import dataclasses
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch, reduced_for_smoke
+from repro.data.pipeline import BrTPFDataPipeline, SyntheticCorpus
+from repro.launch.steps import make_train_step
+from repro.models.model import build_model
+from repro.train.loop import Trainer, TrainerConfig
+from repro.train.optimizer import AdamW, warmup_cosine
+
+
+def make_config(m100: bool):
+    base = get_arch("qwen2-1.5b")
+    if m100:
+        # ~100M-param qwen2-style config
+        return dataclasses.replace(
+            base, name="qwen2-100m", num_layers=8, d_model=768,
+            num_heads=12, num_kv_heads=4, head_dim=64, d_ff=2048,
+            vocab_size=8192, tie_embeddings=True)
+    return dataclasses.replace(
+        base, name="qwen2-20m", num_layers=4, d_model=384, num_heads=6,
+        num_kv_heads=2, head_dim=64, d_ff=1024, vocab_size=4096,
+        tie_embeddings=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--m100", action="store_true")
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args()
+
+    cfg = make_config(args.m100)
+    model = build_model(cfg)
+    print(f"arch: {cfg.name} ({cfg.param_count()/1e6:.1f}M params)")
+
+    corpus = SyntheticCorpus.generate(num_docs=400,
+                                      vocab_size=cfg.vocab_size, seed=0)
+    pipe = BrTPFDataPipeline(
+        corpus, "?d hasDomain code\n?d hasQuality q0",
+        batch_size=args.batch, seq_len=args.seq)
+    print(f"data plane: brTPF selected {pipe.stats.selected_docs} docs "
+          f"({pipe.stats.num_requests} requests, "
+          f"{pipe.stats.data_received} triples received)")
+
+    params, _ = model.init(jax.random.PRNGKey(0))
+    opt = AdamW(learning_rate=warmup_cosine(3e-4, 20, args.steps))
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(model, opt), donate_argnums=(0, 1))
+
+    ckpt_dir = args.ckpt_dir or os.path.join(
+        tempfile.gettempdir(), f"repro_train_{cfg.name}")
+    trainer = Trainer(
+        TrainerConfig(total_steps=args.steps, ckpt_dir=ckpt_dir,
+                      ckpt_every=50),
+        step_fn, params, opt_state)
+    if trainer.try_resume():
+        print(f"resumed from checkpoint at step {trainer.step}")
+
+    def logged(it):
+        for i, b in enumerate(it):
+            yield {k: jnp.asarray(v) for k, v in b.items()}
+
+    report = trainer.train(logged(iter(pipe)))
+    first = report.losses[0] if report.losses else float("nan")
+    print(f"steps: {report.steps_run}  restarts: {report.restarts}")
+    print(f"loss: {first:.3f} -> {report.final_loss:.3f}")
+    assert report.final_loss < first, "training did not reduce loss"
+    print("ok: loss decreased through the brTPF-fed pipeline")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro: brTPF (Bindings-Restricted Triple Pattern Fragments) as a
+production-grade JAX framework -- query engine, model zoo, distributed
+runtime, and TPU Pallas kernels."""
+__version__ = "0.1.0"

@@ -1,0 +1,31 @@
+"""brTPF core: the paper's contribution as a composable library.
+
+Layers: dictionary-encoded RDF (``rdf``), HDT-style store (``store``),
+selector functions per Definitions 1-2 (``selectors``), the combined
+TPF/brTPF server (``server``), the two client algorithms (``client``),
+LRU cache simulation (``cache``), and request accounting (``metrics``).
+"""
+from .bgp import BGP, bgp_from_arrays, evaluate_bgp_reference, parse_bgp
+from .cache import LRUCache, request_key
+from .client import BrTPFClient, ExecutionResult, TPFClient
+from .metrics import Counters
+from .rdf import (TermDictionary, TriplePattern, UNBOUND, compatible,
+                  decode_var, dedup_mappings, encode_var, is_var,
+                  mapping_from_triple, merge, project_mappings)
+from .selectors import (Fragment, brtpf_cardinality, brtpf_select,
+                        brtpf_select_with_cnt, instantiate_patterns,
+                        tpf_select)
+from .server import (BrTPFServer, MaxMprExceeded, Request,
+                     DEFAULT_MAX_MPR, DEFAULT_PAGE_SIZE)
+from .store import TripleStore, store_from_ntriples
+
+__all__ = [
+    "BGP", "BrTPFClient", "BrTPFServer", "Counters", "ExecutionResult",
+    "Fragment", "LRUCache", "MaxMprExceeded", "Request", "TPFClient",
+    "TermDictionary", "TriplePattern", "TripleStore", "UNBOUND",
+    "bgp_from_arrays", "brtpf_cardinality", "brtpf_select", "brtpf_select_with_cnt", "compatible",
+    "decode_var", "dedup_mappings", "encode_var", "evaluate_bgp_reference",
+    "instantiate_patterns", "is_var", "mapping_from_triple", "merge",
+    "parse_bgp", "project_mappings", "request_key", "store_from_ntriples",
+    "tpf_select", "DEFAULT_MAX_MPR", "DEFAULT_PAGE_SIZE",
+]

@@ -1,0 +1,60 @@
+"""LRU HTTP-cache simulation (paper section 7).
+
+The paper instruments the combined TPF/brTPF server to count the cache
+hits an HTTP proxy (nginx) *would* achieve, for an unlimited cache or an
+LRU cache bounded to a number of distinct requests. A request's cache key
+is its full URL, i.e. (pattern, Omega sequence, page) -- brTPF requests
+with different attached mappings are distinct cache entries, which is why
+brTPF's hit potential is structurally lower (section 7.1).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Hashable, Optional, Tuple
+
+
+class LRUCache:
+    """Counting LRU cache over hashable request keys.
+
+    ``capacity=None`` simulates the unlimited cache of section 7.1.
+    """
+
+    def __init__(self, capacity: Optional[int] = None) -> None:
+        self.capacity = capacity
+        self.hits = 0
+        self.misses = 0
+        self._entries: "OrderedDict[Hashable, object]" = OrderedDict()
+
+    def get(self, key: Hashable):
+        if key in self._entries:
+            self.hits += 1
+            self._entries.move_to_end(key)
+            return self._entries[key]
+        self.misses += 1
+        return None
+
+    def put(self, key: Hashable, value: object) -> None:
+        self._entries[key] = value
+        self._entries.move_to_end(key)
+        if self.capacity is not None and len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+def request_key(pattern_tuple: Tuple[int, int, int],
+                omega_rows: Optional[tuple],
+                page: int) -> Hashable:
+    """Canonical cache key: the request 'URL'.
+
+    ``omega_rows`` must be a tuple of row-tuples in *sequence order* --
+    two requests with the same mappings in different order are different
+    URLs, exactly as for the paper's GET-parameter encoding.
+    """
+    return (pattern_tuple, omega_rows, page)

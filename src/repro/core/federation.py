@@ -1,0 +1,273 @@
+"""Distributed brTPF: the triple store sharded over the mesh.
+
+The paper (section 2.2) notes that TPF-style interfaces compose into
+federations of servers. Here the federation *is* the mesh: the dataset is
+partitioned across the ``data`` axis (one shard per device = one "brTPF
+server"), a request -- (triple pattern, attached mappings) -- is broadcast
+to every shard, each shard evaluates the bindings-restricted selector
+locally with the Pallas ``bindjoin`` kernel, and the fixed-capacity local
+pages are all-gathered back to the requesting client.
+
+This is the paper's thesis expressed in mesh terms: the bindings (a few
+KB) travel to the data, instead of the data (the full TPF fragment)
+traveling to the client. The dry-run rooflines in EXPERIMENTS.md quantify
+exactly this collective-byte saving.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..kernels import ops as kops
+from .rdf import TriplePattern, is_var
+from .selectors import instantiate_patterns
+
+
+def _local_brtpf(cand: jnp.ndarray, patterns: jnp.ndarray,
+                 pat_valid: jnp.ndarray, base_vec: jnp.ndarray,
+                 cand_valid: jnp.ndarray, capacity: int):
+    """Per-shard selector: Definition 1 on the local partition.
+
+    ``base_vec`` carries the original pattern's repeated-variable equality
+    flags (the instantiated-pattern grid alone cannot express them).
+    Returns a fixed-shape local page (capacity, 3) padded with -1 + count.
+    """
+    keep, _ = kops.bindjoin(cand, patterns, pat_valid)
+    keep &= kops.tpf_match(cand, base_vec)
+    keep &= cand_valid
+    idx, count = kops.compact_mask(keep, capacity)
+    page = jnp.take(cand, jnp.maximum(idx, 0), axis=0)
+    page = jnp.where((idx >= 0)[:, None], page, -1)
+    return page, count
+
+
+@dataclasses.dataclass
+class FederatedStore:
+    """Triple store sharded over one mesh axis (one shard = one server).
+
+    Each shard keeps its partition SPO-sorted with packed int64 keys
+    (every federation member is an HDT-style server), which enables the
+    beyond-paper *windowed* request path: a bound-prefix pattern binary-
+    searches the shard-local range and scans only a fixed window of it,
+    instead of streaming the whole shard through the bind-join kernel.
+    """
+
+    mesh: Mesh
+    axis: str
+    triples: jax.Array       # int32 [shards * shard_n, 3], shard-padded
+    valid: jax.Array         # bool  [shards * shard_n]
+    keys: jax.Array          # int64 [shards * shard_n], per-shard sorted
+    shard_n: int
+
+    @classmethod
+    def build(cls, triples_np: np.ndarray, mesh: Mesh,
+              axis: str = "data") -> "FederatedStore":
+        from .store import _pack
+        shards = mesh.shape[axis]
+        n = triples_np.shape[0]
+        shard_n = max(1, -(-n // shards))
+        total = shard_n * shards
+        padded = np.full((total, 3), -1, dtype=np.int32)
+        padded[:n] = triples_np
+        valid = np.zeros((total,), dtype=bool)
+        valid[:n] = True
+        # per-shard SPO sort (padding rows key to +inf -> sort last).
+        # int64 keys need the x64 context (off by default in jax)
+        keys = np.where(
+            valid,
+            _pack(padded[:, 0], padded[:, 1], padded[:, 2]),
+            np.iinfo(np.int64).max)
+        for s in range(shards):
+            sl = slice(s * shard_n, (s + 1) * shard_n)
+            order = np.argsort(keys[sl], kind="stable")
+            padded[sl] = padded[sl][order]
+            valid[sl] = valid[sl][order]
+            keys[sl] = keys[sl][order]
+        sharding = NamedSharding(mesh, P(axis, None))
+        vsharding = NamedSharding(mesh, P(axis))
+        with jax.enable_x64(True):
+            keys_dev = jax.device_put(keys, vsharding)
+        return cls(mesh=mesh, axis=axis,
+                   triples=jax.device_put(padded, sharding),
+                   valid=jax.device_put(valid, vsharding),
+                   keys=keys_dev,
+                   shard_n=shard_n)
+
+    # -- the request path ----------------------------------------------------
+
+    def request_arrays(self, tp: TriplePattern,
+                       omega: Optional[np.ndarray],
+                       max_mpr: int) -> Tuple[np.ndarray, np.ndarray,
+                                              np.ndarray]:
+        """Host-side request marshalling: instantiate + dedup (server
+        algorithm steps 1-3) and pad to the interface's maxMpR."""
+        insts = instantiate_patterns(tp, omega)
+        if len(insts) > max_mpr:
+            raise ValueError(f"{len(insts)} instantiations > maxMpR")
+        pats = np.full((max_mpr, 3), -1, dtype=np.int32)
+        valid = np.zeros((max_mpr,), dtype=np.int32)
+        for i, p in enumerate(insts):
+            pats[i] = [c if not is_var(c) else -1 for c in p.as_tuple()]
+            valid[i] = 1
+        comps = tp.as_tuple()
+        base_vec = kops.pattern_vec_from(
+            tuple(-1 if is_var(c) else c for c in comps),
+            eq_sp=int(is_var(comps[0]) and comps[0] == comps[1]),
+            eq_so=int(is_var(comps[0]) and comps[0] == comps[2]),
+            eq_po=int(is_var(comps[1]) and comps[1] == comps[2]),
+        )
+        return pats, valid, base_vec
+
+    def execute(self, tp: TriplePattern, omega: Optional[np.ndarray],
+                max_mpr: int, capacity: int) -> np.ndarray:
+        """Run one distributed brTPF request; returns matching triples."""
+        pats, valid, base_vec = self.request_arrays(tp, omega, max_mpr)
+        pages, counts = self.lowerable(capacity)(
+            self.triples, self.valid, jnp.asarray(pats),
+            jnp.asarray(valid), jnp.asarray(base_vec))
+        pages = np.asarray(pages).reshape(-1, 3)
+        keep = pages[:, 0] >= 0  # -1-padded rows are invalid
+        return pages[keep]
+
+    def lowerable(self, capacity: int):
+        """The jitted distributed request step (also used by the dry-run:
+        ``.lower(...).compile()`` proves the collective schedule)."""
+        mesh, axis, shard_n = self.mesh, self.axis, self.shard_n
+
+        def step(triples, valid, pats, pat_valid, base_vec):
+            def shard_fn(cand, cand_valid, p, pv, bv):
+                page, count = _local_brtpf(
+                    cand, p, pv, bv, cand_valid, capacity)
+                # Return per-shard pages; the all-gather back to the
+                # client is the response wire transfer.
+                page = jax.lax.all_gather(page, axis)
+                count = jax.lax.all_gather(count, axis)
+                return page, count
+
+            fn = jax.shard_map(
+                shard_fn, mesh=mesh,
+                in_specs=(P(axis, None), P(axis), P(), P(), P()),
+                out_specs=(P(), P()),
+                # pallas_call emits ShapeDtypeStructs without vma metadata
+                check_vma=False,
+            )
+            return fn(triples, valid, pats, pat_valid, base_vec)
+
+        return jax.jit(step)
+
+    # -- beyond-paper optimized request path ----------------------------------
+
+    def lowerable_windowed(self, capacity: int, window: int,
+                           wild_cols: tuple = (0, 1, 2)):
+        """Optimized request step (see EXPERIMENTS.md §Perf(D)):
+
+        1. *windowed scan*: each shard binary-searches its sorted keys
+           for the pattern's bound-prefix range and runs the bind-join
+           kernel over a fixed ``window`` starting there, not the whole
+           shard -- compute/memory per request drops shard_n/window x
+           for selective patterns;
+        2. *column projection*: only the pattern's unbound components
+           (``wild_cols``) are all-gathered back -- the bound
+           components are implied by the request, cutting response
+           bytes by (3 - len(wild_cols))/3.
+
+        Inputs add (lo_key, hi_key) int64 scalars (host-computed from
+        the pattern prefix, identical on every shard).
+        """
+        mesh, axis = self.mesh, self.axis
+
+        def step(triples, valid, keys, pats, pat_valid, base_vec,
+                 lo_key, hi_key, page_idx):
+            def shard_fn(cand, cand_valid, k, p, pv, bv, lo, hi, pi):
+                start = jnp.searchsorted(k, lo, side="left")
+                end = jnp.searchsorted(k, hi, side="right")
+                range_len = end - start                 # page metadata
+                start = start + pi.astype(start.dtype) * window
+                start = jnp.minimum(start,
+                                    jnp.asarray(max(k.shape[0] - window,
+                                                    0), start.dtype))
+                win = jax.lax.dynamic_slice_in_dim(
+                    cand, start.astype(jnp.int32), window, axis=0)
+                win_valid = jax.lax.dynamic_slice_in_dim(
+                    cand_valid, start.astype(jnp.int32), window, axis=0)
+                idx_in_range = (jnp.arange(window, dtype=start.dtype)
+                                + start) < end
+                page, count = _local_brtpf(
+                    win, p, pv, bv, win_valid & idx_in_range, capacity)
+                page = page[:, list(wild_cols)]
+                page = jax.lax.all_gather(page, axis)
+                count = jax.lax.all_gather(count, axis)
+                range_len = jax.lax.all_gather(range_len, axis)
+                return page, count, range_len
+
+            fn = jax.shard_map(
+                shard_fn, mesh=mesh,
+                in_specs=(P(axis, None), P(axis), P(axis), P(), P(),
+                          P(), P(), P(), P()),
+                out_specs=(P(), P(), P()),
+                check_vma=False,
+            )
+            return fn(triples, valid, keys, pats, pat_valid, base_vec,
+                      lo_key, hi_key, page_idx)
+
+        return jax.jit(step)
+
+    def execute_windowed(self, tp: TriplePattern,
+                         omega: Optional[np.ndarray], max_mpr: int,
+                         capacity: int, window: int) -> np.ndarray:
+        """Run the optimized path end-to-end: window paging until every
+        shard\'s bound-prefix range is covered (the first response carries
+        each shard\'s range length -- the cnt metadata of Definition 2),
+        with client-side reconstruction of projected columns."""
+        from .store import _pack, _MAX_ID
+        pats, valid, base_vec = self.request_arrays(tp, omega, max_mpr)
+        comps = tp.as_tuple()
+        # bound-prefix range in SPO order (host side, like the client
+        # computing a page URL)
+        prefix = []
+        for c in comps:
+            if is_var(c):
+                break
+            prefix.append(c)
+        lo_vals = prefix + [0] * (3 - len(prefix))
+        hi_vals = prefix + [_MAX_ID] * (3 - len(prefix))
+        lo = int(_pack(np.int64(lo_vals[0]), np.int64(lo_vals[1]),
+                       np.int64(lo_vals[2])))
+        hi = int(_pack(np.int64(hi_vals[0]), np.int64(hi_vals[1]),
+                       np.int64(hi_vals[2])))
+        wild = [i for i, c in enumerate(comps) if is_var(c)]
+        fn = self.lowerable_windowed(capacity, window,
+                                     wild_cols=tuple(wild) or (0,))
+        all_pages = []
+        with jax.enable_x64(True):
+            page_idx = 0
+            while True:
+                pages, counts, range_len = fn(
+                    self.triples, self.valid, self.keys,
+                    jnp.asarray(pats), jnp.asarray(valid),
+                    jnp.asarray(base_vec),
+                    jnp.asarray(lo, jnp.int64),
+                    jnp.asarray(hi, jnp.int64),
+                    jnp.asarray(page_idx, jnp.int32))
+                all_pages.append(np.asarray(pages))
+                max_range = int(np.asarray(range_len).max())
+                page_idx += 1
+                if page_idx * window >= max_range:
+                    break
+        pages = np.concatenate(all_pages).reshape(-1, max(len(wild), 1))
+        keep = pages[:, 0] >= 0
+        pages = pages[keep]
+        # reconstruct full triples from the request's bound components
+        out = np.empty((pages.shape[0], 3), np.int32)
+        wi = 0
+        for i, c in enumerate(comps):
+            if is_var(c):
+                out[:, i] = pages[:, wild.index(i)]
+            else:
+                out[:, i] = c
+        return np.unique(out, axis=0) if out.shape[0] else out

@@ -1,0 +1,37 @@
+"""Request/transfer accounting -- the paper's evaluation metrics.
+
+* ``num_requests`` (#req): fragment *pages* requested (section 5.1 --
+  "the measurements for #req ... correspond ... to the number of pages
+  requested").
+* ``data_received`` (dataRecv): RDF triples contained in all fragment
+  pages received, data + metadata/control triples (section 5.1).
+* ``cache_hits`` (#hits): requests served by the HTTP cache (section 7.1).
+* server/client work counters feed the throughput simulation (section 6).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class Counters:
+    num_requests: int = 0
+    data_received: int = 0          # triples (data + metadata)
+    data_triples: int = 0           # data triples only
+    meta_triples: int = 0
+    cache_hits: int = 0
+    server_lookups: int = 0         # index lookups performed by the server
+    server_triples_scanned: int = 0
+    mappings_sent: int = 0          # solution mappings attached to requests
+
+    def merge(self, other: "Counters") -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name,
+                    getattr(self, f.name) + getattr(other, f.name))
+
+    def snapshot(self) -> "Counters":
+        return dataclasses.replace(self)
+
+    def reset(self) -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, 0)

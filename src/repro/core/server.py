@@ -1,0 +1,160 @@
+"""The combined TPF/brTPF server (paper section 4.1).
+
+One servlet-equivalent component serves both interfaces: a request with a
+bindings-restricted selector takes the brTPF path, a plain triple-pattern
+request takes the TPF path. Shared machinery (paging, metadata triples,
+accounting) is common to both so comparisons are fair -- mirroring the
+paper's single-servlet design.
+
+Requests and responses are value objects; the "HTTP layer" is the
+``handle`` call boundary, and network metrics are charged per page
+exactly as in section 5.1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .cache import LRUCache, request_key
+from .metrics import Counters
+from .rdf import TriplePattern
+from .selectors import (Fragment, brtpf_select_with_cnt,
+                        instantiate_patterns, tpf_select)
+from .store import TripleStore
+
+# Number of metadata + hypermedia-control triples per fragment page. A
+# real TPF page carries void:triples counts, next/prev page links and the
+# interface's hypermedia controls; the reference server emits ~8-30 such
+# triples per page. The *value* only scales the constant page overhead --
+# the paper's findings are about how the number of pages differs between
+# TPF and brTPF -- so it is configurable.
+DEFAULT_META_TRIPLES_PER_PAGE = 8
+DEFAULT_PAGE_SIZE = 100
+DEFAULT_MAX_MPR = 30
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """A (br)TPF page request.
+
+    ``omega`` is None for pure TPF requests; otherwise an int32 [M, V]
+    sequence of solution mappings with M <= maxMpR (server-enforced).
+    """
+
+    pattern: TriplePattern
+    omega: Optional[np.ndarray] = None
+    page: int = 0
+
+    def key(self):
+        om = None
+        if self.omega is not None:
+            om = tuple(map(tuple, np.asarray(self.omega).tolist()))
+        return request_key(self.pattern.as_tuple(), om, self.page)
+
+    @property
+    def is_brtpf(self) -> bool:
+        return self.omega is not None and self.omega.shape[0] > 0
+
+
+class MaxMprExceeded(ValueError):
+    """HTTP 414 equivalent: too many mappings attached to one request."""
+
+
+class BrTPFServer:
+    """Combined TPF/brTPF server over a :class:`TripleStore`."""
+
+    def __init__(
+        self,
+        store: TripleStore,
+        page_size: int = DEFAULT_PAGE_SIZE,
+        max_mpr: int = DEFAULT_MAX_MPR,
+        meta_triples_per_page: int = DEFAULT_META_TRIPLES_PER_PAGE,
+        cache: Optional[LRUCache] = None,
+    ) -> None:
+        self.store = store
+        self.page_size = int(page_size)
+        self.max_mpr = int(max_mpr)
+        self.meta_triples_per_page = int(meta_triples_per_page)
+        self.cache = cache
+        self.counters = Counters()
+        # Selector memo: a real server streams a fragment across its
+        # pages instead of recomputing the selection per page request.
+        # This memo models that (it is NOT the HTTP cache of section 7 --
+        # it does not affect any metric, only host CPU time).
+        self._selector_memo: "OrderedDict" = OrderedDict()
+        self._selector_memo_cap = 256
+
+    # -- request handling ---------------------------------------------------
+
+    def handle(self, req: Request) -> Fragment:
+        """Serve one page request (the HTTP GET boundary)."""
+        self.counters.num_requests += 1
+        if req.omega is not None and req.omega.shape[0] > self.max_mpr:
+            raise MaxMprExceeded(
+                f"{req.omega.shape[0]} mappings > maxMpR={self.max_mpr}"
+            )
+
+        if self.cache is not None:
+            cached = self.cache.get(req.key())
+            if cached is not None:
+                frag = cached  # served by the proxy, not the origin
+                self._charge_transfer(frag)
+                return frag
+
+        frag = self._compute(req)
+        if self.cache is not None:
+            self.cache.put(req.key(), frag)
+        self._charge_transfer(frag)
+        return frag
+
+    def _charge_transfer(self, frag: Fragment) -> None:
+        self.counters.data_triples += int(frag.data.shape[0])
+        self.counters.meta_triples += frag.meta_triples
+        self.counters.data_received += frag.triples_received
+
+    # -- origin-server computation (section 4.1) ----------------------------
+
+    def _compute(self, req: Request) -> Fragment:
+        memo_key = req.key()[:2]  # (pattern, omega) -- page-independent
+        memo = self._selector_memo.get(memo_key)
+        if memo is not None:
+            self._selector_memo.move_to_end(memo_key)
+            data, cnt = memo
+            # work accounting still charges the originating computation
+            # only once -- matching the paper's streaming server.
+        elif req.is_brtpf:
+            patterns = instantiate_patterns(req.pattern, req.omega)
+            self.counters.server_lookups += len(patterns)
+            data, cnt = brtpf_select_with_cnt(self.store, req.pattern,
+                                              req.omega)
+        else:
+            self.counters.server_lookups += 1
+            data = tpf_select(self.store, req.pattern)
+            cnt = self.store.cardinality(req.pattern)
+        if memo is None:
+            self.counters.server_triples_scanned += int(data.shape[0])
+            self._selector_memo[memo_key] = (data, cnt)
+            if len(self._selector_memo) > self._selector_memo_cap:
+                self._selector_memo.popitem(last=False)
+
+        lo = req.page * self.page_size
+        page = data[lo : lo + self.page_size]
+        return Fragment(
+            data=page,
+            cnt=cnt,
+            page=req.page,
+            page_size=self.page_size,
+            has_next=lo + self.page_size < data.shape[0],
+            meta_triples=self.meta_triples_per_page,
+        )
+
+    # -- convenience ---------------------------------------------------------
+
+    def reset_counters(self) -> None:
+        self.counters.reset()
+        if self.cache is not None:
+            self.cache.hits = 0
+            self.cache.misses = 0

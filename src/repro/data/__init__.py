@@ -1,0 +1,1 @@
+"""Data plane: WatDiv-like workloads + brTPF-backed training pipeline."""

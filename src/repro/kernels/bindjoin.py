@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: the server-side bind-join filter.
+
+This is the compute hot-spot of a brTPF server: for every candidate
+triple in the fragment's prefix range, decide whether it matches at least
+one of the (instantiated, deduped) patterns derived from the attached
+solution mappings -- an OR-reduction over an outer-product compare grid.
+
+TPU adaptation (vs. the paper's per-pattern HDT lookups): the Java
+servlet loops over the instantiated patterns and queries the backend per
+pattern. On TPU we invert the loop: stream candidate triples through VMEM
+once and compare each tile against *all* patterns resident in VMEM --
+one HBM pass over the candidates instead of M passes, and the (BT x BM)
+compare grid maps onto the VPU's (8 x 128) vector lanes.
+
+Tiling:
+  grid = (ceil(T / BT), ceil(M / BM));  m is the inner (reduction) axis.
+  candidate components: three (BT, 1)-blocks replicated across the m axis
+  pattern components:   three (1, BM)-blocks replicated across the t axis
+  outputs keep/idx:     (BT, 1)-blocks accumulated across m steps
+    (output revisiting across the inner grid axis is the standard Pallas
+     reduction idiom: initialize at m == 0, combine otherwise).
+
+VMEM per step at (BT, BM) = (1024, 128): compare grid 1024*128*4 B
+= 512 KiB for the int32 index grid plus 3 * 4 KiB pattern/candidate
+vectors -- comfortably inside the ~16 MiB VMEM budget, and the minor
+dimension is a full 128-lane multiple.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BT = 1024
+DEFAULT_BM = 128
+
+
+def _bindjoin_kernel(cs_ref, cp_ref, co_ref, ps_ref, pp_ref, po_ref,
+                     pv_ref, keep_ref, idx_ref, *, bm: int, m_total: int):
+    m_step = pl.program_id(1)
+
+    cs = cs_ref[...]          # (BT, 1) int32
+    cp = cp_ref[...]
+    co = co_ref[...]
+    ps = ps_ref[...]          # (1, BM) int32
+    pp = pp_ref[...]
+    po = po_ref[...]
+    pv = pv_ref[...]          # (1, BM) int32 validity
+
+    comp = (
+        ((ps < 0) | (cs == ps))
+        & ((pp < 0) | (cp == pp))
+        & ((po < 0) | (co == po))
+        & (pv != 0)
+    )                          # (BT, BM) bool
+
+    any_m = jnp.any(comp, axis=1, keepdims=True)              # (BT, 1)
+    # Global pattern index of each column in this m-tile.
+    col = jax.lax.broadcasted_iota(jnp.int32, comp.shape, 1)
+    col = col + m_step * bm
+    big = jnp.int32(m_total)
+    first = jnp.min(jnp.where(comp, col, big), axis=1,
+                    keepdims=True).astype(jnp.int32)          # (BT, 1)
+
+    @pl.when(m_step == 0)
+    def _init():
+        keep_ref[...] = any_m.astype(jnp.int32)
+        idx_ref[...] = first
+
+    @pl.when(m_step != 0)
+    def _accum():
+        keep_ref[...] = jnp.maximum(keep_ref[...], any_m.astype(jnp.int32))
+        idx_ref[...] = jnp.minimum(idx_ref[...], first)
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "bm", "interpret"))
+def bindjoin_pallas(cand_s, cand_p, cand_o, pat_s, pat_p, pat_o, pat_valid,
+                    *, bt: int = DEFAULT_BT, bm: int = DEFAULT_BM,
+                    interpret: bool = False):
+    """Tiled bind-join filter. Inputs must be padded: T % bt == 0 and
+    M % bm == 0 (``ops.bindjoin`` handles padding). Returns
+    (keep int32[T], idx int32[T]) with idx == M_padded when no match."""
+    t = cand_s.shape[0]
+    m = pat_s.shape[0]
+    assert t % bt == 0 and m % bm == 0, (t, m, bt, bm)
+
+    cand2 = lambda x: x.reshape(t, 1)
+    pat2 = lambda x: x.reshape(1, m)
+
+    grid = (t // bt, m // bm)
+    kernel = functools.partial(_bindjoin_kernel, bm=bm, m_total=m)
+    keep, idx = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),   # cand s
+            pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),   # cand p
+            pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),   # cand o
+            pl.BlockSpec((1, bm), lambda i, j: (0, j)),   # pat s
+            pl.BlockSpec((1, bm), lambda i, j: (0, j)),   # pat p
+            pl.BlockSpec((1, bm), lambda i, j: (0, j)),   # pat o
+            pl.BlockSpec((1, bm), lambda i, j: (0, j)),   # pat valid
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, 1), jnp.int32),
+            jax.ShapeDtypeStruct((t, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(cand2(cand_s), cand2(cand_p), cand2(cand_o),
+      pat2(pat_s), pat2(pat_p), pat2(pat_o), pat2(pat_valid))
+    return keep.reshape(t), idx.reshape(t)

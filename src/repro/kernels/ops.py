@@ -1,0 +1,110 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles padding to tile multiples, backend selection (``interpret=True``
+whenever the default backend is not TPU -- this container is CPU-only and
+validates kernels in interpret mode, the TPU path is the target), and the
+jnp-side epilogues (mask -> compacted indices).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .bindjoin import DEFAULT_BM, DEFAULT_BT, bindjoin_pallas
+from .tpf_match import DEFAULT_BR, LANES, tpf_match_pallas
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jnp.ndarray, mult: int, fill) -> jnp.ndarray:
+    n = x.shape[0]
+    rem = (-n) % mult
+    if rem == 0 and n > 0:
+        return x
+    pad = max(rem, mult if n == 0 else rem)
+    return jnp.concatenate(
+        [x, jnp.full((pad,), fill, dtype=x.dtype)], axis=0)
+
+
+def bindjoin(cand: jnp.ndarray, patterns: jnp.ndarray,
+             pat_valid: jnp.ndarray, *, bt: int = DEFAULT_BT,
+             bm: int = DEFAULT_BM,
+             use_pallas: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Bind-join filter over candidate triples.
+
+    Args:
+      cand: int32 [T, 3] candidate data triples.
+      patterns: int32 [M, 3] instantiated patterns (component < 0 = wild).
+      pat_valid: int32 [M] (0 marks padding rows).
+
+    Returns:
+      keep: bool [T]  -- triple joins with >= 1 attached mapping.
+      idx:  int32 [T] -- first matching pattern index (= padded M if none).
+    """
+    t = cand.shape[0]
+    cs = _pad_to(cand[:, 0], bt, 0)
+    cp = _pad_to(cand[:, 1], bt, 0)
+    co = _pad_to(cand[:, 2], bt, 0)
+    ps = _pad_to(patterns[:, 0], bm, 0)
+    pp = _pad_to(patterns[:, 1], bm, 0)
+    po = _pad_to(patterns[:, 2], bm, 0)
+    pv = _pad_to(pat_valid.astype(jnp.int32), bm, 0)
+    if use_pallas:
+        keep, idx = bindjoin_pallas(cs, cp, co, ps, pp, po, pv,
+                                    bt=bt, bm=bm,
+                                    interpret=_use_interpret())
+    else:
+        keep, idx = ref.bindjoin_ref(cs, cp, co, ps, pp, po, pv)
+        keep = keep.astype(jnp.int32)
+    return keep[:t].astype(bool), idx[:t]
+
+
+def tpf_match(cand: jnp.ndarray, pattern_vec: jnp.ndarray, *,
+              br: int = DEFAULT_BR,
+              use_pallas: bool = True) -> jnp.ndarray:
+    """Single-pattern match mask over candidate triples.
+
+    Args:
+      cand: int32 [T, 3]; pattern_vec: int32 [8]
+        = [s, p, o, eq_sp, eq_so, eq_po, 0, 0], components < 0 wild.
+    Returns: bool [T].
+    """
+    t = cand.shape[0]
+    tile = br * LANES
+    cs = _pad_to(cand[:, 0], tile, -1)
+    cp = _pad_to(cand[:, 1], tile, -2)   # s != p for padding rows ->
+    co = _pad_to(cand[:, 2], tile, -3)   # eq_* constraints reject them
+    if use_pallas:
+        mask = tpf_match_pallas(cs, cp, co, pattern_vec, br=br,
+                                interpret=_use_interpret())
+    else:
+        mask = ref.tpf_match_ref(cs, cp, co, pattern_vec).astype(jnp.int32)
+    return mask[:t].astype(bool)
+
+
+@functools.partial(jax.jit, static_argnames=("capacity",))
+def compact_mask(mask: jnp.ndarray, capacity: int):
+    """Turn a bool mask into (indices[capacity], count) with -1 padding --
+    the fixed-shape 'page' epilogue used by the federation path."""
+    count = jnp.sum(mask.astype(jnp.int32))
+    order = jnp.argsort(~mask, stable=True)        # True rows first
+    n = order.shape[0]
+    if n < capacity:
+        order = jnp.concatenate(
+            [order, jnp.full((capacity - n,), -1, order.dtype)])
+    idx = order[:capacity]
+    valid = jnp.arange(capacity) < count
+    return jnp.where(valid, idx, -1), count
+
+
+def pattern_vec_from(tp_tuple, eq_sp=0, eq_so=0, eq_po=0) -> np.ndarray:
+    """Host helper: build the int32[8] pattern vector for tpf_match."""
+    s, p, o = tp_tuple
+    return np.array([s, p, o, eq_sp, eq_so, eq_po, 0, 0], dtype=np.int32)

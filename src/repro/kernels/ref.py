@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the semantic ground truth: every kernel test sweeps shapes and
+dtypes and asserts allclose/array_equal against these functions.
+
+Conventions (shared with the kernels):
+* triples are structure-of-arrays int32 ``s[T], p[T], o[T]`` -- lane-
+  friendly on TPU (the AoS ``[T, 3]`` layout would put 3 in the minor
+  dimension, wasting 125/128 lanes);
+* *instantiated* pattern components use ``component < 0`` as wildcard;
+* validity masks flag padding rows (fixed shapes on TPU).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bindjoin_ref(cand_s, cand_p, cand_o, pat_s, pat_p, pat_o, pat_valid):
+    """Reference bindings-restricted filter.
+
+    For candidate triples t (SoA, [T]) and M instantiated patterns
+    ([M], wildcard < 0, ``pat_valid`` zero for padding), compute:
+
+      keep[T]  -- does t match at least one valid instantiated pattern?
+      idx[T]   -- smallest matching pattern index (T-side provenance),
+                  or M if none.
+
+    This is the server-side semantics of Definition 1 *after* step 1-3 of
+    the section-4.1 algorithm (patterns already instantiated + deduped).
+    """
+    t_s, m = cand_s.shape[0], pat_s.shape[0]
+    cs = cand_s[:, None]
+    cp = cand_p[:, None]
+    co = cand_o[:, None]
+    ms = pat_s[None, :]
+    mp = pat_p[None, :]
+    mo = pat_o[None, :]
+    comp = (
+        ((ms < 0) | (cs == ms))
+        & ((mp < 0) | (cp == mp))
+        & ((mo < 0) | (co == mo))
+        & (pat_valid[None, :] != 0)
+    )  # [T, M]
+    keep = jnp.any(comp, axis=1)
+    big = jnp.int32(m)
+    idx_grid = jnp.where(comp, jnp.arange(m, dtype=jnp.int32)[None, :], big)
+    idx = jnp.min(idx_grid, axis=1).astype(jnp.int32)
+    return keep, idx
+
+
+def tpf_match_ref(cand_s, cand_p, cand_o, pattern_vec):
+    """Reference triple-pattern matcher.
+
+    ``pattern_vec`` is int32[8]: [s, p, o, eq_sp, eq_so, eq_po, 0, 0]
+    where components < 0 are wildcards and the eq_* flags request
+    repeated-variable equality between positions.
+    """
+    s, p, o = pattern_vec[0], pattern_vec[1], pattern_vec[2]
+    eq_sp, eq_so, eq_po = pattern_vec[3], pattern_vec[4], pattern_vec[5]
+    mask = (
+        ((s < 0) | (cand_s == s))
+        & ((p < 0) | (cand_p == p))
+        & ((o < 0) | (cand_o == o))
+    )
+    mask &= (eq_sp == 0) | (cand_s == cand_p)
+    mask &= (eq_so == 0) | (cand_s == cand_o)
+    mask &= (eq_po == 0) | (cand_p == cand_o)
+    return mask
+
+
+def compat_join_ref(mu, omega, unbound=-1):
+    """Reference mapping-compatibility matrix.
+
+    ``mu``: int32[T, V] mappings extracted from fragment triples;
+    ``omega``: int32[M, V] attached mappings. Returns bool[T, M] where
+    entry (t, m) is SPARQL-compatibility of mu[t] and omega[m].
+    """
+    a = mu[:, None, :]
+    b = omega[None, :, :]
+    both = (a != unbound) & (b != unbound)
+    return jnp.all(~both | (a == b), axis=-1)

@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: single-triple-pattern matcher (the TPF selector).
+
+Streams candidate triples through VMEM in (BT, 128)-shaped tiles and
+evaluates one triple pattern (constants, wildcards, repeated-variable
+equality constraints) per launch. The pattern itself is a tiny int32[8]
+vector placed in its own (1, 8) VMEM block and replicated to every tile.
+
+Layout: candidates are reshaped to (T // 128, 128) so the minor dim fills
+all 128 lanes and the major dim tiles by rows -- each block is
+(BR, 128) with BR a multiple of 8 (sublane-aligned for int32).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+DEFAULT_BR = 256  # rows of 128 lanes per tile -> 256*128*4B = 128 KiB/input
+
+
+def _tpf_match_kernel(cs_ref, cp_ref, co_ref, pat_ref, mask_ref):
+    cs = cs_ref[...]            # (BR, 128) int32
+    cp = cp_ref[...]
+    co = co_ref[...]
+    pat = pat_ref[...]          # (1, 8) int32
+    s, p, o = pat[0, 0], pat[0, 1], pat[0, 2]
+    eq_sp, eq_so, eq_po = pat[0, 3], pat[0, 4], pat[0, 5]
+
+    mask = (
+        ((s < 0) | (cs == s))
+        & ((p < 0) | (cp == p))
+        & ((o < 0) | (co == o))
+    )
+    mask &= (eq_sp == 0) | (cs == cp)
+    mask &= (eq_so == 0) | (cs == co)
+    mask &= (eq_po == 0) | (cp == co)
+    mask_ref[...] = mask.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("br", "interpret"))
+def tpf_match_pallas(cand_s, cand_p, cand_o, pattern_vec, *,
+                     br: int = DEFAULT_BR, interpret: bool = False):
+    """Match one pattern against T (padded, T % (br*128) == 0) candidate
+    triples. Returns int32[T] mask (1 = match)."""
+    t = cand_s.shape[0]
+    assert t % (br * LANES) == 0, (t, br)
+    rows = t // LANES
+    grid = (rows // br,)
+
+    shape2 = lambda x: x.reshape(rows, LANES)
+    mask = pl.pallas_call(
+        _tpf_match_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, 8), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+        interpret=interpret,
+    )(shape2(cand_s), shape2(cand_p), shape2(cand_o),
+      pattern_vec.reshape(1, 8))
+    return mask.reshape(t)

@@ -1,0 +1,468 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Computes the three roofline terms per (arch x shape x mesh):
+
+    compute    = FLOPs_per_chip / peak_FLOP/s
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = collective_bytes_per_chip / link_bw
+
+Two sources are combined:
+
+* ``compiled.cost_analysis()`` -- BUT XLA's HloCostAnalysis counts each
+  while-loop body ONCE, and every model here scans over layers (and over
+  sequence chunks), so its raw numbers undercount by the trip count.
+  We therefore parse the compiled per-device HLO text with a
+  **trip-count-aware walker**: jax scans lower to while-loops whose
+  condition compares the induction variable against a constant, which
+  the parser recovers, multiplying nested body costs correctly.
+* collective bytes are not in cost_analysis at all: the walker sums the
+  result-shape bytes of every all-gather / all-reduce / reduce-scatter /
+  all-to-all / collective-permute / ragged-all-to-all instruction (times
+  its loop multiplier).
+
+The compiled module is the post-SPMD per-device program, so all numbers
+are per-chip; the brief's formulas (global / chips) reduce to exactly
+these quantities.
+
+Hardware model (TPU v5e-like, per brief): 197 TFLOP/s bf16, 819 GB/s
+HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter",
+                "all-to-all", "collective-permute", "ragged-all-to-all")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "exponential", "tanh", "rsqrt", "sqrt", "log", "negate", "abs",
+    "power", "logistic", "select", "compare", "and", "or", "xor",
+    "cosine", "sine", "floor", "ceil", "sign", "atan2", "remainder",
+}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def scaled(self, k: float) -> "CompCost":
+        return CompCost(self.flops * k, self.bytes * k,
+                        self.coll_bytes * k,
+                        {n: int(c * k) for n, c in
+                         self.coll_counts.items()})
+
+    def add(self, other: "CompCost") -> None:
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.coll_bytes += other.coll_bytes
+        for n, c in other.coll_counts.items():
+            self.coll_counts[n] = self.coll_counts.get(n, 0) + c
+
+
+_DEF_RE = re.compile(
+    r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|"
+    + _SHAPE_RE.pattern + r")(?:\{[^}]*\})?\s+([\w\-]+)\(")
+
+
+class HloAnalyzer:
+    """Trip-count-aware cost walker over (post-SPMD, per-device) HLO.
+
+    The printed HLO omits operand shapes, so each computation first
+    builds a symbol table (instr name -> shape string) and operand sizes
+    are resolved through it. Fusions contribute their internal FLOPs but
+    not internal bytes (fused intermediates never touch HBM); while
+    bodies contribute everything times the recovered trip count.
+    """
+
+    def __init__(self, hlo_text: str) -> None:
+        self.computations = self._split(hlo_text)
+        self._entry = self._find_entry(hlo_text)
+        self._memo: Dict[str, CompCost] = {}
+        self._symtabs: Dict[str, Dict[str, str]] = {}
+
+    @staticmethod
+    def _split(text: str) -> Dict[str, List[str]]:
+        comps: Dict[str, List[str]] = {}
+        name: Optional[str] = None
+        body: List[str] = []
+        for line in text.splitlines():
+            stripped = line.strip()
+            # computation headers: `%name (params...) -> result { `
+            # params may contain nested parens (tuple types)
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$",
+                         stripped)
+            # instruction lines contain " = "; header parameter lists only
+            # contain '=' inside /*index=N*/ comments
+            if m and not stripped.startswith("ROOT") and " = " not in \
+                    stripped.split("->")[0]:
+                name = m.group(1)
+                body = []
+                comps[name] = body
+            elif stripped == "}":
+                name = None
+            elif name is not None and stripped:
+                body.append(stripped)
+        return comps
+
+    @staticmethod
+    def _find_entry(text: str) -> Optional[str]:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.MULTILINE)
+        return m.group(1) if m else None
+
+    def _symtab(self, comp: str) -> Dict[str, str]:
+        tab = self._symtabs.get(comp)
+        if tab is None:
+            tab = {}
+            for ln in self.computations.get(comp, []):
+                m = re.match(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+                             r"(\([^)]*\)|[\w.]+\[[0-9,]*\])", ln)
+                if m:
+                    tab[m.group(1)] = m.group(2)
+            self._symtabs[comp] = tab
+        return tab
+
+    # -- trip count recovery --------------------------------------------------
+
+    def _trip_count(self, cond_name: str) -> float:
+        """jax scans: condition is `compare(iv, constant(N)), LT`."""
+        lines = self.computations.get(cond_name, [])
+        consts: Dict[str, int] = {}
+        for ln in lines:
+            m = re.match(r"%?([\w.\-]+)\s*=\s*\w+\[\]\s*constant\((\d+)\)",
+                         ln)
+            if m:
+                consts[m.group(1)] = int(m.group(2))
+        for ln in lines:
+            if "compare(" in ln and ("direction=LT" in ln
+                                     or "direction=GT" in ln):
+                for cname, val in consts.items():
+                    if re.search(r"%?" + re.escape(cname) + r"\b",
+                                 ln.split("compare(", 1)[1]):
+                        return float(val)
+        if consts:
+            return float(max(consts.values()))
+        return 1.0
+
+    # -- per-instruction costs -------------------------------------------------
+
+    @staticmethod
+    def _bytes_of(shape_str: str) -> int:
+        return sum(_shape_bytes(d, s)
+                   for d, s in _SHAPE_RE.findall(shape_str))
+
+    @staticmethod
+    def _elems_of(shape_str: str) -> int:
+        return sum(_shape_elems(s)
+                   for _, s in _SHAPE_RE.findall(shape_str))
+
+    def _operand_shapes(self, ln: str, op: str,
+                        tab: Dict[str, str]) -> List[str]:
+        tail = ln.split(f" {op}(", 1)
+        if len(tail) < 2:
+            return []
+        args = tail[1].split(")")[0]
+        out = []
+        for tok in re.findall(r"%([\w.\-]+)", args):
+            if tok in tab:
+                out.append(tab[tok])
+        return out
+
+    def _instr_cost(self, ln: str, comp: str
+                    ) -> Tuple[CompCost, List[Tuple[str, float]]]:
+        cost = CompCost()
+        m = _DEF_RE.match(ln)
+        if not m:
+            return cost, []
+        instr_name = m.group(1)
+        result_shape = m.group(2)
+        op = m.group(m.lastindex)
+        tab = self._symtab(comp)
+
+        result_bytes = self._bytes_of(result_shape)
+        result_elems = self._elems_of(result_shape)
+        operand_shapes = self._operand_shapes(ln, op, tab)
+        operand_bytes = sum(self._bytes_of(s) for s in operand_shapes)
+
+        if op in ("parameter", "constant", "get-tuple-element", "tuple",
+                  "bitcast"):
+            pass
+        elif op in ("dynamic-slice", "slice", "gather"):
+            # reads only the sliced/gathered elements, not the operand
+            cost.bytes += 2.0 * result_bytes
+        elif op == "dynamic-update-slice":
+            # in-place update: traffic ~ the update operand (read+write);
+            # the full-buffer result shape is aliased, not copied
+            upd = (self._bytes_of(operand_shapes[1])
+                   if len(operand_shapes) >= 2 else result_bytes)
+            cost.bytes += 2.0 * upd
+        elif op == "scatter":
+            upd = (self._bytes_of(operand_shapes[-1])
+                   if operand_shapes else result_bytes)
+            cost.bytes += 2.0 * upd
+        elif op == "fusion":
+            # fusion HBM traffic != sum of operand shapes: slice-rooted
+            # fusions read only slices, DUS-rooted ones alias the big
+            # buffer in place. XLA's instruction names record the roots.
+            ob = [self._bytes_of(s) for s in operand_shapes]
+            if "dynamic-update-slice" in instr_name:
+                big = max(ob) if ob else 0
+                cost.bytes += 2.0 * max(sum(ob) - big, result_bytes
+                                        if result_bytes < big else 0)
+            elif "dynamic-slice" in instr_name or "gather" in instr_name:
+                cost.bytes += 2.0 * result_bytes
+            else:
+                cost.bytes += result_bytes + sum(
+                    min(b, result_bytes) for b in ob)
+        else:
+            cost.bytes += result_bytes + operand_bytes
+
+        if op == "dot":
+            mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ln)
+            if mc and operand_shapes:
+                dims_m = _SHAPE_RE.findall(operand_shapes[0])
+                if dims_m:
+                    lhs_dims = (dims_m[0][1].split(",")
+                                if dims_m[0][1] else [])
+                    k = 1
+                    for c in [int(x) for x in mc.group(1).split(",")
+                              if x]:
+                        if c < len(lhs_dims):
+                            k *= int(lhs_dims[c])
+                    cost.flops += 2.0 * result_elems * k
+        elif op == "convolution":
+            if len(operand_shapes) >= 2:
+                kern = self._elems_of(operand_shapes[1])
+                cost.flops += 2.0 * result_elems * kern
+        elif op in _ELEMENTWISE:
+            cost.flops += result_elems
+        elif op in ("reduce", "reduce-window"):
+            if operand_shapes:
+                cost.flops += self._elems_of(operand_shapes[0])
+
+        if op in _COLLECTIVES:
+            cost.coll_bytes += result_bytes
+            cost.coll_counts[op] = cost.coll_counts.get(op, 0) + 1
+
+        calls: List[Tuple[str, float]] = []
+        if op == "while":
+            mb = re.search(r"body=%?([\w.\-]+)", ln)
+            # XLA records the inferred trip count in backend_config
+            mt = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', ln)
+            mc2 = re.search(r"condition=%?([\w.\-]+)", ln)
+            if mb:
+                if mt:
+                    trips = float(mt.group(1))
+                elif mc2:
+                    trips = self._trip_count(mc2.group(1))
+                else:
+                    trips = 1.0
+                calls.append((mb.group(1), trips))
+        elif op in ("fusion", "call"):
+            mcalls = re.search(r"calls=%?([\w.\-]+)", ln)
+            if mcalls:
+                calls.append((mcalls.group(1), 1.0))
+        elif op == "conditional":
+            mcond = re.search(r"branch_computations=\{([^}]*)\}", ln)
+            if mcond:
+                for b in mcond.group(1).split(","):
+                    calls.append((b.strip().lstrip("%"), 1.0))
+        return cost, calls
+
+    def computation_cost(self, name: str,
+                         inside_fusion: bool = False) -> CompCost:
+        key = name + ("#f" if inside_fusion else "")
+        if key in self._memo:
+            return self._memo[key]
+        total = CompCost()
+        self._memo[key] = total  # break cycles
+        for ln in self.computations.get(name, []):
+            cost, calls = self._instr_cost(ln, name)
+            if inside_fusion:
+                cost.bytes = 0.0  # fused intermediates stay on-chip
+            total.add(cost)
+            for callee, mult in calls:
+                if callee not in self.computations:
+                    continue
+                callee_fused = inside_fusion or "fused" in callee
+                sub = self.computation_cost(callee, callee_fused)
+                total.add(sub.scaled(mult))
+        return total
+
+    def entry_cost(self) -> CompCost:
+        entry = self._entry
+        if entry is None or entry not in self.computations:
+            for name in self.computations:
+                if name.split(".")[0] == "main":
+                    entry = name
+                    break
+            else:
+                entry = next(iter(self.computations), None)
+        if entry is None:
+            return CompCost()
+        return self.computation_cost(entry)
+
+
+# ---------------------------------------------------------------------------
+# Roofline report
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_counts: Dict[str, int]
+    model_flops: float           # 6*N*D (train) / 2*N*D (decode), global
+    memory_per_device_gb: float  # from compiled.memory_analysis()
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_chip / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops_per_chip * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute time / bound time: how close the step is to the
+        compute roofline for its *model* flops."""
+        ideal = self.model_flops / self.chips / PEAK_FLOPS
+        return ideal / self.bound_s if self.bound_s else 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "coll_counts": self.coll_counts,
+            "model_flops": self.model_flops,
+            "memory_per_device_gb": self.memory_per_device_gb,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """Analytic useful FLOPs per step: 6*N*D for training, 2*N*D per
+    generated token for decode (N = active params)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def explain_hlo(hlo_text: str, top: int = 12) -> str:
+    """Perf-debug view: top computations by (multiplier-weighted) bytes
+    and flops, with their while-loop trip multipliers."""
+    a = HloAnalyzer(hlo_text)
+    entry = a._entry
+    rows = []
+
+    def walk(name: str, mult: float, depth: int, seen):
+        if depth > 6 or name in seen:
+            return
+        for ln in a.computations.get(name, []):
+            cost, calls = a._instr_cost(ln, name)
+            for callee, m in calls:
+                if callee in a.computations:
+                    sub = a.computation_cost(
+                        callee, "fused" in callee)
+                    rows.append((callee, mult * m, sub.flops * mult * m,
+                                 sub.bytes * mult * m))
+                    walk(callee, mult * m, depth + 1, seen | {name})
+
+    walk(entry, 1.0, 0, set())
+    rows.sort(key=lambda r: -r[3])
+    out = [f"{'computation':58s} {'mult':>8s} {'Tflop':>8s} {'TB':>9s}"]
+    for name, mult, fl, by in rows[:top]:
+        out.append(f"{name[:58]:58s} {mult:8.0f} {fl/1e12:8.2f} "
+                   f"{by/1e12:9.3f}")
+    return "\n".join(out)
+
+
+def analyze_compiled(arch: str, shape_name: str, mesh_name: str,
+                     chips: int, hlo_text: str, model_flops: float,
+                     memory_analysis=None) -> Roofline:
+    cost = HloAnalyzer(hlo_text).entry_cost()
+    mem_gb = 0.0
+    if memory_analysis is not None:
+        try:
+            mem_gb = (memory_analysis.temp_size_in_bytes
+                      + memory_analysis.argument_size_in_bytes
+                      + memory_analysis.output_size_in_bytes) / 1e9
+        except AttributeError:
+            pass
+    return Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        flops_per_chip=cost.flops, bytes_per_chip=cost.bytes,
+        coll_bytes_per_chip=cost.coll_bytes,
+        coll_counts=cost.coll_counts,
+        model_flops=model_flops, memory_per_device_gb=mem_gb)

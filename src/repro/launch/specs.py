@@ -1,0 +1,162 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) cell.
+
+``input_specs``-style builders produce weak-type-correct, sharded
+stand-ins for every model input -- no device allocation -- so the
+dry-run can ``jit(step).lower(**specs).compile()`` the production
+meshes. Param and optimizer-state specs come from ``jax.eval_shape``
+over the init functions plus the logical-axes pytrees (axes are static
+python built during tracing, captured by closure).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeSpec
+from ..models.model import ModelDef, build_model
+from ..sharding.rules import param_shardings, spec_for
+from ..train.optimizer import AdamW, AdamWState
+
+# [audio]/[vlm] frontend stub: precomputed frame/patch embeddings length.
+ENC_FRAMES = 1024
+
+
+def _sds(shape, dtype, mesh, rules, axes) -> jax.ShapeDtypeStruct:
+    """Sharded stand-in with the same divisibility guard as constrain
+    (e.g. global_batch=1 decode cannot shard batch over 'data')."""
+    spec = spec_for(axes, rules)
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    fixed = []
+    for dim, part in zip(shape, parts):
+        if part is not None:
+            names = (part,) if isinstance(part, str) else tuple(part)
+            size = 1
+            for n in names:
+                size *= mesh.shape[n]
+            if dim % size != 0:
+                part = None
+        fixed.append(part)
+    while fixed and fixed[-1] is None:
+        fixed.pop()
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=NamedSharding(mesh, P(*fixed)))
+
+
+def _shapes_and_aux(fn, *args):
+    """eval_shape a function returning (arrays_pytree, static_aux)."""
+    box: Dict[str, Any] = {}
+
+    def wrapped(*a):
+        out, aux = fn(*a)
+        box["aux"] = aux
+        return out
+
+    shapes = jax.eval_shape(wrapped, *args)
+    return shapes, box["aux"]
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                rules: Dict) -> Dict[str, jax.ShapeDtypeStruct]:
+    b, s = shape.global_batch, shape.seq_len
+    toks = _sds((b, s), jnp.int32, mesh, rules, ("batch", "seq"))
+    out = {"tokens": toks, "targets": toks}
+    if cfg.encoder_layers:
+        out["enc_input"] = _sds((b, ENC_FRAMES, cfg.d_model), jnp.float32,
+                                mesh, rules, ("batch", None, "act_embed"))
+    return out
+
+
+def param_specs(model: ModelDef, mesh: Mesh, rules: Dict):
+    """(sharded param ShapeDtypeStructs, axes pytree)."""
+    shapes, axes = _shapes_and_aux(model.init, jax.random.PRNGKey(0))
+    shardings = param_shardings(axes, mesh, rules, shapes)
+    specs = jax.tree.map(
+        lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                             sharding=sh),
+        shapes, shardings)
+    return specs, axes
+
+
+def zero_extend_axes(axes_tree):
+    """Replace each leaf\'s first replicated ('embed'/None) dim with the
+    'zero' logical axis (ZeRO optimizer-state sharding over data)."""
+    def leaf(axes):
+        if not isinstance(axes, tuple):
+            return axes
+        ax = list(axes)
+        for i, a in enumerate(ax):
+            if a is None or a == "embed":
+                ax[i] = "zero"
+                return tuple(ax)
+        return axes
+
+    return jax.tree.map(
+        leaf, axes_tree,
+        is_leaf=lambda a: a is None or isinstance(a, tuple))
+
+
+def opt_state_specs(param_spec_tree, mesh: Mesh, axes_tree=None,
+                    rules=None) -> AdamWState:
+    """AdamW state mirrors params (fp32 moments). With ``axes_tree`` +
+    ``rules`` the moments are additionally ZeRO-sharded over data; the
+    step counter is replicated."""
+    if axes_tree is not None and rules is not None:
+        shardings = param_shardings(zero_extend_axes(axes_tree), mesh,
+                                    rules, param_spec_tree)
+    else:
+        shardings = jax.tree.map(lambda sds: sds.sharding,
+                                 param_spec_tree)
+
+    def moment(sds, sh):
+        return jax.ShapeDtypeStruct(sds.shape, jnp.float32, sharding=sh)
+
+    return AdamWState(
+        step=jax.ShapeDtypeStruct((), jnp.int32,
+                                  sharding=NamedSharding(mesh, P())),
+        mu=jax.tree.map(moment, param_spec_tree, shardings),
+        nu=jax.tree.map(moment, param_spec_tree, shardings))
+
+
+def cache_specs(model: ModelDef, shape: ShapeSpec, mesh: Mesh,
+                rules: Dict):
+    """Decode-cache ShapeDtypeStructs (KV cache of seq_len per brief)."""
+    shapes, axes = _shapes_and_aux(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    shardings = param_shardings(axes, mesh, rules, shapes)
+    return jax.tree.map(
+        lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                             sharding=sh),
+        shapes, shardings)
+
+
+def serve_input_specs(model: ModelDef, shape: ShapeSpec, mesh: Mesh,
+                      rules: Dict) -> Tuple:
+    """(cache, token, pos[, enc_out]) specs for serve_step."""
+    cfg = model.cfg
+    b = shape.global_batch
+    cache = cache_specs(model, shape, mesh, rules)
+    token = _sds((b, 1), jnp.int32, mesh, rules, ("batch", None))
+    pos = jax.ShapeDtypeStruct((), jnp.int32,
+                               sharding=NamedSharding(mesh, P()))
+    if cfg.encoder_layers:
+        # enc_out is the encoder's output: model compute dtype
+        enc_out = _sds((b, ENC_FRAMES, cfg.d_model), model.dtype, mesh,
+                       rules, ("batch", None, "act_embed"))
+        return cache, token, pos, enc_out
+    return cache, token, pos
+
+
+def prefill_input_specs(model: ModelDef, shape: ShapeSpec, mesh: Mesh,
+                        rules: Dict) -> Tuple:
+    cfg = model.cfg
+    b, s = shape.global_batch, shape.seq_len
+    tokens = _sds((b, s), jnp.int32, mesh, rules, ("batch", "seq"))
+    if cfg.encoder_layers:
+        enc_input = _sds((b, ENC_FRAMES, cfg.d_model), jnp.float32, mesh,
+                         rules, ("batch", None, "act_embed"))
+        return tokens, enc_input
+    return (tokens,)

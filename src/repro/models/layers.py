@@ -1,0 +1,313 @@
+"""Core model layers: functional JAX modules with logical-axis metadata.
+
+No flax: parameters are nested dicts of arrays, and every init function
+returns ``(params, axes)`` where ``axes`` mirrors ``params`` with tuples
+of *logical* axis names (e.g. ``("embed", "ff")``). The sharding layer
+(``repro.sharding.rules``) maps logical names to mesh axes, so one model
+definition serves every mesh.
+
+Attention is written TPU-idiomatically: fused QKV-per-role projections
+feeding the MXU with 128-aligned head dims, and a q-chunked causal
+attention (``lax.scan`` over query blocks) that bounds the score buffer
+to (chunk x S) -- the XLA-level equivalent of flash attention's memory
+behaviour, which is what makes the 32K-prefill shapes compile within
+HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+
+Params = Dict[str, Any]
+Axes = Dict[str, Any]
+
+# Default attention q-chunk (queries per scan step for long sequences).
+ATTN_CHUNK = 1024
+# Sequences at or below this use unchunked attention.
+ATTN_CHUNK_THRESHOLD = 2048
+
+
+# ---------------------------------------------------------------------------
+# Param helpers
+# ---------------------------------------------------------------------------
+
+def _init_normal(key, shape, dtype, scale: float):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def dense_param(key, d_in: int, d_out: int, axes: Tuple, dtype,
+                scale: Optional[float] = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return _init_normal(key, (d_in, d_out), dtype, scale), axes
+
+
+def make_rms_norm(dtype):
+    def init(key, d):
+        return {"scale": jnp.ones((d,), dtype)}, {"scale": ("embed",)}
+
+    return init
+
+
+def rms_norm(params: Params, x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+def init_embeddings(key, cfg: ArchConfig, dtype) -> Tuple[Params, Axes]:
+    k1, k2 = jax.random.split(key)
+    params: Params = {
+        "tok": _init_normal(k1, (cfg.vocab_size, cfg.d_model), dtype, 0.02),
+    }
+    axes: Axes = {"tok": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        params["out"] = _init_normal(
+            k2, (cfg.d_model, cfg.vocab_size), dtype, cfg.d_model ** -0.5)
+        axes["out"] = ("embed", "vocab")
+    return params, axes
+
+
+def embed_tokens(params: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(params["tok"], tokens, axis=0)
+
+
+def unembed(params: Params, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        return jnp.einsum("...d,vd->...v", x, params["tok"])
+    return jnp.einsum("...d,dv->...v", x, params["out"])
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               head_dim: int) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: (..., S)."""
+    freqs = rope_freqs(head_dim)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (...,S,hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA), train/prefill and decode-with-cache paths
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ArchConfig, dtype) -> Tuple[Params, Axes]:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    kq, kk, kv, ko, kb = jax.random.split(key, 5)
+    params: Params = {}
+    axes: Axes = {}
+    params["wq"], axes["wq"] = dense_param(
+        kq, d, cfg.num_heads * hd, ("embed", "heads"), dtype)
+    params["wk"], axes["wk"] = dense_param(
+        kk, d, cfg.num_kv_heads * hd, ("embed", "kv_heads"), dtype)
+    params["wv"], axes["wv"] = dense_param(
+        kv, d, cfg.num_kv_heads * hd, ("embed", "kv_heads"), dtype)
+    params["wo"], axes["wo"] = dense_param(
+        ko, cfg.num_heads * hd, d, ("heads", "embed"), dtype)
+    if cfg.qkv_bias:
+        params["bq"] = jnp.zeros((cfg.num_heads * hd,), dtype)
+        params["bk"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+        params["bv"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+        axes["bq"] = ("heads",)
+        axes["bk"] = ("kv_heads",)
+        axes["bv"] = ("kv_heads",)
+    return params, axes
+
+
+def _project_qkv(params: Params, x: jnp.ndarray, cfg: ArchConfig,
+                 positions: Optional[jnp.ndarray]):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, params["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    from ..sharding.rules import constrain
+    q = constrain(q.reshape(b, s, cfg.num_heads, hd),
+                  "batch", "seq", "act_heads", None)
+    k = constrain(k.reshape(b, s, cfg.num_kv_heads, hd),
+                  "batch", "seq", "act_kv_heads", None)
+    v = constrain(v.reshape(b, s, cfg.num_kv_heads, hd),
+                  "batch", "seq", "act_kv_heads", None)
+    if cfg.rope and positions is not None:
+        q = apply_rope(q, positions, hd)
+        k = apply_rope(k, positions, hd)
+    return q, k, v
+
+
+def _gqa_scores(q: jnp.ndarray, k: jnp.ndarray, cfg: ArchConfig):
+    """q: (B,Sq,Hq,hd), k: (B,Sk,Hkv,hd) -> scores (B,Hkv,G,Sq,Sk)."""
+    b, sq, hq, hd = q.shape
+    g = hq // max(cfg.num_kv_heads, 1)
+    qg = q.reshape(b, sq, cfg.num_kv_heads, g, hd)
+    # python float scale: keeps weak typing (no bf16 -> f32 promotion)
+    return jnp.einsum("bqkgh,bskh->bkgqs", qg, k) * float(hd ** -0.5)
+
+
+def _gqa_out(probs: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """probs: (B,Hkv,G,Sq,Sk), v: (B,Sk,Hkv,hd) -> (B,Sq,Hq*hd)."""
+    b, hkv, g, sq, _ = probs.shape
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(b, sq, hkv * g * v.shape[-1])
+
+
+def _causal_softmax(scores: jnp.ndarray, q_pos: jnp.ndarray,
+                    k_pos: jnp.ndarray) -> jnp.ndarray:
+    mask = q_pos[:, None] >= k_pos[None, :]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    return probs.astype(scores.dtype)
+
+
+def attention(params: Params, x: jnp.ndarray, cfg: ArchConfig,
+              positions: jnp.ndarray, chunk: int = ATTN_CHUNK,
+              causal: bool = True) -> jnp.ndarray:
+    out, _, _ = attention_with_kv(params, x, cfg, positions, chunk,
+                                  causal)
+    return out
+
+
+def attention_with_kv(params: Params, x: jnp.ndarray, cfg: ArchConfig,
+                      positions: jnp.ndarray, chunk: int = ATTN_CHUNK,
+                      causal: bool = True):
+    """Self-attention for train/prefill (causal by default; encoders pass
+    ``causal=False``). Also returns the (rotated) K/V so the serving
+    prefill step can populate the decode cache in the same pass.
+
+    For S > ATTN_CHUNK_THRESHOLD, scans over query chunks so the live
+    score buffer is (chunk x S) instead of (S x S)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(params, x, cfg, positions)
+
+    def softmax(scores, q_pos, k_pos):
+        if causal:
+            return _causal_softmax(scores, q_pos, k_pos)
+        return jax.nn.softmax(scores.astype(jnp.float32),
+                              axis=-1).astype(scores.dtype)
+
+    if s <= ATTN_CHUNK_THRESHOLD or s % chunk != 0:
+        scores = _gqa_scores(q, k, cfg)
+        pos = positions[0]
+        probs = softmax(scores, pos, pos)
+        out = _gqa_out(probs, v)
+    else:
+        nchunk = s // chunk
+        qc = q.reshape(b, nchunk, chunk, cfg.num_heads, -1)
+        qc = jnp.moveaxis(qc, 1, 0)           # (n, B, chunk, Hq, hd)
+        pc = positions.reshape(b, nchunk, chunk)
+        pc = jnp.moveaxis(pc, 1, 0)
+
+        def body(carry, inp):
+            qi, pi = inp
+            scores = _gqa_scores(qi, k, cfg)
+            probs = softmax(scores, pi[0], positions[0])
+            return carry, _gqa_out(probs, v)
+
+        _, outs = jax.lax.scan(body, None, (qc, pc))
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, s, -1)
+
+    return jnp.einsum("bsh,hd->bsd", out, params["wo"]), k, v
+
+
+def cross_attention(params: Params, x: jnp.ndarray, enc_out: jnp.ndarray,
+                    cfg: ArchConfig) -> jnp.ndarray:
+    """Encoder-decoder cross-attention: queries from x (B,Sq,d), keys and
+    values from enc_out (B,Sk,d). No positional rotation, no mask."""
+    b, sq, _ = x.shape
+    sk = enc_out.shape[1]
+    hd = cfg.resolved_head_dim
+    enc_out = enc_out.astype(x.dtype)
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"])
+    k = jnp.einsum("bsd,dh->bsh", enc_out, params["wk"])
+    v = jnp.einsum("bsd,dh->bsh", enc_out, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(b, sq, cfg.num_heads, hd)
+    k = k.reshape(b, sk, cfg.num_kv_heads, hd)
+    v = v.reshape(b, sk, cfg.num_kv_heads, hd)
+    scores = _gqa_scores(q, k, cfg)
+    probs = jax.nn.softmax(scores.astype(jnp.float32),
+                           axis=-1).astype(x.dtype)
+    out = _gqa_out(probs, v)
+    return jnp.einsum("bsh,hd->bsd", out, params["wo"])
+
+
+def attention_decode(params: Params, x: jnp.ndarray, cfg: ArchConfig,
+                     cache_k: jnp.ndarray, cache_v: jnp.ndarray,
+                     cache_pos: jnp.ndarray):
+    """One-token decode: x (B,1,d); cache_[kv]: (B,S,Hkv,hd).
+
+    Returns (out (B,1,d), new_cache_k, new_cache_v)."""
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    positions = jnp.broadcast_to(cache_pos[None], (b, 1))
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), cache_pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), cache_pos, axis=1)
+    s = cache_k.shape[1]
+    scores = _gqa_scores(q, cache_k, cfg)          # (B,Hkv,G,1,S)
+    k_pos = jnp.arange(s)
+    mask = k_pos[None, :] <= cache_pos             # (1,S)
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = _gqa_out(probs.astype(x.dtype), cache_v)
+    return (jnp.einsum("bsh,hd->bsd", out, params["wo"]),
+            cache_k, cache_v)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU FFN
+# ---------------------------------------------------------------------------
+
+def init_ffn(key, cfg: ArchConfig, dtype,
+             d_ff: Optional[int] = None) -> Tuple[Params, Axes]:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    params, axes = {}, {}
+    params["w_gate"], axes["w_gate"] = dense_param(
+        k1, d, ff, ("embed", "ff"), dtype)
+    params["w_up"], axes["w_up"] = dense_param(
+        k2, d, ff, ("embed", "ff"), dtype)
+    params["w_down"], axes["w_down"] = dense_param(
+        k3, ff, d, ("ff", "embed"), dtype)
+    return params, axes
+
+
+def ffn(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    gate = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, params["w_gate"]))
+    up = jnp.einsum("bsd,df->bsf", x, params["w_up"])
+    return jnp.einsum("bsf,fd->bsd", gate * up, params["w_down"])

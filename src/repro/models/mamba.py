@@ -1,0 +1,169 @@
+"""Mamba (selective SSM) block -- the recurrent layers of Jamba.
+
+Selective scan: per-channel state ``h_t = exp(dt_t * A) h_{t-1} +
+dt_t * B_t x_t`` with input-dependent ``B_t, C_t, dt_t`` and readout
+``y_t = C_t . h_t + D * x_t``.
+
+TPU adaptation notes (recorded in DESIGN.md): Mamba-1's decay varies per
+(channel, state) pair, so the chunked-matmul reformulation used for RWKV
+would need a (chunk x chunk x d_state) pairwise grid *per channel* --
+memory-prohibitive. The training path therefore uses ``lax.scan`` over
+time with the state kept in registers/VMEM (constant memory, small HLO);
+the decode path is a single fused state update. A Mamba-2-style
+scalar-decay chunked variant is evaluated in the perf log as a
+beyond-paper optimization.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import _init_normal
+
+Params = Dict[str, Any]
+
+DT_RANK = 64
+SCAN_UNROLL = 16
+
+
+def init_mamba(key, cfg: ArchConfig, dtype) -> Tuple[Params, Dict]:
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    n = cfg.ssm_state_dim
+    ks = jax.random.split(key, 7)
+    params: Params = {
+        "in_proj": _init_normal(ks[0], (d, 2 * din), dtype, d ** -0.5),
+        "conv_w": _init_normal(ks[1], (cfg.ssm_conv_dim, din), dtype, 0.2),
+        "conv_b": jnp.zeros((din,), dtype),
+        "x_proj": _init_normal(ks[2], (din, DT_RANK + 2 * n), dtype,
+                               din ** -0.5),
+        "dt_proj": _init_normal(ks[3], (DT_RANK, din), dtype,
+                                DT_RANK ** -0.5),
+        "dt_bias": jnp.full((din,), -4.6, dtype),   # softplus ~ 0.01
+        "a_log": jnp.log(jnp.tile(
+            jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (din, 1))),
+        "d_skip": jnp.ones((din,), dtype),
+        "out_proj": _init_normal(ks[4], (din, d), dtype, din ** -0.5),
+    }
+    axes = {
+        "in_proj": ("embed", "ssm_inner"),
+        "conv_w": (None, "ssm_inner"), "conv_b": ("ssm_inner",),
+        "x_proj": ("ssm_inner", None),
+        "dt_proj": (None, "ssm_inner"), "dt_bias": ("ssm_inner",),
+        "a_log": ("ssm_inner", None), "d_skip": ("ssm_inner",),
+        "out_proj": ("ssm_inner", "embed"),
+    }
+    return params, axes
+
+
+def _ssm_inputs(params: Params, x: jnp.ndarray, cfg: ArchConfig):
+    """Shared projections. x: (B,S,d) -> (u, gate, dt, b, c).
+
+    u: (B,S,din) conv'd inputs; dt: (B,S,din); b,c: (B,S,N)."""
+    n = cfg.ssm_state_dim
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    u, gate = jnp.split(xz, 2, axis=-1)
+    # causal depthwise conv
+    k = params["conv_w"].shape[0]
+    u_pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    u = sum(u_pad[:, i : i + u.shape[1]] * params["conv_w"][i]
+            for i in range(k)) + params["conv_b"]
+    u = jax.nn.silu(u)
+    proj = jnp.einsum("bse,er->bsr", u, params["x_proj"])
+    dt_in, b, c = jnp.split(proj, [DT_RANK, DT_RANK + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt_in, params["dt_proj"])
+        + params["dt_bias"])
+    return u, gate, dt, b, c
+
+
+def mamba_block(params: Params, x: jnp.ndarray, cfg: ArchConfig,
+                return_state: bool = False):
+    """Full-sequence selective scan. x: (B,S,d).
+
+    With ``return_state`` also returns (conv_window, final_h) so the
+    serving prefill can seed the decode cache."""
+    b_, s, d = x.shape
+    n = cfg.ssm_state_dim
+    k = cfg.ssm_conv_dim
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    u_raw, gate = jnp.split(xz, 2, axis=-1)
+    u_pad = jnp.pad(u_raw, ((0, 0), (k - 1, 0), (0, 0)))
+    u = sum(u_pad[:, i : i + s] * params["conv_w"][i]
+            for i in range(k)) + params["conv_b"]
+    u = jax.nn.silu(u)
+    proj = jnp.einsum("bse,er->bsr", u, params["x_proj"])
+    dt_in, b, c = jnp.split(proj, [DT_RANK, DT_RANK + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt_in, params["dt_proj"])
+        + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])                     # (din, N), negative
+
+    f32 = jnp.float32
+
+    # Decay/drive are computed *inside* the scan step from the (B,din)
+    # and (B,N) slices: materializing them up-front would allocate two
+    # (B,S,din,N) tensors -- terabytes at Jamba scale. The recurrent
+    # working set stays O(B*din*N).
+    def step(h, inp):
+        dt_t, u_t, b_t, c_t = inp                     # (B,din)x2,(B,N)x2
+        dec = jnp.exp(dt_t.astype(f32)[..., None] * a)
+        drv = (dt_t.astype(f32) * u_t.astype(f32))[..., None] \
+            * b_t.astype(f32)[:, None, :]
+        h = dec * h + drv
+        y = jnp.einsum("ben,bn->be", h, c_t.astype(f32))
+        return h, y
+
+    h0 = jnp.zeros((b_, u.shape[-1], n), f32)
+    xs = (jnp.moveaxis(dt, 1, 0), jnp.moveaxis(u, 1, 0),
+          jnp.moveaxis(b, 1, 0), jnp.moveaxis(c, 1, 0))
+    # unroll: consecutive state updates fuse into one elementwise chain,
+    # so h round-trips HBM once per UNROLL steps instead of every step
+    h_final, ys = jax.lax.scan(step, h0, xs, unroll=SCAN_UNROLL)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)        # (B,S,din)
+    y = y + params["d_skip"] * u
+    y = y * jax.nn.silu(gate)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    if not return_state:
+        return out
+    # decode conv state = last K-1 raw (pre-conv) inputs
+    if s >= k - 1:
+        conv_window = u_raw[:, s - (k - 1):]
+    else:
+        conv_window = jnp.pad(u_raw, ((0, 0), (k - 1 - s, 0), (0, 0)))
+    return out, (conv_window, h_final)
+
+
+def mamba_decode(params: Params, x: jnp.ndarray, cfg: ArchConfig,
+                 conv_state: jnp.ndarray, ssm_state: jnp.ndarray):
+    """One-token decode. x: (B,1,d); conv_state: (B,K-1,din);
+    ssm_state: (B,din,N). Returns (y, new_conv_state, new_ssm_state)."""
+    b_, _, d = x.shape
+    n = cfg.ssm_state_dim
+    k = cfg.ssm_conv_dim
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    u_raw, gate = jnp.split(xz[:, 0], 2, axis=-1)     # (B,din)
+    window = jnp.concatenate([conv_state, u_raw[:, None, :]], axis=1)
+    new_conv_state = window[:, 1:]
+    u = jnp.einsum("bke,ke->be", window, params["conv_w"]) \
+        + params["conv_b"]
+    u = jax.nn.silu(u)
+    proj = jnp.einsum("be,er->br", u, params["x_proj"])
+    dt_in, bb, cc = jnp.split(proj, [DT_RANK, DT_RANK + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("br,re->be", dt_in, params["dt_proj"])
+        + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+    f32 = jnp.float32
+    decay = jnp.exp(dt.astype(f32)[..., None] * a)    # (B,din,N)
+    drive = (dt.astype(f32) * u.astype(f32))[..., None] \
+        * bb.astype(f32)[:, None, :]
+    h = decay * ssm_state + drive
+    y = jnp.einsum("ben,bn->be", h, cc.astype(f32)).astype(x.dtype)
+    y = y + params["d_skip"] * u
+    y = y * jax.nn.silu(gate)
+    y = jnp.einsum("be,ed->bd", y, params["out_proj"])
+    return y[:, None, :], new_conv_state, h

@@ -1,0 +1,304 @@
+"""Public model API: build any assigned architecture from its config.
+
+``ModelDef`` bundles init / forward (train, prefill) / decode-step /
+cache-init for decoder-only families (dense, MoE, RWKV, hybrid) and the
+encoder-decoder family (seamless-m4t). All functions are pure and
+jit/pjit-compatible; parameters carry a parallel logical-axes pytree for
+the sharding layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ATTN, ArchConfig
+from ..sharding.rules import constrain
+from . import layers as L
+from . import transformer as T
+
+Params = Dict[str, Any]
+
+MOE_AUX_COEF = 0.01
+
+
+def _axes_with_layers(ax):
+    return jax.tree.map(
+        lambda a: ("layers",) + a if isinstance(a, tuple) else a, ax,
+        is_leaf=lambda a: a is None or isinstance(a, tuple))
+
+
+@dataclasses.dataclass
+class ModelDef:
+    cfg: ArchConfig
+    dtype: Any = jnp.float32        # params + activations
+
+    # -- init -----------------------------------------------------------------
+
+    def init(self, key) -> Tuple[Params, Dict]:
+        cfg = self.cfg
+        k_emb, k_stack, k_enc, k_out = jax.random.split(key, 4)
+        params: Params = {}
+        axes: Dict = {}
+        params["embed"], axes["embed"] = L.init_embeddings(
+            k_emb, cfg, self.dtype)
+        params["stack"], axes["stack"] = T.init_stack(
+            k_stack, cfg, self.dtype)
+        params["norm_f"] = jnp.ones((cfg.d_model,), self.dtype)
+        axes["norm_f"] = ("embed",)
+        if cfg.encoder_layers:
+            params["encoder"], axes["encoder"] = self._init_encoder(k_enc)
+            params["cross"], axes["cross"] = self._init_cross(k_out)
+        return params, axes
+
+    def _init_encoder(self, key):
+        cfg = self.cfg
+        keys = jax.random.split(key, cfg.encoder_layers)
+
+        def init_one(k):
+            p, a = T.init_block(k, cfg, ATTN, False, self.dtype)
+            return p, a
+
+        stacked = jax.vmap(lambda k: init_one(k)[0])(keys)
+        _, ax = init_one(keys[0])
+        return ({"blocks": stacked,
+                 "norm_f": jnp.ones((cfg.d_model,), self.dtype)},
+                {"blocks": _axes_with_layers(ax), "norm_f": ("embed",)})
+
+    def _init_cross(self, key):
+        """Per-decoder-layer cross-attention (stacked like the stack)."""
+        cfg = self.cfg
+        keys = jax.random.split(key, cfg.num_layers)
+
+        def init_one(k):
+            p, a = L.init_attention(k, cfg, self.dtype)
+            p = {"attn": p, "norm": jnp.ones((cfg.d_model,), self.dtype)}
+            a = {"attn": a, "norm": ("embed",)}
+            return p, a
+
+        stacked = jax.vmap(lambda k: init_one(k)[0])(keys)
+        _, ax = init_one(keys[0])
+        return stacked, _axes_with_layers(ax)
+
+    # -- encoder --------------------------------------------------------------
+
+    def encode(self, params: Params, enc_input: jnp.ndarray) -> jnp.ndarray:
+        """enc_input: precomputed frame/patch embeddings (B, F, d) --
+        the modality frontend is a stub per the brief."""
+        cfg = self.cfg
+        b, f, _ = enc_input.shape
+        positions = jnp.broadcast_to(jnp.arange(f)[None], (b, f))
+        x = enc_input.astype(self.dtype)
+
+        def body(x, block_params):
+            h = L.rms_norm({"scale": block_params["norm1"]}, x,
+                           cfg.norm_eps)
+            h = L.attention(block_params["mixer"], h, cfg, positions,
+                            causal=False)
+            x = x + h
+            h = L.rms_norm({"scale": block_params["norm2"]}, x,
+                           cfg.norm_eps)
+            x = x + L.ffn(block_params["ffn"], h)
+            return x, None
+
+        if cfg.remat != "none":
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["encoder"]["blocks"])
+        return L.rms_norm({"scale": params["encoder"]["norm_f"]}, x,
+                          cfg.norm_eps)
+
+    # -- full-sequence forward (train / prefill) -------------------------------
+
+    def hidden(self, params: Params, tokens: jnp.ndarray,
+               enc_input: Optional[jnp.ndarray] = None):
+        """tokens (B,S) -> (final hidden states (B,S,d), moe_aux)."""
+        cfg = self.cfg
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        x = L.embed_tokens(params["embed"], tokens).astype(self.dtype)
+        x = constrain(x, "batch", "seq", "act_embed")
+
+        if cfg.encoder_layers:
+            assert enc_input is not None, "enc-dec model needs enc_input"
+            enc_out = self.encode(params, enc_input)
+            x, aux = self._decoder_with_cross(params, x, enc_out,
+                                              positions)
+        else:
+            x, aux = T.apply_stack(params["stack"], x, cfg, positions)
+
+        x = L.rms_norm({"scale": params["norm_f"]}, x, cfg.norm_eps)
+        return x, aux
+
+    def forward(self, params: Params, tokens: jnp.ndarray,
+                enc_input: Optional[jnp.ndarray] = None):
+        """tokens (B,S) -> (logits (B,S,V), moe_aux)."""
+        x, aux = self.hidden(params, tokens, enc_input)
+        logits = L.unembed(params["embed"], x, self.cfg)
+        logits = constrain(logits, "batch", "seq", "vocab")
+        return logits, aux
+
+    def _decoder_with_cross(self, params, x, enc_out, positions):
+        """Decoder stack with interleaved cross-attention (enc-dec only).
+
+        The self-attn/FFN stack period must be 1 here (it is, for
+        seamless); cross-attention params are stacked per layer."""
+        cfg = self.cfg
+
+        def body(x, inp):
+            block_params, cross_params = inp
+            x, aux = T.apply_block(block_params, x, cfg, ATTN, False,
+                                   positions)
+            h = L.rms_norm({"scale": cross_params["norm"]}, x,
+                           cfg.norm_eps)
+            x = x + L.cross_attention(cross_params["attn"], h, enc_out,
+                                      cfg)
+            return x, aux
+
+        if cfg.remat != "none":
+            body = jax.checkpoint(body)
+        x, auxs = jax.lax.scan(
+            body, x, (params["stack"]["pos0"], params["cross"]))
+        return x, jnp.sum(auxs)
+
+    # -- loss ------------------------------------------------------------------
+
+    # sequence-chunked cross-entropy: the fp32 logits buffer is
+    # (B, CE_CHUNK, V) instead of (B, S, V) -- at vocab 65K-200K that is
+    # the difference between ~1 GB and ~8+ GB of live fp32 per device.
+    CE_CHUNK = 512
+
+    def loss(self, params: Params, batch: Dict[str, jnp.ndarray]):
+        """Next-token cross-entropy (+ MoE aux). batch: tokens, targets
+        (both (B,S)), optional enc_input, optional loss_mask."""
+        cfg = self.cfg
+        x, aux = self.hidden(params, batch["tokens"],
+                             batch.get("enc_input"))
+        b, s, d = x.shape
+        tgt = batch["targets"]
+        mask = batch.get("loss_mask")
+        if mask is None:
+            mask = jnp.ones((b, s), jnp.float32)
+
+        chunk = self.CE_CHUNK if s % self.CE_CHUNK == 0 else s
+        nc = s // chunk
+
+        def ce(xc, tc, mc):
+            logits = L.unembed(params["embed"], xc, cfg)
+            logits = constrain(logits, "batch", "seq", "vocab")
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32),
+                                      axis=-1)
+            nll = -jnp.take_along_axis(logp, tc[..., None],
+                                       axis=-1)[..., 0]
+            return jnp.sum(nll * mc)
+
+        if nc == 1:
+            total = ce(x, tgt, mask)
+        else:
+            xs = (jnp.moveaxis(x.reshape(b, nc, chunk, d), 1, 0),
+                  jnp.moveaxis(tgt.reshape(b, nc, chunk), 1, 0),
+                  jnp.moveaxis(mask.reshape(b, nc, chunk), 1, 0))
+
+            def body(acc, inp):
+                return acc + ce(*inp), None
+
+            total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                                    xs)
+        loss = total / jnp.maximum(jnp.sum(mask), 1.0)
+        return loss + MOE_AUX_COEF * aux, {"nll": loss, "moe_aux": aux}
+
+    # -- serving prefill --------------------------------------------------------
+
+    def prefill(self, params: Params, tokens: jnp.ndarray,
+                enc_input: Optional[jnp.ndarray] = None,
+                max_seq: Optional[int] = None):
+        """Process the prompt and build the decode cache in one pass.
+
+        Returns (last-position logits (B,1,V), cache). Only the last
+        position is unembedded -- a (B,S,V) logits tensor at 32K prefill
+        would dwarf every other buffer."""
+        cfg = self.cfg
+        b, s = tokens.shape
+        max_seq = max_seq or s
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        x = L.embed_tokens(params["embed"], tokens).astype(self.dtype)
+        x = constrain(x, "batch", "seq", "act_embed")
+
+        if cfg.encoder_layers:
+            assert enc_input is not None
+            enc_out = self.encode(params, enc_input)
+
+            def body(x, inp):
+                block_params, cross_params = inp
+                x, cache = T.apply_block_prefill(
+                    block_params, x, cfg, "attn", False, positions,
+                    max_seq)
+                h = L.rms_norm({"scale": cross_params["norm"]}, x,
+                               cfg.norm_eps)
+                x = x + L.cross_attention(cross_params["attn"], h,
+                                          enc_out, cfg)
+                return x, cache
+
+            x, pos0 = jax.lax.scan(
+                body, x, (params["stack"]["pos0"], params["cross"]))
+            cache = {"stack": {"pos0": pos0}}
+        else:
+            x, stack_cache = T.apply_stack_prefill(
+                params["stack"], x, cfg, positions, max_seq)
+            cache = {"stack": stack_cache}
+
+        x_last = x[:, -1:]
+        x_last = L.rms_norm({"scale": params["norm_f"]}, x_last,
+                            cfg.norm_eps)
+        logits = L.unembed(params["embed"], x_last, cfg)
+        return logits, cache
+
+    # -- decode ----------------------------------------------------------------
+
+    def init_cache(self, batch: int, max_seq: int) -> Tuple[Params, Dict]:
+        cache, axes = T.init_stack_cache(self.cfg, batch, max_seq,
+                                         self.dtype)
+        return {"stack": cache}, {"stack": axes}
+
+    def decode_step(self, params: Params, cache: Params,
+                    token: jnp.ndarray, pos: jnp.ndarray,
+                    enc_out: Optional[jnp.ndarray] = None):
+        """token (B,1) int32, pos () int32 -> (logits (B,1,V), cache)."""
+        cfg = self.cfg
+        x = L.embed_tokens(params["embed"], token).astype(self.dtype)
+        x = constrain(x, "batch", None, "act_embed")
+        if cfg.encoder_layers:
+            assert enc_out is not None
+            x, new_stack = self._decode_with_cross(params, x,
+                                                   cache["stack"],
+                                                   pos, enc_out)
+        else:
+            x, new_stack = T.apply_stack_decode(params["stack"], x, cfg,
+                                                cache["stack"], pos)
+        x = L.rms_norm({"scale": params["norm_f"]}, x, cfg.norm_eps)
+        logits = L.unembed(params["embed"], x, cfg)
+        return logits, {"stack": new_stack}
+
+    def _decode_with_cross(self, params, x, cache, pos, enc_out):
+        cfg = self.cfg
+
+        def body(x, inp):
+            block_params, cross_params, block_cache = inp
+            x, nc = T.apply_block_decode(block_params, x, cfg, ATTN,
+                                         False, block_cache, pos)
+            h = L.rms_norm({"scale": cross_params["norm"]}, x,
+                           cfg.norm_eps)
+            x = x + L.cross_attention(cross_params["attn"], h, enc_out,
+                                      cfg)
+            return x, nc
+
+        x, new_cache = jax.lax.scan(
+            body, x,
+            (params["stack"]["pos0"], params["cross"], cache["pos0"]))
+        return x, {"pos0": new_cache}
+
+
+def build_model(cfg: ArchConfig, dtype=jnp.float32) -> ModelDef:
+    return ModelDef(cfg=cfg, dtype=dtype)

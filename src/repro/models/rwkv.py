@@ -1,0 +1,264 @@
+"""RWKV6 ("Finch"): attention-free blocks with data-dependent decay.
+
+Time-mix (WKV6): per-head matrix-valued recurrent state
+``S_t = diag(w_t) S_{t-1} + k_t^T v_t`` with *data-dependent* per-channel
+decay ``w_t = exp(-exp(w0 + lora(x_t)))``, read out as
+``o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)``.
+
+TPU adaptation: the sequential recurrence is reformulated as a *chunked
+parallel scan* (the linear-attention chunk trick): within a chunk all
+pairwise decays ``exp(cum_{t-1} - cum_j)`` are <= 1 (cumulative log-decay
+is non-increasing), so the intra-chunk contribution is a masked matmul
+and the inter-chunk contribution carries the state -- every exponent is
+non-positive, so the computation is overflow-free by construction, and
+the chunk matmuls feed the MXU instead of a length-S serial chain.
+``wkv_reference`` is the step-by-step oracle the tests compare against.
+
+Channel-mix is RWKV's two-matrix FFN with receptance gating.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import _init_normal
+
+Params = Dict[str, Any]
+
+LORA_DIM = 64
+
+
+# ---------------------------------------------------------------------------
+# WKV6 core
+# ---------------------------------------------------------------------------
+
+def wkv_reference(r, k, v, logw, u):
+    """Sequential oracle. r,k,v,logw: (B,S,H,N); u: (H,N).
+
+    Returns (o: (B,S,H,N), final_state: (B,H,N,N))."""
+    b, s, h, n = r.shape
+    state = jnp.zeros((b, h, n, n), jnp.float32)
+
+    def step(state, inp):
+        rt, kt, vt, lw = inp  # (B,H,N) each
+        w = jnp.exp(lw)
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,N,N)
+        bonus = state + u[None, :, :, None] * kv
+        o = jnp.einsum("bhn,bhnm->bhm", rt, bonus)
+        state = w[..., :, None] * state + kv
+        return state, o
+
+    xs = tuple(jnp.moveaxis(x.astype(jnp.float32), 1, 0)
+               for x in (r, k, v, logw))
+    state, o = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(o, 0, 1).astype(r.dtype), state
+
+
+def wkv_chunked(r, k, v, logw, u, chunk: int,
+                initial_state=None):
+    """Chunked-parallel WKV6. Shapes as ``wkv_reference``.
+
+    All decay exponents are differences ``cum_a - cum_b`` with a >= b in
+    time order, hence <= 0: numerically safe in fp32 at any chunk size.
+    """
+    b, s, h, n = r.shape
+    if s % chunk != 0:
+        pad = chunk - s % chunk
+        zf = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        out, st = wkv_chunked(zf(r), zf(k), zf(v), zf(logw), u, chunk,
+                              initial_state)
+        return out[:, :s], st
+    nc = s // chunk
+    f32 = jnp.float32
+    # keep the full-sequence tensors in their input dtype; cast per-chunk
+    # inside the scan (a full-sequence f32 copy of r/k/v/logw would be
+    # 4x (B,S,H,N) fp32 resident buffers)
+    rc, kc, vc, lwc = (x.reshape(b, nc, chunk, h, n)
+                       for x in (r, k, v, logw))
+
+    state0 = (initial_state if initial_state is not None
+              else jnp.zeros((b, h, n, n), f32))
+
+    def per_chunk(state, inp):
+        rt, kt, vt, lw = (x.astype(f32) for x in inp)   # (B,C,H,N)
+        cum = jnp.cumsum(lw, axis=1)    # inclusive, (B,C,H,N)
+        ecum = cum - lw                 # exclusive (cum_{t-1})
+        # -- intra-chunk: A[t,j] = r_t . (k_j * exp(ecum_t - cum_j)), j<t
+        pair = ecum[:, :, None] - cum[:, None]     # (B,C,C,H,N) <= 0 for j<t
+        t_idx = jnp.arange(chunk)
+        causal = (t_idx[:, None] > t_idx[None, :])  # strict lower
+        pair = jnp.where(causal[None, :, :, None, None], pair, -jnp.inf)
+        a = jnp.einsum("bthn,bjhn,btjhn->bthj", rt, kt,
+                       jnp.exp(pair))
+        # diag bonus term
+        diag = jnp.einsum("bthn,hn,bthn->bth", rt, u, kt)
+        o = jnp.einsum("bthj,bjhn->bthn", a, vt)
+        o = o + diag[..., None] * vt
+        # -- inter-chunk: r_t * exp(ecum_t) @ state
+        rdec = rt * jnp.exp(ecum)
+        o = o + jnp.einsum("bthn,bhnm->bthm", rdec, state)
+        # -- state update to chunk end
+        kdec = kt * jnp.exp(cum[:, -1:, :, :] - cum)    # <= 0 exponent
+        new_state = (jnp.exp(cum[:, -1])[..., None] * state
+                     + jnp.einsum("bthn,bthm->bhnm", kdec, vt))
+        return new_state, o
+
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (rc, kc, vc, lwc))
+    state, o = jax.lax.scan(per_chunk, state0, xs)
+    o = jnp.moveaxis(o, 0, 1).reshape(b, s, h, n)
+    return o.astype(r.dtype), state
+
+
+def wkv_step(r, k, v, logw, u, state):
+    """Single-token decode. r,k,v,logw: (B,H,N); state: (B,H,N,N)."""
+    f32 = jnp.float32
+    rt, kt, vt, lw = (x.astype(f32) for x in (r, k, v, logw))
+    kv = kt[..., :, None] * vt[..., None, :]
+    o = jnp.einsum("bhn,bhnm->bhm",
+                   rt, state + u[None, :, :, None] * kv)
+    new_state = jnp.exp(lw)[..., :, None] * state + kv
+    return o.astype(r.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Time-mix block
+# ---------------------------------------------------------------------------
+
+def init_time_mix(key, cfg: ArchConfig, dtype) -> Tuple[Params, Dict]:
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    params: Params = {
+        "mu": 0.5 * jnp.ones((5, d), dtype),       # r,k,v,g,w lerps
+        "w_r": _init_normal(ks[0], (d, d), dtype, d ** -0.5),
+        "w_k": _init_normal(ks[1], (d, d), dtype, d ** -0.5),
+        "w_v": _init_normal(ks[2], (d, d), dtype, d ** -0.5),
+        "w_g": _init_normal(ks[3], (d, d), dtype, d ** -0.5),
+        "w_o": _init_normal(ks[4], (d, d), dtype, d ** -0.5),
+        "w0": jnp.full((d,), -0.6, dtype),          # decay bias
+        "w_lora_a": _init_normal(ks[5], (d, LORA_DIM), dtype, d ** -0.5),
+        "w_lora_b": _init_normal(ks[6], (LORA_DIM, d), dtype,
+                                 LORA_DIM ** -0.5),
+        "u": _init_normal(ks[7], (d,), dtype, 0.3),
+        "ln_scale": jnp.ones((d,), dtype),          # per-head group norm
+    }
+    axes = {
+        "mu": (None, "embed"),
+        "w_r": ("embed", "heads"), "w_k": ("embed", "heads"),
+        "w_v": ("embed", "heads"), "w_g": ("embed", "heads"),
+        "w_o": ("heads", "embed"),
+        "w0": ("heads",), "w_lora_a": ("embed", None),
+        "w_lora_b": (None, "heads"), "u": ("heads",),
+        "ln_scale": ("heads",),
+    }
+    return params, axes
+
+
+def _mix_inputs(params, x, xx):
+    """Token-shift lerps for r,k,v,g,w inputs."""
+    mu = params["mu"].astype(x.dtype)
+    outs = []
+    for i in range(5):
+        outs.append(x + (xx - x) * mu[i])
+    return outs  # r_in, k_in, v_in, g_in, w_in
+
+
+def _decay(params, w_in):
+    lora = jnp.einsum("...d,dl->...l", jnp.tanh(w_in), params["w_lora_a"])
+    lora = jnp.einsum("...l,ld->...d", lora, params["w_lora_b"])
+    logw = -jnp.exp(
+        jnp.clip(params["w0"].astype(jnp.float32)
+                 + lora.astype(jnp.float32), -8.0, 4.0))
+    return logw  # (..., d), strictly negative
+
+
+def _group_norm(x, scale, eps):
+    """Per-head RMS norm: x (..., H, N)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1,
+                   keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(
+        x.dtype) * scale
+
+
+def time_mix(params: Params, x: jnp.ndarray, cfg: ArchConfig,
+             return_state: bool = False):
+    """Full-sequence time-mix. x: (B, S, d).
+
+    With ``return_state`` also returns (x_last, wkv_state) to seed the
+    decode cache at the end of a serving prefill."""
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    xx = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]    # token shift
+    r_in, k_in, v_in, g_in, w_in = _mix_inputs(params, x, xx)
+    r = jnp.einsum("bsd,dh->bsh", r_in, params["w_r"]).reshape(b, s, h, hd)
+    k = jnp.einsum("bsd,dh->bsh", k_in, params["w_k"]).reshape(b, s, h, hd)
+    v = jnp.einsum("bsd,dh->bsh", v_in, params["w_v"]).reshape(b, s, h, hd)
+    g = jax.nn.silu(jnp.einsum("bsd,dh->bsh", g_in, params["w_g"]))
+    logw = _decay(params, w_in).reshape(b, s, h, hd)
+    u = params["u"].astype(jnp.float32).reshape(h, hd)
+    o, state = wkv_chunked(r, k, v, logw, u, cfg.chunk_size)
+    o = _group_norm(o, 1.0, cfg.norm_eps).reshape(b, s, d)
+    o = o * params["ln_scale"].astype(o.dtype) * g.reshape(b, s, d)
+    out = jnp.einsum("bsh,hd->bsd", o, params["w_o"])
+    if not return_state:
+        return out
+    return out, (x[:, -1:], state)
+
+
+def time_mix_decode(params: Params, x: jnp.ndarray, cfg: ArchConfig,
+                    shift_state: jnp.ndarray, wkv_state: jnp.ndarray):
+    """One-token decode. x: (B,1,d); shift_state: (B,1,d);
+    wkv_state: (B,H,N,N). Returns (out, new_shift, new_wkv)."""
+    b, _, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    r_in, k_in, v_in, g_in, w_in = _mix_inputs(params, x, shift_state)
+    r = jnp.einsum("bsd,dh->bsh", r_in, params["w_r"]).reshape(b, h, hd)
+    k = jnp.einsum("bsd,dh->bsh", k_in, params["w_k"]).reshape(b, h, hd)
+    v = jnp.einsum("bsd,dh->bsh", v_in, params["w_v"]).reshape(b, h, hd)
+    g = jax.nn.silu(jnp.einsum("bsd,dh->bsh", g_in,
+                               params["w_g"])).reshape(b, h, hd)
+    logw = _decay(params, w_in).reshape(b, h, hd)
+    u = params["u"].astype(jnp.float32).reshape(h, hd)
+    o, new_state = wkv_step(r, k, v, logw, u, wkv_state)
+    o = _group_norm(o, 1.0, cfg.norm_eps)
+    o = (o * params["ln_scale"].astype(o.dtype).reshape(h, hd) * g)
+    o = o.reshape(b, 1, d)
+    return jnp.einsum("bsh,hd->bsd", o, params["w_o"]), x, new_state
+
+
+# ---------------------------------------------------------------------------
+# Channel-mix block
+# ---------------------------------------------------------------------------
+
+def init_channel_mix(key, cfg: ArchConfig, dtype) -> Tuple[Params, Dict]:
+    d, ff = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    params: Params = {
+        "mu": 0.5 * jnp.ones((2, d), dtype),        # k,r lerps
+        "w_k": _init_normal(k1, (d, ff), dtype, d ** -0.5),
+        "w_v": _init_normal(k2, (ff, d), dtype, ff ** -0.5),
+        "w_r": _init_normal(k3, (d, d), dtype, d ** -0.5),
+    }
+    axes = {"mu": (None, "embed"), "w_k": ("embed", "ff"),
+            "w_v": ("ff", "embed"), "w_r": ("embed", "heads")}
+    return params, axes
+
+
+def channel_mix(params: Params, x: jnp.ndarray,
+                shift_state=None) -> jnp.ndarray:
+    if shift_state is None:
+        xx = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        xx = shift_state
+    mu = params["mu"].astype(x.dtype)
+    k_in = x + (xx - x) * mu[0]
+    r_in = x + (xx - x) * mu[1]
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", k_in,
+                                          params["w_k"])))
+    kv = jnp.einsum("bsf,fd->bsd", k, params["w_v"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", r_in, params["w_r"]))
+    return r * kv

@@ -1,0 +1,4 @@
+"""Serving: KV-cache engine with batched prefill/decode."""
+from .engine import GenerationResult, ServingEngine
+
+__all__ = ["GenerationResult", "ServingEngine"]

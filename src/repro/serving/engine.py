@@ -1,0 +1,81 @@
+"""Batched serving engine: prefill + greedy decode with a KV cache.
+
+A deliberately small but real engine: fixed-size batch slots, bucketed
+prompt padding, jit'd prefill and decode steps, per-request accounting.
+The dry-run shapes (``prefill_32k``/``decode_32k``/``long_500k``) lower
+exactly these step functions on the production meshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import ModelDef
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray          # [new_tokens]
+    prompt_len: int
+    steps: int
+
+
+class ServingEngine:
+    def __init__(self, model: ModelDef, params: Any, max_batch: int,
+                 max_seq: int, eos_id: Optional[int] = None) -> None:
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+
+        self._prefill = jax.jit(
+            lambda p, t: model.prefill(p, t, max_seq=max_seq))
+        self._decode = jax.jit(
+            lambda p, c, tok, pos: model.decode_step(p, c, tok, pos),
+            donate_argnums=(1,))
+
+    def generate(self, prompts: Sequence[np.ndarray],
+                 max_new_tokens: int = 32) -> List[GenerationResult]:
+        """Greedy generation for a batch of prompts (left-padded to a
+        common length; right side reserved for generation)."""
+        assert len(prompts) <= self.max_batch
+        b = self.max_batch
+        plen = max(len(p) for p in prompts)
+        assert plen + max_new_tokens <= self.max_seq
+        toks = np.zeros((b, plen), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, plen - len(p):] = p  # left pad with 0
+
+        logits, cache = self._prefill(self.params, jnp.asarray(toks))
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+
+        out = np.zeros((b, max_new_tokens), np.int32)
+        pos = plen
+        for step in range(max_new_tokens):
+            out[:, step] = np.asarray(next_tok)
+            logits, cache = self._decode(
+                self.params, cache, next_tok[:, None], jnp.int32(pos))
+            next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(
+                jnp.int32)
+            pos += 1
+            if (self.eos_id is not None
+                    and bool((out[: len(prompts), : step + 1]
+                              == self.eos_id).any(axis=1).all())):
+                break
+
+        results = []
+        for i, p in enumerate(prompts):
+            gen = out[i]
+            if self.eos_id is not None:
+                hits = np.nonzero(gen == self.eos_id)[0]
+                if hits.size:
+                    gen = gen[: hits[0] + 1]
+            results.append(GenerationResult(tokens=gen,
+                                            prompt_len=len(p),
+                                            steps=pos - plen))
+        return results

@@ -1,0 +1,6 @@
+"""Sharding: logical-axis rules mapping models onto meshes."""
+from .rules import (active, constrain, default_rules, param_shardings,
+                    spec_for, use_rules)
+
+__all__ = ["active", "constrain", "default_rules", "param_shardings",
+           "spec_for", "use_rules"]

@@ -1,0 +1,147 @@
+"""The training loop: checkpoint/restart, failure recovery, stragglers.
+
+Designed for the 1000+-node regime described in the brief; on this CPU
+container the same code runs single-process and the failure paths are
+exercised by tests through injection hooks.
+
+Fault-tolerance model:
+* **checkpoint/restart** -- async sharded checkpoints every
+  ``ckpt_every`` steps; on any step failure the trainer restores the
+  latest valid checkpoint and replays from there (up to
+  ``max_restarts``).
+* **node failure** -- in a real deployment a device failure surfaces as
+  a distributed runtime error from the step function; the same
+  restore-and-replay path handles it. ``failure_hook`` lets tests raise
+  mid-run to exercise this.
+* **straggler mitigation** -- per-step deadline: steps slower than
+  ``straggler_factor`` x the rolling median are logged and counted; the
+  launcher can respond (re-slice data, drop the slow host) via the
+  ``on_straggler`` callback. On one host this is advisory only.
+* **elastic scaling** -- checkpoints are mesh-independent (host numpy +
+  manifest), so ``Trainer.restore_onto`` can re-shard the state onto a
+  different mesh/sharding tree (tested with a resharding restore).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import jax
+import numpy as np
+
+from . import checkpoint as ckpt
+from .optimizer import AdamW
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int
+    ckpt_dir: str
+    ckpt_every: int = 50
+    ckpt_keep: int = 3
+    max_restarts: int = 3
+    straggler_factor: float = 3.0
+    log_every: int = 10
+
+
+@dataclasses.dataclass
+class TrainerReport:
+    steps_run: int = 0
+    restarts: int = 0
+    stragglers: int = 0
+    losses: List[float] = dataclasses.field(default_factory=list)
+    final_loss: float = float("nan")
+
+
+class Trainer:
+    def __init__(self, cfg: TrainerConfig, step_fn: Callable,
+                 params: Any, opt_state: Any,
+                 failure_hook: Optional[Callable[[int], None]] = None,
+                 on_straggler: Optional[Callable[[int, float],
+                                                 None]] = None) -> None:
+        self.cfg = cfg
+        self.step_fn = step_fn
+        self.params = params
+        self.opt_state = opt_state
+        self.failure_hook = failure_hook
+        self.on_straggler = on_straggler
+        self.checkpointer = ckpt.AsyncCheckpointer(cfg.ckpt_dir,
+                                                   keep=cfg.ckpt_keep)
+        self.step = 0
+
+    # -- checkpoint/restart ----------------------------------------------------
+
+    def _state_tree(self) -> Dict[str, Any]:
+        return {"params": self.params, "opt_state": self.opt_state}
+
+    def try_resume(self, shardings: Any = None) -> bool:
+        latest = ckpt.latest_step(self.cfg.ckpt_dir)
+        if latest is None:
+            return False
+        step, tree = ckpt.restore(self.cfg.ckpt_dir, self._state_tree(),
+                                  shardings)
+        self.params = tree["params"]
+        self.opt_state = tree["opt_state"]
+        self.step = step
+        return True
+
+    def restore_onto(self, shardings: Any) -> None:
+        """Elastic path: restore latest checkpoint re-sharded onto a new
+        mesh (shardings pytree matching the state tree)."""
+        step, tree = ckpt.restore(self.cfg.ckpt_dir, self._state_tree(),
+                                  shardings)
+        self.params = tree["params"]
+        self.opt_state = tree["opt_state"]
+        self.step = step
+
+    # -- the loop ----------------------------------------------------------------
+
+    def train(self, data_iter: Iterator[Dict[str, Any]]) -> TrainerReport:
+        report = TrainerReport()
+        cfg = self.cfg
+        durations: List[float] = []
+        restarts = 0
+
+        while self.step < cfg.total_steps:
+            try:
+                batch = next(data_iter)
+                if self.failure_hook is not None:
+                    self.failure_hook(self.step)
+                t0 = time.perf_counter()
+                self.params, self.opt_state, metrics = self.step_fn(
+                    self.params, self.opt_state, batch)
+                loss = float(metrics["loss"])
+                dt = time.perf_counter() - t0
+
+                # straggler detection against the rolling median
+                durations.append(dt)
+                if len(durations) >= 8:
+                    med = float(np.median(durations[-32:]))
+                    if dt > cfg.straggler_factor * med:
+                        report.stragglers += 1
+                        if self.on_straggler is not None:
+                            self.on_straggler(self.step, dt)
+
+                self.step += 1
+                report.steps_run += 1
+                report.losses.append(loss)
+                report.final_loss = loss
+
+                if self.step % cfg.ckpt_every == 0:
+                    self.checkpointer.save(self.step, self._state_tree())
+            except (StopIteration, KeyboardInterrupt):
+                break
+            except Exception:
+                restarts += 1
+                report.restarts = restarts
+                if restarts > cfg.max_restarts:
+                    raise
+                # failure recovery: restore latest valid checkpoint
+                self.checkpointer.wait()
+                if not self.try_resume():
+                    # no checkpoint yet: restart from current state
+                    pass
+
+        self.checkpointer.wait()
+        return report

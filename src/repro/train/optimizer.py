@@ -1,0 +1,96 @@
+"""Optimizers from scratch (no optax in this environment).
+
+AdamW with decoupled weight decay, fp32 moments, global-norm clipping,
+and linear-warmup + cosine-decay schedules. The optimizer state pytree
+mirrors params, so the sharding layer shards moments exactly like their
+parameters (ZeRO-style sharded moments are a rules change, not a code
+change).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray       # int32 scalar
+    mu: Params              # first moment (fp32)
+    nu: Params              # second moment (fp32)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: Callable[[jnp.ndarray], jnp.ndarray]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+    def init(self, params: Params) -> AdamWState:
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                          nu=jax.tree.map(jnp.copy, zeros))
+
+    def update(self, grads: Params, state: AdamWState,
+               params: Params) -> Tuple[Params, AdamWState, Dict]:
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = global_norm(grads)
+        if self.clip_norm is not None:
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                          state.mu, grads)
+        nu = jax.tree.map(lambda n, g: b2 * n + (1 - b2) * g * g,
+                          state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = self.learning_rate(step)
+
+        def upd(p, m, n):
+            mhat = m / bc1
+            nhat = n / bc2
+            u = mhat / (jnp.sqrt(nhat) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype)
+
+        updates = jax.tree.map(upd, params, mu, nu)
+        return (updates, AdamWState(step=step, mu=mu, nu=nu),
+                {"grad_norm": gnorm, "lr": lr})
+
+
+def apply_updates(params: Params, updates: Params) -> Params:
+    return jax.tree.map(lambda p, u: p + u, params, updates)
+
+
+def global_norm(tree: Params) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int,
+                  total_steps: int, min_ratio: float = 0.1):
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(
+            jnp.pi * prog))
+        return peak_lr * jnp.minimum(warm, cos)
+
+    return schedule
+
+
+def constant_lr(lr: float):
+    return lambda step: jnp.full((), lr, jnp.float32)

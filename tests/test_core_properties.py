@@ -1,0 +1,120 @@
+"""Property-based tests (hypothesis) for brTPF system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BGP, BrTPFClient, BrTPFServer, TriplePattern,
+                        TripleStore, UNBOUND, brtpf_select, compatible,
+                        encode_var, evaluate_bgp_reference, merge,
+                        tpf_select)
+
+MAX_TERMS = 9
+
+
+@st.composite
+def graphs(draw, max_triples=60):
+    n = draw(st.integers(0, max_triples))
+    rows = draw(st.lists(
+        st.tuples(*[st.integers(0, MAX_TERMS - 1)] * 3),
+        min_size=n, max_size=n))
+    return np.asarray(rows, dtype=np.int32).reshape(-1, 3)
+
+
+@st.composite
+def patterns(draw, max_vars=3):
+    comps = []
+    for _ in range(3):
+        if draw(st.booleans()):
+            comps.append(encode_var(draw(st.integers(0, max_vars - 1))))
+        else:
+            comps.append(draw(st.integers(0, MAX_TERMS - 1)))
+    return TriplePattern(*comps)
+
+
+@st.composite
+def omegas(draw, num_vars=3, max_rows=8):
+    n = draw(st.integers(0, max_rows))
+    rows = draw(st.lists(
+        st.tuples(*[st.integers(-1, MAX_TERMS - 1)] * num_vars),
+        min_size=n, max_size=n))
+    return np.asarray(rows, dtype=np.int32).reshape(-1, num_vars)
+
+
+@settings(max_examples=150, deadline=None)
+@given(graphs(), patterns())
+def test_tpf_select_sound_complete(triples, tp):
+    store = TripleStore(triples)
+    got = set(map(tuple, store.match(tp).tolist()))
+    want = {tuple(t) for t in np.unique(triples, axis=0).reshape(-1, 3)
+            .tolist() if tp.matches_triple(t)} if triples.size else set()
+    assert got == want
+
+
+@settings(max_examples=150, deadline=None)
+@given(graphs(), patterns(), omegas())
+def test_brtpf_subset_and_membership(triples, tp, omega):
+    """Invariants straight from Definition 1:
+    (i)  s_(tp, Omega)(G) is a subset of s_tp(G);
+    (ii) every returned triple joins with some mapping in Omega;
+    (iii) every TPF triple that joins with Omega is returned."""
+    from repro.core import mapping_from_triple
+    store = TripleStore(triples)
+    br = set(map(tuple, brtpf_select(store, tp, omega).tolist()))
+    tpf = set(map(tuple, tpf_select(store, tp).tolist()))
+    assert br <= tpf
+    nv = omega.shape[1]
+
+    def joins(t):
+        mu = mapping_from_triple(tp, np.asarray(t, np.int32), nv)
+        if mu is None:
+            return False
+        return any(compatible(mu, row) for row in omega)
+
+    if omega.shape[0] == 0:
+        assert br == tpf
+    else:
+        for t in br:
+            assert joins(t)
+        for t in tpf - br:
+            assert not joins(t)
+
+
+@settings(max_examples=100, deadline=None)
+@given(graphs(), patterns())
+def test_cardinality_definition2(triples, tp):
+    """cnt contract of Definition 2: cnt = 0 iff the fragment is empty,
+    cnt > 0 otherwise (our backend is exact, so eps = 0)."""
+    store = TripleStore(triples)
+    cnt = store.cardinality(tp)
+    n = store.match(tp).shape[0]
+    assert (cnt == 0) == (n == 0)
+    assert cnt == n
+
+
+@settings(max_examples=100, deadline=None)
+@given(graphs(max_triples=40), st.integers(1, 6), st.integers(2, 9))
+def test_client_correct_for_random_star_joins(triples, max_mpr, page_size):
+    """End-to-end: the brTPF client computes exactly the reference BGP
+    result for star joins over random graphs, for any maxMpR/page size."""
+    v = encode_var
+    bgp = BGP((TriplePattern(v(0), 1, v(1)),
+               TriplePattern(v(0), 2, v(2))), 3)
+    store = TripleStore(triples)
+    server = BrTPFServer(store, page_size=page_size, max_mpr=max_mpr)
+    got = BrTPFClient(server, max_mpr=max_mpr).execute(bgp).solutions
+    want = evaluate_bgp_reference(store.triples, bgp)
+    assert np.array_equal(np.unique(got, axis=0).reshape(-1, 3),
+                          want.reshape(-1, 3))
+
+
+@settings(max_examples=200, deadline=None)
+@given(omegas(), omegas())
+def test_compatibility_symmetric_and_merge_consistent(a, b):
+    for mu in a:
+        for nu in b:
+            assert compatible(mu, nu) == compatible(nu, mu)
+            if compatible(mu, nu):
+                m = merge(mu.copy(), nu)
+                bound = m != UNBOUND
+                # merge binds exactly the union of bound vars
+                assert np.array_equal(
+                    bound, (mu != UNBOUND) | (nu != UNBOUND))

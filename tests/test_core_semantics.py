@@ -1,0 +1,262 @@
+"""Semantics tests for the brTPF core engine against brute-force oracles."""
+import numpy as np
+import pytest
+
+from repro.core import (BGP, BrTPFClient, BrTPFServer, TPFClient,
+                        TriplePattern, TripleStore, UNBOUND,
+                        brtpf_select, encode_var, evaluate_bgp_reference,
+                        instantiate_patterns, parse_bgp, tpf_select,
+                        MaxMprExceeded, Request, TermDictionary)
+
+
+def small_graph(seed=0, n=200, terms=12):
+    rng = np.random.default_rng(seed)
+    return np.unique(rng.integers(0, terms, size=(n, 3)), axis=0).astype(
+        np.int32)
+
+
+V = encode_var  # shorthand
+
+
+# ---------------------------------------------------------------------------
+# Store / TPF selector
+# ---------------------------------------------------------------------------
+
+class TestStore:
+    def test_match_equals_bruteforce(self):
+        triples = small_graph(1)
+        store = TripleStore(triples)
+        patterns = [
+            TriplePattern(V(0), V(1), V(2)),       # all wildcards
+            TriplePattern(3, V(0), V(1)),          # bound s
+            TriplePattern(V(0), 5, V(1)),          # bound p
+            TriplePattern(V(0), V(1), 7),          # bound o
+            TriplePattern(3, 5, V(0)),             # bound s,p
+            TriplePattern(V(0), 5, 7),             # bound p,o
+            TriplePattern(3, V(0), 7),             # bound s,o (scan path)
+            TriplePattern(int(triples[0, 0]), int(triples[0, 1]),
+                          int(triples[0, 2])),     # fully bound
+            TriplePattern(V(0), 5, V(0)),          # repeated variable
+            TriplePattern(V(0), V(0), V(0)),       # all same variable
+        ]
+        for tp in patterns:
+            got = store.match(tp)
+            want = np.array([t for t in triples if tp.matches_triple(t)],
+                            dtype=np.int32).reshape(-1, 3)
+            got_s = set(map(tuple, got.tolist()))
+            want_s = set(map(tuple, want.tolist()))
+            assert got_s == want_s, tp
+
+    def test_cardinality_contract(self):
+        """Definition 2: cnt = 0 iff empty; otherwise within eps (here we
+        additionally verify our estimates are exact for prefix patterns)."""
+        store = TripleStore(small_graph(2))
+        for tp in [TriplePattern(V(0), V(1), V(2)),
+                   TriplePattern(4, V(0), V(1)),
+                   TriplePattern(V(0), 2, 9),
+                   TriplePattern(1, V(0), 6)]:
+            cnt = store.cardinality(tp)
+            true = store.match(tp).shape[0]
+            assert (cnt == 0) == (true == 0)
+            assert cnt == true  # our backend is exact at this scale
+
+    def test_paging_deterministic_and_complete(self):
+        store = TripleStore(small_graph(3, n=500))
+        tp = TriplePattern(V(0), V(1), V(2))
+        total = store.match(tp)
+        pages, off = [], 0
+        while True:
+            page, cnt = store.match_range(tp, off, 64)
+            assert cnt == total.shape[0]
+            if page.shape[0] == 0:
+                break
+            pages.append(page)
+            off += 64
+        assert np.array_equal(np.concatenate(pages), total)
+
+    def test_empty_store(self):
+        store = TripleStore(np.empty((0, 3), np.int32))
+        assert store.match(TriplePattern(V(0), V(1), V(2))).shape == (0, 3)
+        assert store.cardinality(TriplePattern(1, 2, 3)) == 0
+
+
+# ---------------------------------------------------------------------------
+# brTPF selector (Definition 1)
+# ---------------------------------------------------------------------------
+
+def brtpf_oracle(triples, tp, omega):
+    """Literal Definition 1: matching triples t such that the mapping
+    mu with mu(tp) = t is compatible with some mu' in Omega."""
+    from repro.core import mapping_from_triple, compatible
+    out = []
+    nv = max([v for c in tp.as_tuple() if c < 0
+              for v in [-c - 1]] + [omega.shape[1] - 1]) + 1
+    for t in triples:
+        if not tp.matches_triple(t):
+            continue
+        mu = mapping_from_triple(tp, t, nv)
+        if mu is None:
+            continue
+        for row in omega:
+            r = np.full((nv,), UNBOUND, np.int32)
+            r[: row.shape[0]] = row
+            if compatible(mu, r):
+                out.append(tuple(t))
+                break
+    return set(out)
+
+
+class TestBrTPFSelector:
+    def test_selector_matches_definition(self):
+        triples = small_graph(4, n=300, terms=10)
+        store = TripleStore(triples)
+        rng = np.random.default_rng(5)
+        tp = TriplePattern(V(0), 3, V(1))
+        # Omega binds ?v0 (and sometimes ?v1)
+        omega = rng.integers(0, 10, size=(8, 2)).astype(np.int32)
+        omega[rng.random((8, 2)) < 0.4] = UNBOUND
+        got = set(map(tuple, brtpf_select(store, tp, omega).tolist()))
+        assert got == brtpf_oracle(triples, tp, omega)
+
+    def test_empty_omega_is_tpf(self):
+        store = TripleStore(small_graph(6))
+        tp = TriplePattern(V(0), 2, V(1))
+        a = brtpf_select(store, tp, None)
+        b = tpf_select(store, tp)
+        assert np.array_equal(a, b)
+
+    def test_subset_of_tpf(self):
+        """brTPF fragment is always a subset of the TPF fragment."""
+        store = TripleStore(small_graph(7))
+        tp = TriplePattern(V(0), V(1), 4)
+        omega = np.array([[2, UNBOUND], [5, 1]], dtype=np.int32)
+        br = set(map(tuple, brtpf_select(store, tp, omega).tolist()))
+        tpf = set(map(tuple, tpf_select(store, tp).tolist()))
+        assert br <= tpf
+
+    def test_unbound_row_recovers_tpf(self):
+        """A fully-unbound mapping is compatible with everything."""
+        store = TripleStore(small_graph(8))
+        tp = TriplePattern(V(0), 1, V(1))
+        omega = np.full((1, 2), UNBOUND, np.int32)
+        assert np.array_equal(brtpf_select(store, tp, omega),
+                              tpf_select(store, tp))
+
+    def test_instantiation_dedup(self):
+        """Server algorithm step 3: duplicate instantiations collapse."""
+        tp = TriplePattern(V(0), 7, V(1))
+        omega = np.array([[3, UNBOUND], [3, UNBOUND], [4, UNBOUND]],
+                         dtype=np.int32)
+        insts = instantiate_patterns(tp, omega)
+        assert len(insts) == 2
+        assert insts[0].s == 3 and insts[1].s == 4
+
+
+# ---------------------------------------------------------------------------
+# Server: paging, maxMpR, accounting
+# ---------------------------------------------------------------------------
+
+class TestServer:
+    def test_max_mpr_enforced(self):
+        server = BrTPFServer(TripleStore(small_graph(9)), max_mpr=10)
+        omega = np.zeros((11, 2), np.int32)
+        with pytest.raises(MaxMprExceeded):
+            server.handle(Request(TriplePattern(V(0), 1, V(1)), omega))
+
+    def test_paging_covers_fragment(self):
+        store = TripleStore(small_graph(10, n=400))
+        server = BrTPFServer(store, page_size=50)
+        tp = TriplePattern(V(0), V(1), V(2))
+        got, page = [], 0
+        while True:
+            frag = server.handle(Request(tp, None, page))
+            got.append(frag.data)
+            if not frag.has_next:
+                break
+            page += 1
+        got = np.concatenate(got)
+        assert np.array_equal(got, store.match(tp))
+        assert server.counters.num_requests == page + 1
+        assert server.counters.data_received == (
+            got.shape[0] + (page + 1) * server.meta_triples_per_page)
+
+    def test_counters_accumulate(self):
+        server = BrTPFServer(TripleStore(small_graph(11)), page_size=100)
+        tp = TriplePattern(V(0), V(1), V(2))
+        server.handle(Request(tp, None, 0))
+        c1 = server.counters.num_requests
+        server.handle(Request(tp, None, 0))
+        assert server.counters.num_requests == c1 + 1
+
+
+# ---------------------------------------------------------------------------
+# Clients vs reference BGP evaluation
+# ---------------------------------------------------------------------------
+
+def _query_corpus(dictionary):
+    return [
+        "?x likes ?y\n?y type food",
+        "?x likes ?y\n?x lives ?c\n?y type food",
+        "?x type person\n?x likes ?y\n?y likes ?z",
+        "a likes ?y\n?y likes ?z",
+        "?x likes apple",
+        "?x likes ?y\n?z likes ?y\n?x type person",
+    ]
+
+
+def _social_graph(dictionary, seed=12):
+    rng = np.random.default_rng(seed)
+    people = [f"p{i}" for i in range(15)]
+    foods = ["apple", "soup", "cake", "rice"]
+    cities = ["rome", "lima"]
+    lines = []
+    for p in people:
+        lines.append(f"{p} type person")
+        for f in rng.choice(foods, size=2, replace=False):
+            lines.append(f"{p} likes {f}")
+        if rng.random() < 0.7:
+            lines.append(f"{p} likes {rng.choice(people)}")
+        lines.append(f"{p} lives {rng.choice(cities)}")
+    lines.append("a likes p1")
+    for f in foods:
+        lines.append(f"{f} type food")
+    from repro.core import store_from_ntriples
+    return store_from_ntriples(lines, dictionary)
+
+
+@pytest.mark.parametrize("max_mpr", [1, 3, 30])
+@pytest.mark.parametrize("page_size", [7, 100])
+def test_clients_match_reference(max_mpr, page_size):
+    d = TermDictionary()
+    store = _social_graph(d)
+    server = BrTPFServer(store, page_size=page_size, max_mpr=max_mpr)
+    for q in _query_corpus(d):
+        bgp = parse_bgp(q, d)
+        want = evaluate_bgp_reference(store.triples, bgp)
+        tpf_res = TPFClient(server).execute(bgp)
+        br_res = BrTPFClient(server, max_mpr=max_mpr).execute(bgp)
+        assert not tpf_res.timed_out and not br_res.timed_out
+        assert np.array_equal(np.unique(tpf_res.solutions, axis=0), want), q
+        assert np.array_equal(np.unique(br_res.solutions, axis=0), want), q
+
+
+def test_brtpf_fewer_requests_on_joins():
+    """The paper's headline effect at engine level: for join queries with
+    non-trivial intermediate results, brTPF issues far fewer requests."""
+    d = TermDictionary()
+    store = _social_graph(d, seed=3)
+    server = BrTPFServer(store, page_size=100, max_mpr=30)
+    bgp = parse_bgp("?x likes ?y\n?y type food", d)
+    t = TPFClient(server).execute(bgp)
+    b = BrTPFClient(server).execute(bgp)
+    assert b.num_requests < t.num_requests
+    assert b.data_received <= t.data_received
+
+
+def test_request_budget_times_out():
+    d = TermDictionary()
+    store = _social_graph(d, seed=4)
+    server = BrTPFServer(store, page_size=5)
+    bgp = parse_bgp("?x likes ?y\n?y type food\n?x type person", d)
+    res = TPFClient(server, request_budget=3).execute(bgp)
+    assert res.timed_out

@@ -1,0 +1,151 @@
+"""Pallas kernel tests: sweep shapes/dtypes, assert against ref.py oracles.
+
+Kernels execute in interpret mode on CPU (the TPU lowering is the target;
+interpret runs the same kernel body).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import bindjoin, compact_mask, pattern_vec_from, tpf_match
+from repro.kernels import ref
+
+
+def rand_triples(rng, t, terms=50):
+    return rng.integers(0, terms, size=(t, 3)).astype(np.int32)
+
+
+def rand_patterns(rng, m, terms=50, wild_frac=0.5):
+    pats = rng.integers(0, terms, size=(m, 3)).astype(np.int32)
+    wild = rng.random((m, 3)) < wild_frac
+    pats[wild] = -1
+    return pats
+
+
+class TestBindJoin:
+    @pytest.mark.parametrize("t", [1, 7, 100, 1024, 2500])
+    @pytest.mark.parametrize("m", [1, 5, 30, 128, 200])
+    def test_shape_sweep_vs_ref(self, t, m):
+        rng = np.random.default_rng(t * 1000 + m)
+        cand = rand_triples(rng, t)
+        pats = rand_patterns(rng, m)
+        valid = (rng.random(m) < 0.9).astype(np.int32)
+        keep, idx = bindjoin(jnp.asarray(cand), jnp.asarray(pats),
+                             jnp.asarray(valid))
+        # oracle on the same (padded) problem, cropped
+        ref_keep, ref_idx = ref.bindjoin_ref(
+            jnp.asarray(cand[:, 0]), jnp.asarray(cand[:, 1]),
+            jnp.asarray(cand[:, 2]), jnp.asarray(pats[:, 0]),
+            jnp.asarray(pats[:, 1]), jnp.asarray(pats[:, 2]),
+            jnp.asarray(valid))
+        np.testing.assert_array_equal(np.asarray(keep), np.asarray(ref_keep))
+        # idx agrees wherever a match exists (no-match sentinel differs
+        # only by padding amount).
+        has = np.asarray(ref_keep)
+        np.testing.assert_array_equal(np.asarray(idx)[has],
+                                      np.asarray(ref_idx)[has])
+
+    @pytest.mark.parametrize("bt,bm", [(256, 128), (1024, 128), (512, 256)])
+    def test_block_shape_sweep(self, bt, bm):
+        rng = np.random.default_rng(bt + bm)
+        cand = rand_triples(rng, 3000, terms=20)
+        pats = rand_patterns(rng, 300, terms=20)
+        valid = np.ones(300, np.int32)
+        keep, _ = bindjoin(jnp.asarray(cand), jnp.asarray(pats),
+                           jnp.asarray(valid), bt=bt, bm=bm)
+        ref_keep, _ = ref.bindjoin_ref(
+            *(jnp.asarray(cand[:, i]) for i in range(3)),
+            *(jnp.asarray(pats[:, i]) for i in range(3)),
+            jnp.asarray(valid))
+        np.testing.assert_array_equal(np.asarray(keep), np.asarray(ref_keep))
+
+    def test_all_invalid_patterns_match_nothing(self):
+        cand = jnp.zeros((64, 3), jnp.int32)
+        pats = jnp.full((8, 3), -1, jnp.int32)  # all-wildcard
+        keep, _ = bindjoin(cand, pats, jnp.zeros((8,), jnp.int32))
+        assert not bool(keep.any())
+
+    def test_all_wildcard_pattern_matches_everything(self):
+        rng = np.random.default_rng(0)
+        cand = jnp.asarray(rand_triples(rng, 333))
+        pats = jnp.full((1, 3), -1, jnp.int32)
+        keep, idx = bindjoin(cand, pats, jnp.ones((1,), jnp.int32))
+        assert bool(keep.all())
+        assert int(idx.max()) == 0
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(1, 60), st.integers(1, 20), st.integers(0, 2**31 - 1))
+    def test_property_matches_oracle(self, t, m, seed):
+        rng = np.random.default_rng(seed)
+        cand = rand_triples(rng, t, terms=6)
+        pats = rand_patterns(rng, m, terms=6, wild_frac=0.6)
+        valid = np.ones(m, np.int32)
+        keep, _ = bindjoin(jnp.asarray(cand), jnp.asarray(pats),
+                           jnp.asarray(valid))
+        want = np.zeros(t, bool)
+        for i, c in enumerate(cand):
+            for pm in pats:
+                ok = all(pm[k] < 0 or pm[k] == c[k] for k in range(3))
+                want[i] |= ok
+        np.testing.assert_array_equal(np.asarray(keep), want)
+
+
+class TestTpfMatch:
+    @pytest.mark.parametrize("t", [1, 100, 32768, 40000])
+    @pytest.mark.parametrize("pat", [
+        (-1, -1, -1, 0, 0, 0),
+        (3, -1, -1, 0, 0, 0),
+        (-1, 2, 7, 0, 0, 0),
+        (1, 2, 3, 0, 0, 0),
+        (-1, -1, -1, 0, 1, 0),   # s == o (repeated variable)
+        (-1, 4, -1, 1, 0, 1),
+    ])
+    def test_sweep_vs_ref(self, t, pat):
+        rng = np.random.default_rng(abs(hash(pat)) % 2**32 + t)
+        cand = rand_triples(rng, t, terms=9)
+        vec = pattern_vec_from(pat[:3], *pat[3:])
+        mask = tpf_match(jnp.asarray(cand), jnp.asarray(vec))
+        want = ref.tpf_match_ref(
+            *(jnp.asarray(cand[:, i]) for i in range(3)),
+            jnp.asarray(vec))
+        np.testing.assert_array_equal(np.asarray(mask), np.asarray(want))
+
+    def test_matches_store_semantics(self):
+        """Kernel agrees with the host TripleStore matcher."""
+        from repro.core import TriplePattern, TripleStore, encode_var
+        rng = np.random.default_rng(11)
+        triples = np.unique(rand_triples(rng, 500, terms=12), axis=0)
+        store = TripleStore(triples)
+        V = encode_var
+        cases = [TriplePattern(V(0), 5, V(1)),
+                 TriplePattern(V(0), 5, V(0)),
+                 TriplePattern(2, V(0), V(1)),
+                 TriplePattern(V(0), V(1), V(2))]
+        for tp in cases:
+            comps = tp.as_tuple()
+            eq_so = int(comps[0] < 0 and comps[0] == comps[2])
+            eq_sp = int(comps[0] < 0 and comps[0] == comps[1])
+            eq_po = int(comps[1] < 0 and comps[1] == comps[2])
+            vec = pattern_vec_from(
+                tuple(-1 if c < 0 else c for c in comps),
+                eq_sp, eq_so, eq_po)
+            mask = np.asarray(tpf_match(jnp.asarray(store.triples),
+                                        jnp.asarray(vec)))
+            got = store.triples[mask]
+            want = store.match(tp)
+            assert (set(map(tuple, got.tolist()))
+                    == set(map(tuple, want.tolist()))), tp
+
+
+class TestCompact:
+    @pytest.mark.parametrize("n,cap", [(10, 4), (100, 100), (7, 16)])
+    def test_compact(self, n, cap):
+        rng = np.random.default_rng(n + cap)
+        mask = jnp.asarray(rng.random(n) < 0.3)
+        idx, count = compact_mask(mask, cap)
+        want = np.nonzero(np.asarray(mask))[0]
+        assert int(count) == want.shape[0]
+        take = min(cap, want.shape[0])
+        np.testing.assert_array_equal(np.asarray(idx)[:take], want[:take])
+        assert all(int(i) == -1 for i in np.asarray(idx)[take:])

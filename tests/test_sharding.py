@@ -1,0 +1,156 @@
+"""Sharding rules + roofline analyzer unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.sharding.rules import (constrain, default_rules, spec_for,
+                                  use_rules)
+
+
+def mesh1d():
+    return Mesh(np.array(jax.devices()[:1]), ("data",))
+
+
+class TestSpecFor:
+    def test_basic_mapping(self):
+        rules = {"batch": "data", "ff": "model", "embed": None}
+        assert spec_for(("batch", "embed", "ff"), rules) == \
+            P("data", None, "model")
+
+    def test_trailing_none_trimmed(self):
+        rules = {"batch": "data"}
+        assert spec_for(("batch", None, None), rules) == P("data")
+
+    def test_duplicate_axis_dropped(self):
+        """One mesh axis cannot shard two dims of one tensor."""
+        rules = {"a": "model", "b": "model"}
+        assert spec_for(("a", "b"), rules) == P("model")
+
+    def test_multi_axis_rule(self):
+        rules = {"batch": ("pod", "data")}
+        assert spec_for(("batch", None), rules) == P(("pod", "data"))
+
+    def test_default_rules_cover_model_axes(self):
+        rules = default_rules()
+        for name in ("batch", "vocab", "heads", "kv_heads", "ff",
+                     "experts", "ssm_inner", "kv_seq"):
+            assert name in rules
+
+
+class TestConstrain:
+    def test_noop_without_rules(self):
+        x = jnp.ones((4, 4))
+        assert constrain(x, "batch", "ff") is x
+
+    def test_divisibility_guard(self):
+        """Non-divisible dims fall back to replication, not an error."""
+        mesh = mesh1d()
+        with use_rules(mesh, {"batch": "data"}):
+            x = jnp.ones((3, 2))  # 3 % 1 == 0 -> fine with 1 device
+            y = constrain(x, "batch", None)
+            assert y.shape == x.shape
+
+    def test_applies_under_mesh(self):
+        mesh = mesh1d()
+        with use_rules(mesh, default_rules()):
+            x = jnp.ones((4, 8))
+            y = constrain(x, "batch", "embed")
+            assert y.shape == x.shape
+
+
+class TestRooflineAnalyzer:
+    def test_dot_flops_and_while_trips(self):
+        from repro.launch.roofline import HloAnalyzer
+
+        hlo = """
+HloModule test
+
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16] get-tuple-element(%p), index=1
+  %w = f32[16,16] constant({...})
+  %dot.1 = f32[8,16] dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,16]) tuple(%ni, %dot.1)
+}
+
+%cond (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,16]) -> (s32[], f32[8,16]) {
+  %a = f32[8,16] parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[8,16]) tuple(%z, %a)
+  ROOT %w.1 = (s32[], f32[8,16]) while(%t0), condition=%cond, body=%body
+}
+"""
+        a = HloAnalyzer(hlo)
+        cost = a.entry_cost()
+        # dot: 2*8*16*16 = 4096 flops, x5 trips
+        assert cost.flops == pytest.approx(5 * 4096, rel=0.01)
+
+    def test_collective_bytes(self):
+        from repro.launch.roofline import HloAnalyzer
+
+        hlo = """
+HloModule test
+
+ENTRY %main (a: f32[128,256]) -> f32[128,256] {
+  %a = f32[128,256] parameter(0)
+  ROOT %ar = f32[128,256] all-reduce(%a), replica_groups={}, to_apply=%add
+}
+"""
+        cost = HloAnalyzer(hlo).entry_cost()
+        assert cost.coll_bytes == 128 * 256 * 4
+        assert cost.coll_counts == {"all-reduce": 1}
+
+    def test_known_trip_count_preferred(self):
+        from repro.launch.roofline import HloAnalyzer
+
+        hlo = """
+HloModule test
+
+%body (p: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %p = (s32[], f32[4]) parameter(0)
+  %x = f32[4] get-tuple-element(%p), index=1
+  %y = f32[4] add(%x, %x)
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[4]) tuple(%i, %y)
+}
+
+%cond (p: (s32[], f32[4])) -> pred[] {
+  %p = (s32[], f32[4]) parameter(0)
+  ROOT %c = pred[] constant(false)
+}
+
+ENTRY %main (a: f32[4]) -> (s32[], f32[4]) {
+  %a = f32[4] parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[4]) tuple(%z, %a)
+  ROOT %w.1 = (s32[], f32[4]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"7"}}
+}
+"""
+        cost = HloAnalyzer(hlo).entry_cost()
+        assert cost.flops == pytest.approx(7 * 4, rel=0.01)
+
+    def test_model_flops(self):
+        from repro.configs.base import TRAIN_4K, DECODE_32K, get_arch
+        from repro.launch.roofline import model_flops_for
+
+        cfg = get_arch("qwen2-1.5b")
+        n = cfg.param_count()
+        assert model_flops_for(cfg, TRAIN_4K) == pytest.approx(
+            6 * n * 256 * 4096)
+        assert model_flops_for(cfg, DECODE_32K) == pytest.approx(
+            2 * n * 128)
+        moe = get_arch("olmoe-1b-7b")
+        assert model_flops_for(moe, TRAIN_4K) == pytest.approx(
+            6 * moe.active_param_count() * 256 * 4096)
