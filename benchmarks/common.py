@@ -56,9 +56,11 @@ def workload(seed: int = 1):
 
 
 def make_server(page_size: int = 100, max_mpr: int = 30,
-                cache: Optional[LRUCache] = None) -> BrTPFServer:
+                cache: Optional[LRUCache] = None,
+                selector_backend: str = "numpy") -> BrTPFServer:
     return BrTPFServer(dataset().store, page_size=page_size,
-                       max_mpr=max_mpr, cache=cache)
+                       max_mpr=max_mpr, cache=cache,
+                       selector_backend=selector_backend)
 
 
 def run_sequence(client_kind: str, page_size: int = 100,

@@ -54,6 +54,62 @@ def run(full: bool = False) -> Dict:
         dt_m = _time(lambda: jax.block_until_ready(
             tpf_match(cand, vec, use_pallas=False)))
         emit(f"kernels/tpf_match_T{t}_ref", dt_m * 1e6, f"rows={t}")
+
+    out["selector"] = run_selector_backends(full=full)
+    return out
+
+
+def run_selector_backends(full: bool = False) -> Dict:
+    """Selector-backend axis: the server-side brTPF selector evaluated
+    by the numpy per-pattern backend loop vs the Pallas bind-join kernel
+    path (solo and cross-request-batched grouped launches).
+
+    On CPU the kernel runs in interpret mode, so its wall-clock column
+    measures dispatch, not TPU speed; the geometry columns (candidates
+    streamed per HBM pass, compare-grid cells, passes saved by batching)
+    are the quantities the TPU cost model in ``core/sim.py`` charges.
+    """
+    from repro.core.kernel_selectors import KernelSelector
+    from repro.core.rdf import TriplePattern, encode_var
+    from repro.core.selectors import brtpf_select_with_cnt
+    from repro.core.store import TripleStore
+
+    rng = np.random.default_rng(7)
+    n_triples = 200_000 if full else 20_000
+    triples = np.unique(
+        rng.integers(0, 500, (n_triples, 3)).astype(np.int32), axis=0)
+    store = TripleStore(triples)
+    v = encode_var
+    out: Dict = {}
+
+    cases = [
+        ("bound_p", TriplePattern(v(0), 7, v(1)), 30),
+        ("wildcard", TriplePattern(v(0), v(1), v(2)), 30),
+        ("bound_p_small_omega", TriplePattern(v(0), 7, v(1)), 5),
+    ]
+    for name, tp, m in cases:
+        omegas = [
+            np.stack([rng.integers(0, 500, (2,)).astype(np.int32)
+                      for _ in range(m)])
+            for _ in range(8)
+        ]
+        sel = KernelSelector(store)
+
+        dt_np = _time(lambda: brtpf_select_with_cnt(store, tp, omegas[0]))
+        dt_k = _time(lambda: sel.select_with_cnt(tp, omegas[0]))
+        sel.launches.clear()
+        dt_b = _time(lambda: sel.select_same_pattern(tp, omegas))
+        rec = sel.launches[-1]
+        solo_cells = rec.cand_streamed * (rec.pat_slots // rec.groups)
+        out[name] = (dt_np, dt_k, dt_b, rec)
+        emit(f"kernels/selector_{name}_numpy", dt_np * 1e6,
+             f"per_request")
+        emit(f"kernels/selector_{name}_kernel_interp", dt_k * 1e6,
+             f"cand={rec.cand_streamed};cells={solo_cells}")
+        emit(f"kernels/selector_{name}_kernel_batch{len(omegas)}",
+             dt_b * 1e6 / len(omegas),
+             f"per_request;cand_shared={rec.cand_streamed};"
+             f"cells={rec.cells};hbm_passes_saved={rec.groups - 1}")
     return out
 
 

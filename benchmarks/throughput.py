@@ -9,9 +9,17 @@ Validation targets: (C3) brTPF completes more queries than TPF at every
 client count, TPF times out more, both scale with clients; (C4) the
 cache raises both, TPF gains more (higher hit rate) but does not
 overtake brTPF in completed queries; average QET grows slower for brTPF.
+
+Selector-backend axis (beyond-paper): the brTPF workload is also traced
+through the *kernel* selector backend (Pallas bind-join over the store's
+candidate ranges) and replayed under the TPU launch cost model, with and
+without cross-request batching (``SimParams.batch_window_s``), so the
+server-side speedup of the kernel path is a measured comparison on the
+same request streams, not an assertion.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict
 
 from repro.core.sim import (SimParams, calibrate, collect_traces,
@@ -26,8 +34,9 @@ def run(full: bool = False) -> Dict:
     client_counts = [4, 16, 64]
     out: Dict = {}
 
-    # one trace collection per client kind (server state is stateless
-    # across requests, so traces are reusable across client counts)
+    # one trace collection per (client kind, selector backend) -- server
+    # state is stateless across requests, so traces are reusable across
+    # client counts
     server = make_server()
     params = calibrate(server, wl)
     if not full:
@@ -35,10 +44,12 @@ def run(full: bool = False) -> Dict:
         # TPF-vs-brTPF comparison is horizon-independent
         params.duration_s = 600.0
     traces = {}
-    for kind, mpr in [("tpf", None), ("brtpf", 30)]:
-        server = make_server(max_mpr=mpr or 30)
+    for kind, backend, mpr in [("tpf", "numpy", None),
+                               ("brtpf", "numpy", 30),
+                               ("brtpf-kernel", "kernel", 30)]:
+        server = make_server(max_mpr=mpr or 30, selector_backend=backend)
         traces[kind] = collect_traces(
-            server, wl, kind, max_mpr=mpr,
+            server, wl, kind.split("-")[0], max_mpr=mpr,
             request_budget=cfg.request_budget)
 
     for use_cache in (False, True):
@@ -59,6 +70,22 @@ def run(full: bool = False) -> Dict:
                     f"attempted_per_hr={res.attempts_per_hour:.0f};"
                     f"avg_qet={res.avg_qet:.2f}s;"
                     f"horizon={res.simulated_s:.0f}s")
+
+    # selector-backend axis: same brTPF request streams, kernel launch
+    # cost model, batching off vs on
+    for n in client_counts:
+        for label, window in [("batch0", 0.0), ("batch2ms", 2e-3)]:
+            kp = dataclasses.replace(params, batch_window_s=window)
+            per_client = split_workload(traces["brtpf-kernel"], n)
+            res = simulate(per_client, kp, cache_size=None,
+                           use_cache=False, wrap=True)
+            out[("brtpf-kernel", n, label)] = res
+            emit(
+                f"throughput/brtpf_kernel_c{n}_{label}", 0.0,
+                f"completed_per_hr={res.throughput_per_hour:.0f};"
+                f"timeouts={res.timeouts};"
+                f"avg_qet={res.avg_qet:.2f}s;"
+                f"horizon={res.simulated_s:.0f}s")
     return out
 
 

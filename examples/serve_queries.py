@@ -21,6 +21,10 @@ def main() -> None:
     ap.add_argument("--clients", type=int, default=16)
     ap.add_argument("--queries", type=int, default=48)
     ap.add_argument("--cache", action="store_true")
+    ap.add_argument("--selector-backend", choices=["numpy", "kernel"],
+                    default="numpy",
+                    help="origin-server selector: numpy per-pattern loop"
+                         " or the Pallas bind-join kernel path")
     args = ap.parse_args()
 
     data = generate(WatDivScale(users=1000, products=400, reviews=1500),
@@ -32,7 +36,8 @@ def main() -> None:
     params = calibrate(BrTPFServer(data.store), wl)
     rows = []
     for kind, mpr in [("tpf", None), ("brtpf", 30)]:
-        server = BrTPFServer(data.store, max_mpr=mpr or 30)
+        server = BrTPFServer(data.store, max_mpr=mpr or 30,
+                             selector_backend=args.selector_backend)
         traces = collect_traces(server, wl, kind, max_mpr=mpr,
                                 request_budget=20_000)
         per_client = split_workload(traces, args.clients)

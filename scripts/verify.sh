@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the one command that must stay green.
+#
+# Usage:
+#   scripts/verify.sh          # full tier-1 suite (ROADMAP.md command)
+#   scripts/verify.sh --fast   # tier1-marked tests only (quick gate)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--fast" ]]; then
+    exec python -m pytest -x -q -m tier1
+fi
+exec python -m pytest -x -q

@@ -1,0 +1,62 @@
+"""Version-compat shims over moving jax APIs.
+
+The repo targets whatever jax the container ships (currently 0.4.37)
+while staying forward-compatible with the renames that land in 0.5+:
+
+* ``jax.shard_map`` only exists in newer jax; 0.4.x has
+  ``jax.experimental.shard_map.shard_map``, and the replication-check
+  kwarg was renamed ``check_rep`` -> ``check_vma`` along the move.
+* ``jax.tree.flatten_with_path`` only exists in newer jax; 0.4.x has
+  ``jax.tree_util.tree_flatten_with_path``.
+
+Import from here instead of feature-testing at every call site.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:  # jax >= 0.5-ish
+    _shard_map_impl = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_SHARD_MAP_KWARGS = frozenset(
+    inspect.signature(_shard_map_impl).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kwargs):
+    """``jax.shard_map`` with the ``check_vma``/``check_rep`` rename
+    papered over (callers use the new-style ``check_vma`` name)."""
+    if check_vma is not None:
+        if "check_vma" in _SHARD_MAP_KWARGS:
+            kwargs["check_vma"] = check_vma
+        elif "check_rep" in _SHARD_MAP_KWARGS:
+            kwargs["check_rep"] = check_vma
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **kwargs)
+
+
+try:  # jax >= 0.4.26 exposes jax.tree.*, but flatten_with_path is newer
+    tree_flatten_with_path = jax.tree.flatten_with_path
+except AttributeError:
+    tree_flatten_with_path = jax.tree_util.tree_flatten_with_path
+
+
+try:  # top-level alias only exists in newer jax
+    enable_x64 = jax.enable_x64
+except AttributeError:
+    from jax.experimental import enable_x64  # noqa: F401
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` normalized to a flat dict.
+
+    jax <= 0.4.x returns a one-dict-per-computation list; newer jax
+    returns the dict directly. Either may be None/empty.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}

@@ -17,11 +17,17 @@ from .selectors import (Fragment, brtpf_cardinality, brtpf_select,
                         tpf_select)
 from .server import (BrTPFServer, MaxMprExceeded, Request,
                      DEFAULT_MAX_MPR, DEFAULT_PAGE_SIZE)
-from .store import TripleStore, store_from_ntriples
+from .store import CandidateRange, TripleStore, store_from_ntriples
 
+# KernelSelector/LaunchRecord are intentionally NOT imported here:
+# core stays importable without jax; server.py imports them lazily for
+# selector_backend="kernel", and direct users import
+# repro.core.kernel_selectors explicitly.
 __all__ = [
-    "BGP", "BrTPFClient", "BrTPFServer", "Counters", "ExecutionResult",
-    "Fragment", "LRUCache", "MaxMprExceeded", "Request", "TPFClient",
+    "BGP", "BrTPFClient", "BrTPFServer", "CandidateRange", "Counters",
+    "ExecutionResult",
+    "Fragment", "LRUCache",
+    "MaxMprExceeded", "Request", "TPFClient",
     "TermDictionary", "TriplePattern", "TripleStore", "UNBOUND",
     "bgp_from_arrays", "brtpf_cardinality", "brtpf_select", "brtpf_select_with_cnt", "compatible",
     "decode_var", "dedup_mappings", "encode_var", "evaluate_bgp_reference",

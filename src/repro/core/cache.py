@@ -33,6 +33,12 @@ class LRUCache:
         self.misses += 1
         return None
 
+    def contains(self, key: Hashable) -> bool:
+        """Non-counting peek (no hit/miss accounting, no LRU bump) --
+        used by the server's batch planner, which must not distort the
+        cache metrics the paper reports."""
+        return key in self._entries
+
     def put(self, key: Hashable, value: object) -> None:
         self._entries[key] = value
         self._entries.move_to_end(key)

@@ -85,13 +85,20 @@ class _ClientBase:
         frag = self.server.handle(req)
         after = self.server.counters
         # Structured per-request record: feeds the multi-client
-        # throughput simulation (trace replay; see core/sim.py).
+        # throughput simulation (trace replay; see core/sim.py). The
+        # kernel-launch geometry (candidates streamed / pattern slots)
+        # lets the replay re-cost the request under cross-request
+        # batching: same-pattern requests share one candidate stream.
         self._tick("http", {
             "key": req.key(),
             "lookups": after.server_lookups - before.server_lookups,
             "scanned": (after.server_triples_scanned
                         - before.server_triples_scanned),
             "recv": frag.triples_received,
+            "pattern_key": pattern.as_tuple(),
+            "cand": (after.kernel_cand_streamed
+                     - before.kernel_cand_streamed),
+            "pats": after.kernel_pat_slots - before.kernel_pat_slots,
         })
         if self._use_client_cache:
             self._client_cache[req.key()] = frag

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import enable_x64, shard_map
 from ..kernels import ops as kops
 from .rdf import TriplePattern, is_var
 from .selectors import instantiate_patterns
@@ -90,7 +91,7 @@ class FederatedStore:
             keys[sl] = keys[sl][order]
         sharding = NamedSharding(mesh, P(axis, None))
         vsharding = NamedSharding(mesh, P(axis))
-        with jax.enable_x64(True):
+        with enable_x64(True):
             keys_dev = jax.device_put(keys, vsharding)
         return cls(mesh=mesh, axis=axis,
                    triples=jax.device_put(padded, sharding),
@@ -149,7 +150,7 @@ class FederatedStore:
                 count = jax.lax.all_gather(count, axis)
                 return page, count
 
-            fn = jax.shard_map(
+            fn = shard_map(
                 shard_fn, mesh=mesh,
                 in_specs=(P(axis, None), P(axis), P(), P(), P()),
                 out_specs=(P(), P()),
@@ -205,7 +206,7 @@ class FederatedStore:
                 range_len = jax.lax.all_gather(range_len, axis)
                 return page, count, range_len
 
-            fn = jax.shard_map(
+            fn = shard_map(
                 shard_fn, mesh=mesh,
                 in_specs=(P(axis, None), P(axis), P(axis), P(), P(),
                           P(), P(), P(), P()),
@@ -244,7 +245,7 @@ class FederatedStore:
         fn = self.lowerable_windowed(capacity, window,
                                      wild_cols=tuple(wild) or (0,))
         all_pages = []
-        with jax.enable_x64(True):
+        with enable_x64(True):
             page_idx = 0
             while True:
                 pages, counts, range_len = fn(

@@ -1,0 +1,209 @@
+"""Kernel-backed bindings-restricted selectors (the server hot path).
+
+``brtpf_select_with_cnt`` in ``selectors.py`` evaluates the section-4.1
+server algorithm the way the paper's Java servlet does: one backend
+index probe + stream per instantiated pattern. This module is the same
+selector inverted for the accelerator: the store exposes the pattern's
+contiguous index range as one packed candidate block
+(:meth:`TripleStore.candidate_range`), the Pallas ``bindjoin`` kernel
+streams that block through VMEM *once* against every instantiated
+pattern, and a fixed-shape ``compact_mask`` epilogue plus a small host
+reorder produce a fragment that is byte-identical to the numpy
+selector's -- same data-triple sequence, same ordering, same
+Definition-2 ``cnt`` estimate (``selectors.brtpf_select_with_cnt`` is
+the parity oracle; ``tests/test_kernel_selectors.py`` enforces it).
+
+Cross-request batching: concurrent brTPF requests for the *same* triple
+pattern share the same candidate range, so their (padded) pattern sets
+ride one grouped kernel launch -- one HBM pass over the candidates for
+G requests instead of G passes. ``BrTPFServer.handle_batch`` feeds this
+path and the recorded per-launch geometry feeds the multi-client replay
+in ``sim.py``.
+
+Why parity holds despite the kernel's flat wildcard grid:
+
+* every triple matching an instantiated pattern of ``tp`` also matches
+  ``tp``, so ``candidate_range(tp)`` covers all per-pattern streams;
+* repeated-variable constraints are shared by *all* instantiations
+  (positions holding the same variable are either both replaced by the
+  same constant or both left as that variable), so conjoining the base
+  pattern's equality flags (``tpf_match``) restores exact semantics for
+  every pattern at once;
+* on rows passing those flags, grid-match == exact match per pattern,
+  so the kernel's first-match index reproduces the numpy selector's
+  first-occurrence dedup and its match count reproduces ``cnt``;
+* within a stream, ``store.match(p)`` order is ascending packed key
+  under p's chosen index -- recomputable on host for the (small) kept
+  set, giving the exact concatenation order.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops as kops
+from .rdf import TriplePattern, is_var
+from .selectors import instantiate_patterns
+from .store import _ORDERS, TripleStore, _pack
+
+# Candidate blocks are padded to power-of-two multiples of the kernel's
+# candidate tile so the jit cache stays bounded (log2(N) shapes) on a
+# server that sees arbitrary range sizes.
+_MIN_BUCKET = 1024
+
+
+def _bucket(n: int) -> int:
+    b = _MIN_BUCKET
+    while b < n:
+        b *= 2
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("capacity",))
+def _compact_epilogue(keep, idx_first, nmatch, base_mask, row_valid,
+                      capacity: int):
+    """Device epilogue over the grouped kernel outputs.
+
+    Combines the per-group keep grid with the base pattern's
+    repeated-variable mask and the padding-row mask, then produces the
+    fixed-shape compacted row indices + count per group and the
+    Definition-2 ``cnt`` (sum of per-row match counts over kept rows).
+    """
+    mask = keep & base_mask[:, None] & row_valid[:, None]   # (Tp, G)
+    cnts = jnp.sum(jnp.where(mask, nmatch, 0), axis=0)      # (G,)
+    rows, counts = jax.vmap(
+        lambda m: kops.compact_mask(m, capacity),
+        in_axes=1, out_axes=0)(mask)                        # (G, Tp), (G,)
+    return rows, counts, cnts
+
+
+@dataclasses.dataclass
+class LaunchRecord:
+    """Geometry/accounting of one grouped kernel launch."""
+
+    cand_streamed: int      # padded candidates streamed once (T)
+    pat_slots: int          # padded pattern slots across groups (G * Mp)
+    groups: int             # requests served by the launch
+
+    @property
+    def cells(self) -> int:
+        return self.cand_streamed * self.pat_slots
+
+
+class KernelSelector:
+    """Bind-join-kernel selector over one :class:`TripleStore`."""
+
+    def __init__(self, store: TripleStore) -> None:
+        self.store = store
+        self.launches: List[LaunchRecord] = []
+
+    # -- public API ----------------------------------------------------------
+
+    def select_with_cnt(
+        self, tp: TriplePattern, omega: Optional[np.ndarray],
+        insts: Optional[List[TriplePattern]] = None,
+    ) -> Tuple[np.ndarray, int]:
+        """Kernel-backed ``brtpf_select_with_cnt`` (byte-identical)."""
+        return self.select_same_pattern(
+            tp, [omega], None if insts is None else [insts])[0]
+
+    def select_same_pattern(
+        self, tp: TriplePattern, omegas: Sequence[Optional[np.ndarray]],
+        patterns: Optional[List[List[TriplePattern]]] = None,
+    ) -> List[Tuple[np.ndarray, int]]:
+        """Serve G same-pattern requests from ONE grouped kernel launch.
+
+        ``omegas`` is one entry per request (None = plain TPF selector);
+        ``patterns`` optionally carries the already-instantiated pattern
+        lists (the server computes them for lookup accounting -- don't
+        redo steps 1-3 of the algorithm here).
+        Returns per-request (data-triple sequence, cnt), each identical
+        to what ``brtpf_select_with_cnt(store, tp, omega_g)`` returns.
+        """
+        if patterns is None:
+            patterns = [instantiate_patterns(tp, om) for om in omegas]
+        rng = self.store.candidate_range(tp)
+        t = len(rng)
+        empty = np.empty((0, 3), dtype=np.int32)
+        if t == 0:
+            return [(empty, 0)] * len(omegas)
+
+        g = len(omegas)
+        m = max(len(p) for p in patterns)
+        pats = np.full((g, m, 3), -1, dtype=np.int32)
+        valid = np.zeros((g, m), dtype=np.int32)
+        for gi, insts in enumerate(patterns):
+            for mi, p in enumerate(insts):
+                pats[gi, mi] = [c if not is_var(c) else -1
+                                for c in p.as_tuple()]
+                valid[gi, mi] = 1
+
+        tp_comps = tp.as_tuple()
+        base_vec = kops.pattern_vec_from(
+            tuple(-1 if is_var(c) else c for c in tp_comps),
+            eq_sp=int(is_var(tp_comps[0]) and tp_comps[0] == tp_comps[1]),
+            eq_so=int(is_var(tp_comps[0]) and tp_comps[0] == tp_comps[2]),
+            eq_po=int(is_var(tp_comps[1]) and tp_comps[1] == tp_comps[2]),
+        )
+
+        # Pad the candidate block to a shape bucket (bounded jit cache).
+        tpad = _bucket(t)
+        cand = np.zeros((tpad, 3), dtype=np.int32)
+        cand[:t] = rng.triples
+        row_valid = np.zeros((tpad,), dtype=bool)
+        row_valid[:t] = True
+
+        keep, idx, nmatch = kops.bindjoin_grouped(
+            jnp.asarray(cand), jnp.asarray(pats), jnp.asarray(valid))
+        base_mask = kops.tpf_match(jnp.asarray(cand), jnp.asarray(base_vec))
+        rows, counts, cnts = _compact_epilogue(
+            keep, idx, nmatch, base_mask, jnp.asarray(row_valid),
+            capacity=tpad)
+
+        mp = kops.padded_pattern_slots(m)
+        self.launches.append(
+            LaunchRecord(cand_streamed=tpad, pat_slots=g * mp, groups=g))
+
+        rows = np.asarray(rows)
+        counts = np.asarray(counts)
+        cnts = np.asarray(cnts)
+        idx = np.asarray(idx)
+        out: List[Tuple[np.ndarray, int]] = []
+        for gi in range(g):
+            n = int(counts[gi])
+            if n == 0:
+                out.append((empty, int(cnts[gi])))
+                continue
+            kept_rows = rows[gi, :n]
+            kept = cand[kept_rows]                 # tp-index order
+            first = idx[kept_rows, gi]             # first matching pattern
+            out.append((self._stream_order(kept, first, patterns[gi]),
+                        int(cnts[gi])))
+        return out
+
+    # -- ordering epilogue ---------------------------------------------------
+
+    def _stream_order(self, kept: np.ndarray, first: np.ndarray,
+                      insts: List[TriplePattern]) -> np.ndarray:
+        """Reorder kept rows into the numpy selector's sequence order.
+
+        The numpy selector concatenates per-pattern match streams in
+        pattern order, then dedups keeping first occurrences: a triple
+        lands in the stream of the first pattern it matches, and within
+        a stream rows ascend by packed key under that pattern's chosen
+        index. ``first`` (from the kernel) gives the stream; the packed
+        key is recomputed here for the kept rows only.
+        """
+        sortkey = np.empty(kept.shape[0], dtype=np.int64)
+        for j in np.unique(first):
+            name, _ = TripleStore._choose_index(insts[j])
+            order = _ORDERS[name]
+            sel = first == j
+            sortkey[sel] = _pack(kept[sel, order[0]], kept[sel, order[1]],
+                                 kept[sel, order[2]])
+        return kept[np.lexsort((sortkey, first))]

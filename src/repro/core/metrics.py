@@ -23,6 +23,11 @@ class Counters:
     server_lookups: int = 0         # index lookups performed by the server
     server_triples_scanned: int = 0
     mappings_sent: int = 0          # solution mappings attached to requests
+    # kernel-selector launch accounting (selector_backend="kernel"):
+    kernel_launches: int = 0        # grouped bind-join kernel launches
+    kernel_cand_streamed: int = 0   # padded candidates streamed (HBM pass)
+    kernel_pat_slots: int = 0       # padded pattern slots across groups
+    kernel_batched_requests: int = 0  # requests served by shared launches
 
     def merge(self, other: "Counters") -> None:
         for f in dataclasses.fields(self):

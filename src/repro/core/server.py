@@ -9,12 +9,22 @@ paper's single-servlet design.
 Requests and responses are value objects; the "HTTP layer" is the
 ``handle`` call boundary, and network metrics are charged per page
 exactly as in section 5.1.
+
+``selector_backend`` selects how the origin server evaluates the
+bindings-restricted selector:
+
+* ``"numpy"`` -- the paper-faithful per-instantiated-pattern backend
+  loop (``selectors.brtpf_select_with_cnt``); kept as the parity oracle.
+* ``"kernel"`` -- the Pallas bind-join kernel over the store's packed
+  candidate range (``kernel_selectors.KernelSelector``); byte-identical
+  fragments, one HBM pass per request, and ``handle_batch`` coalesces
+  concurrent same-pattern requests into one grouped launch.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
-from typing import Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -73,12 +83,20 @@ class BrTPFServer:
         max_mpr: int = DEFAULT_MAX_MPR,
         meta_triples_per_page: int = DEFAULT_META_TRIPLES_PER_PAGE,
         cache: Optional[LRUCache] = None,
+        selector_backend: str = "numpy",
     ) -> None:
+        if selector_backend not in ("numpy", "kernel"):
+            raise ValueError(f"unknown selector_backend {selector_backend!r}")
         self.store = store
         self.page_size = int(page_size)
         self.max_mpr = int(max_mpr)
         self.meta_triples_per_page = int(meta_triples_per_page)
         self.cache = cache
+        self.selector_backend = selector_backend
+        self._kernel_selector = None
+        if selector_backend == "kernel":
+            from .kernel_selectors import KernelSelector
+            self._kernel_selector = KernelSelector(store)
         self.counters = Counters()
         # Selector memo: a real server streams a fragment across its
         # pages instead of recomputing the selection per page request.
@@ -118,28 +136,62 @@ class BrTPFServer:
     # -- origin-server computation (section 4.1) ----------------------------
 
     def _compute(self, req: Request) -> Fragment:
+        data, cnt = self._fragment_data(req)
+        return self._paginate(data, cnt, req)
+
+    def _fragment_data(self, req: Request) -> Tuple[np.ndarray, int]:
+        """Memoized selector evaluation: the fragment's full data-triple
+        sequence + cnt estimate, page-independent."""
         memo_key = req.key()[:2]  # (pattern, omega) -- page-independent
         memo = self._selector_memo.get(memo_key)
         if memo is not None:
             self._selector_memo.move_to_end(memo_key)
-            data, cnt = memo
             # work accounting still charges the originating computation
             # only once -- matching the paper's streaming server.
-        elif req.is_brtpf:
+            return memo
+        if req.is_brtpf:
             patterns = instantiate_patterns(req.pattern, req.omega)
             self.counters.server_lookups += len(patterns)
-            data, cnt = brtpf_select_with_cnt(self.store, req.pattern,
-                                              req.omega)
+            if self._kernel_selector is not None:
+                data, cnt = self._select_kernel(req.pattern, req.omega,
+                                                patterns)
+            else:
+                data, cnt = brtpf_select_with_cnt(self.store, req.pattern,
+                                                  req.omega)
         else:
             self.counters.server_lookups += 1
-            data = tpf_select(self.store, req.pattern)
-            cnt = self.store.cardinality(req.pattern)
-        if memo is None:
-            self.counters.server_triples_scanned += int(data.shape[0])
-            self._selector_memo[memo_key] = (data, cnt)
-            if len(self._selector_memo) > self._selector_memo_cap:
-                self._selector_memo.popitem(last=False)
+            if self._kernel_selector is not None:
+                data, cnt = self._select_kernel(req.pattern, None,
+                                                [req.pattern])
+            else:
+                data = tpf_select(self.store, req.pattern)
+                cnt = self.store.cardinality(req.pattern)
+        self._memoize(memo_key, data, cnt)
+        return data, cnt
 
+    def _select_kernel(self, tp: TriplePattern,
+                       omega: Optional[np.ndarray],
+                       insts) -> Tuple[np.ndarray, int]:
+        n0 = len(self._kernel_selector.launches)
+        data, cnt = self._kernel_selector.select_with_cnt(tp, omega,
+                                                          insts)
+        self._charge_launches(self._kernel_selector.launches[n0:])
+        return data, cnt
+
+    def _charge_launches(self, launches, batched_requests: int = 0) -> None:
+        for rec in launches:
+            self.counters.kernel_launches += 1
+            self.counters.kernel_cand_streamed += rec.cand_streamed
+            self.counters.kernel_pat_slots += rec.pat_slots
+        self.counters.kernel_batched_requests += batched_requests
+
+    def _memoize(self, memo_key, data: np.ndarray, cnt: int) -> None:
+        self.counters.server_triples_scanned += int(data.shape[0])
+        self._selector_memo[memo_key] = (data, cnt)
+        if len(self._selector_memo) > self._selector_memo_cap:
+            self._selector_memo.popitem(last=False)
+
+    def _paginate(self, data: np.ndarray, cnt: int, req: Request) -> Fragment:
         lo = req.page * self.page_size
         page = data[lo : lo + self.page_size]
         return Fragment(
@@ -150,6 +202,74 @@ class BrTPFServer:
             has_next=lo + self.page_size < data.shape[0],
             meta_triples=self.meta_triples_per_page,
         )
+
+    # -- cross-request batching (kernel backend) -----------------------------
+
+    def handle_batch(self, reqs: Sequence[Request]) -> List[Fragment]:
+        """Serve a set of concurrent page requests as one unit.
+
+        With the kernel backend, brTPF/TPF requests for the *same*
+        triple pattern whose selector results are not already available
+        (memo or HTTP cache) are coalesced into one grouped bind-join
+        launch -- one shared HBM pass over the pattern's candidate range
+        instead of one pass per request. Responses (and all paging /
+        caching / transfer accounting) are identical to issuing the
+        requests through :meth:`handle` one by one.
+
+        The batch is atomic with respect to validation: an over-maxMpR
+        member raises :class:`MaxMprExceeded` *before* any selector
+        work runs, so no member's computed fragment is ever discarded.
+        """
+        for req in reqs:
+            if (req.omega is not None
+                    and req.omega.shape[0] > self.max_mpr):
+                raise MaxMprExceeded(
+                    f"{req.omega.shape[0]} mappings > "
+                    f"maxMpR={self.max_mpr}")
+        if self._kernel_selector is None:
+            return [self.handle(r) for r in reqs]
+        # A batch may carry more distinct selections than the memo cap;
+        # widen it for the batch's lifetime so prefilled results are
+        # still there when handle() reads them, then trim back.
+        cap = self._selector_memo_cap
+        self._selector_memo_cap = cap + len(reqs)
+        try:
+            self._prefill_batch(reqs)
+            return [self.handle(r) for r in reqs]
+        finally:
+            self._selector_memo_cap = cap
+            while len(self._selector_memo) > cap:
+                self._selector_memo.popitem(last=False)
+
+    def _prefill_batch(self, reqs: Sequence[Request]) -> None:
+        groups: "OrderedDict" = OrderedDict()
+        for req in reqs:
+            if self.cache is not None and self.cache.contains(req.key()):
+                continue  # served by the proxy, no origin work
+            memo_key = req.key()[:2]
+            if memo_key in self._selector_memo:
+                continue
+            per_pattern = groups.setdefault(req.pattern.as_tuple(),
+                                            OrderedDict())
+            if memo_key not in per_pattern:
+                per_pattern[memo_key] = req
+        for members in groups.values():
+            member_reqs = list(members.values())
+            if len(member_reqs) < 2:
+                continue  # solo requests take the normal handle() path
+            tp = member_reqs[0].pattern
+            omegas = [r.omega if r.is_brtpf else None
+                      for r in member_reqs]
+            insts = [instantiate_patterns(tp, om) for om in omegas]
+            n0 = len(self._kernel_selector.launches)
+            results = self._kernel_selector.select_same_pattern(
+                tp, omegas, insts)
+            self._charge_launches(self._kernel_selector.launches[n0:],
+                                  batched_requests=len(member_reqs))
+            for req, patterns, (data, cnt) in zip(member_reqs, insts,
+                                                  results):
+                self.counters.server_lookups += len(patterns)
+                self._memoize(req.key()[:2], data, cnt)
 
     # -- convenience ---------------------------------------------------------
 

@@ -42,6 +42,13 @@ class HttpRecord:
     lookups: int
     scanned: int
     recv: int
+    # kernel-backend launch geometry (zero for numpy-backend traces):
+    # ``cand`` padded candidates streamed, ``pats`` padded pattern slots
+    # of this request's launch share; ``pattern_key`` identifies requests
+    # that can share one candidate stream under cross-request batching.
+    pattern_key: tuple = ()
+    cand: int = 0
+    pats: int = 0
 
 
 @dataclasses.dataclass
@@ -104,6 +111,19 @@ class SimParams:
     # (section 6.3); latency/client overhead amortize over the window
     pipeline_depth: int = 8
     max_events: int = 4_000_000        # replay safety valve
+    # -- kernel selector backend (TPU projection) ---------------------------
+    # Used for requests whose trace carries launch geometry (cand > 0).
+    # Defaults project a TPU core: ~1e11 int32 compare cells/s on the
+    # (8 x 128) VPU, ~1 TB/s effective HBM for the 12 B/triple candidate
+    # stream, and a fixed per-launch dispatch overhead. The numbers scale
+    # the comparison, not its direction (kernel >> per-pattern scan).
+    kernel_launch_overhead_s: float = 2.0e-5
+    kernel_cell_s: float = 1.0e-11       # per compare-grid cell
+    kernel_stream_s: float = 1.2e-11     # per candidate triple streamed
+    # > 0 enables server-side cross-request batching: same-pattern
+    # requests arriving while a launch is still queued share its
+    # candidate stream and pay only their marginal pattern-slot cells.
+    batch_window_s: float = 0.0
 
 
 def calibrate(server: BrTPFServer, workload, reps: int = 3) -> SimParams:
@@ -157,11 +177,25 @@ class SimResult:
         return self.qet_sum / self.completed if self.completed else 0.0
 
 
-class _Server:
-    """k identical workers + FIFO queue."""
+@dataclasses.dataclass
+class _Launch:
+    """One (possibly grouped) kernel launch queued on a worker."""
 
-    def __init__(self, workers: int) -> None:
+    key: tuple
+    start: float                 # when it begins executing (no more joins)
+    done: float                  # completion; grows as requests join
+    worker: int
+    waiters: List[tuple] = dataclasses.field(default_factory=list)
+
+
+class _Server:
+    """k identical workers + FIFO queue (+ optional launch batching)."""
+
+    def __init__(self, workers: int, batch_window: float = 0.0) -> None:
         self.free_at = [0.0] * workers
+        self.batch_window = batch_window
+        # pattern_key -> newest still-queued launch for that pattern.
+        self._open: Dict[tuple, _Launch] = {}
 
     def schedule(self, arrival: float, service: float) -> float:
         """Returns completion time; assigns the earliest-free worker."""
@@ -170,6 +204,39 @@ class _Server:
         done = start + service
         self.free_at[i] = done
         return done
+
+    def schedule_launch(self, arrival: float, key: tuple, shared: float,
+                        marginal: float) -> Tuple[_Launch, bool]:
+        """Schedule one kernel launch, batching where possible.
+
+        ``shared`` is the cost paid once per launch (dispatch overhead +
+        candidate HBM stream); ``marginal`` is this request's own
+        pattern-slot compare cells. A request arriving before an earlier
+        same-key launch *starts* joins it: the launch grows by the
+        marginal cost only, modelling one padded grouped launch
+        (``BrTPFServer.handle_batch``); every member completes together
+        at the launch's final ``done``. ``batch_window`` > 0 delays each
+        launch start to give concurrent requests time to coalesce.
+
+        Returns (launch, created).
+        """
+        if self.batch_window > 0.0:
+            open_ = self._open.get(key)
+            if open_ is not None and arrival <= open_.start:
+                open_.done += marginal
+                # the launch grew by `marginal`, so this worker's whole
+                # queue (the launch plus anything accepted after it)
+                # shifts by the same amount -- never rewind free_at
+                self.free_at[open_.worker] += marginal
+                return open_, False
+        i = int(np.argmin(self.free_at))
+        start = max(arrival, self.free_at[i]) + self.batch_window
+        launch = _Launch(key=key, start=start,
+                         done=start + shared + marginal, worker=i)
+        self.free_at[i] = launch.done
+        if self.batch_window > 0.0:
+            self._open[key] = launch
+        return launch, True
 
 
 @dataclasses.dataclass
@@ -193,7 +260,8 @@ def simulate(traces_per_client: Sequence[Sequence[QueryTrace]],
     Clients restart their sequence if they exhaust it before the hour is
     up (the paper's per-core 193-query sequences were sized not to).
     """
-    server = _Server(params.server_workers)
+    server = _Server(params.server_workers,
+                     batch_window=params.batch_window_s)
     cache = LRUCache(cache_size) if use_cache else None
     completed = timeouts = attempted = 0
     qet_sum = 0.0
@@ -203,12 +271,30 @@ def simulate(traces_per_client: Sequence[Sequence[QueryTrace]],
     heap: List[Tuple[float, int]] = [(0.0, ci)
                                      for ci in range(len(states))]
     heapq.heapify(heap)
+    launches: List[_Launch] = []   # launch i <-> heap id -(i + 1)
     events = 0
     frontier = 0.0
+    depth = max(params.pipeline_depth, 1)
+
+    def resume_waiters(launch: _Launch) -> None:
+        # every member of a grouped launch completes at the final done
+        for wci, wev in launch.waiters:
+            wt = (launch.done + params.net_latency_s / depth
+                  + wev.recv * params.bytes_per_triple
+                  / params.bandwidth_bps
+                  + params.client_overhead_s / depth)
+            heapq.heappush(heap, (wt, wci))
 
     while heap:
         t, ci = heapq.heappop(heap)
         frontier = max(frontier, min(t, params.duration_s))
+        if ci < 0:
+            launch = launches[-ci - 1]
+            if t < launch.done:     # grew after this event was queued
+                heapq.heappush(heap, (launch.done, ci))
+            else:
+                resume_waiters(launch)
+            continue
         if t >= params.duration_s:
             continue
         st = states[ci]
@@ -244,7 +330,9 @@ def simulate(traces_per_client: Sequence[Sequence[QueryTrace]],
 
         ev = trace.events[st.ev]
         st.ev += 1
-        depth = max(params.pipeline_depth, 1)
+        events += 1
+        if events > params.max_events:
+            break
         if isinstance(ev, HttpRecord):
             t += params.net_latency_s / depth
             hit = False
@@ -254,6 +342,28 @@ def simulate(traces_per_client: Sequence[Sequence[QueryTrace]],
                     cache.put(ev.key, True)
             if hit:
                 t += params.cache_hit_s
+            elif ev.cand > 0:
+                # kernel-backend request: per-launch cost model, with
+                # optional cross-request batching on the pattern key.
+                shared = (params.kernel_launch_overhead_s
+                          + ev.cand * params.kernel_stream_s)
+                # per-request work that never batches: HTTP handling +
+                # this request's own pattern-slot compare cells
+                marginal = (params.req_overhead_s
+                            + ev.cand * ev.pats * params.kernel_cell_s)
+                launch, created = server.schedule_launch(
+                    t, ev.pattern_key, shared, marginal)
+                if params.batch_window_s > 0.0:
+                    # block this client on the launch: it resumes (with
+                    # its response transfer) when the launch completes,
+                    # which may move later if more requests join.
+                    launch.waiters.append((ci, ev))
+                    if created:
+                        launches.append(launch)
+                        heapq.heappush(heap,
+                                       (launch.done, -len(launches)))
+                    continue
+                t = launch.done
             else:
                 service = (params.req_overhead_s
                            + ev.lookups * params.lookup_s
@@ -266,9 +376,6 @@ def simulate(traces_per_client: Sequence[Sequence[QueryTrace]],
         else:  # ('join', units)
             t += ev[1] * params.join_s_per_triple
         heapq.heappush(heap, (t, ci))
-        events += 1
-        if events > params.max_events:
-            break
 
     simulated = (params.duration_s if events <= params.max_events
                  else frontier)

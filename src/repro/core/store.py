@@ -52,6 +52,34 @@ class _Index:
     perm: np.ndarray             # int32 [N], perm into the triple array
 
 
+@dataclasses.dataclass
+class CandidateRange:
+    """The contiguous prefix range a pattern maps to in its chosen index.
+
+    This is the store's device-facing contract: ``triples`` is the packed
+    candidate block the Pallas bind-join kernel streams through VMEM in
+    one HBM pass (index order, hence deterministic), and ``(index, lo,
+    hi, prefix_len)`` identify the range for paging/accounting. Every
+    triple matching the pattern -- or any instantiation of it -- lies in
+    this range.
+    """
+
+    index: str                   # index name: "spo" | "pos" | "osp"
+    lo: int                      # range start in the index
+    hi: int                      # range end (exclusive)
+    prefix_len: int              # bound components covered by the prefix
+    triples: np.ndarray          # int32 [hi - lo, 3], in index order
+
+    def __len__(self) -> int:
+        return self.hi - self.lo
+
+    @property
+    def components(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Structure-of-arrays view (s, p, o) -- the kernel input layout."""
+        t = self.triples
+        return t[:, 0], t[:, 1], t[:, 2]
+
+
 class TripleStore:
     """Sorted-index triple store over ``int32 [N, 3]`` triples."""
 
@@ -127,6 +155,19 @@ class TripleStore:
         return name, lo, hi, plen
 
     # -- public API (the HDT-backend contract) ------------------------------
+
+    def candidate_range(self, tp: TriplePattern) -> CandidateRange:
+        """Candidate block for ``tp`` as packed arrays (kernel input).
+
+        The chosen index's bound-prefix range, materialized in index
+        order. Supersets the exact match set (non-prefix bound
+        components and repeated-variable constraints are *not* applied
+        here -- the bind-join/tpf-match kernels resolve those on device).
+        """
+        name, lo, hi, plen = self._prefix_range(tp)
+        idx = self._indexes[name]
+        return CandidateRange(index=name, lo=lo, hi=hi, prefix_len=plen,
+                              triples=self.triples[idx.perm[lo:hi]])
 
     def cardinality(self, tp: TriplePattern) -> int:
         """Cardinality estimate ``cnt`` (Definition 2).

@@ -6,6 +6,8 @@
 Each kernel ships with a pure-jnp oracle in ``ref.py``; ``ops.py`` holds
 the padded/jit public entry points (interpret mode off-TPU).
 """
-from .ops import bindjoin, compact_mask, pattern_vec_from, tpf_match
+from .ops import (bindjoin, bindjoin_grouped, compact_mask,
+                  pattern_vec_from, tpf_match)
 
-__all__ = ["bindjoin", "compact_mask", "pattern_vec_from", "tpf_match"]
+__all__ = ["bindjoin", "bindjoin_grouped", "compact_mask",
+           "pattern_vec_from", "tpf_match"]

@@ -24,6 +24,15 @@ VMEM per step at (BT, BM) = (1024, 128): compare grid 1024*128*4 B
 = 512 KiB for the int32 index grid plus 3 * 4 KiB pattern/candidate
 vectors -- comfortably inside the ~16 MiB VMEM budget, and the minor
 dimension is a full 128-lane multiple.
+
+The *grouped* variant serves the server's cross-request batching: G
+concurrent brTPF requests for the same triple pattern share one HBM pass
+over the (identical) candidate range. Their pattern sets are padded to a
+common M and laid out side by side on the m axis; the m-tile -> group
+mapping is static (tiles_per_group = M // BM), so outputs land in
+per-group (BT, 1) columns of (T, G) result arrays, and the per-row match
+*count* output gives each request its Definition-2 ``cnt`` estimate from
+the same launch.
 """
 from __future__ import annotations
 
@@ -115,3 +124,101 @@ def bindjoin_pallas(cand_s, cand_p, cand_o, pat_s, pat_p, pat_o, pat_valid,
     )(cand2(cand_s), cand2(cand_p), cand2(cand_o),
       pat2(pat_s), pat2(pat_p), pat2(pat_o), pat2(pat_valid))
     return keep.reshape(t), idx.reshape(t)
+
+
+def _bindjoin_grouped_kernel(cs_ref, cp_ref, co_ref, ps_ref, pp_ref,
+                             po_ref, pv_ref, keep_ref, idx_ref, nmatch_ref,
+                             *, bm: int, m_per_group: int):
+    tiles_per_group = m_per_group // bm
+    m_step = pl.program_id(1) % tiles_per_group   # m-tile within the group
+
+    cs = cs_ref[...]          # (BT, 1) int32
+    cp = cp_ref[...]
+    co = co_ref[...]
+    ps = ps_ref[...]          # (1, BM) int32, this group's pattern tile
+    pp = pp_ref[...]
+    po = po_ref[...]
+    pv = pv_ref[...]          # (1, BM) int32 validity
+
+    comp = (
+        ((ps < 0) | (cs == ps))
+        & ((pp < 0) | (cp == pp))
+        & ((po < 0) | (co == po))
+        & (pv != 0)
+    )                          # (BT, BM) bool
+
+    any_m = jnp.any(comp, axis=1, keepdims=True)              # (BT, 1)
+    cnt_m = jnp.sum(comp.astype(jnp.int32), axis=1,
+                    keepdims=True)                            # (BT, 1)
+    # Within-group pattern index of each column in this m-tile.
+    col = jax.lax.broadcasted_iota(jnp.int32, comp.shape, 1)
+    col = col + m_step * bm
+    big = jnp.int32(m_per_group)
+    first = jnp.min(jnp.where(comp, col, big), axis=1,
+                    keepdims=True).astype(jnp.int32)          # (BT, 1)
+
+    @pl.when(m_step == 0)
+    def _init():
+        keep_ref[...] = any_m.astype(jnp.int32)
+        idx_ref[...] = first
+        nmatch_ref[...] = cnt_m
+
+    @pl.when(m_step != 0)
+    def _accum():
+        keep_ref[...] = jnp.maximum(keep_ref[...], any_m.astype(jnp.int32))
+        idx_ref[...] = jnp.minimum(idx_ref[...], first)
+        nmatch_ref[...] = nmatch_ref[...] + cnt_m
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("groups", "bt", "bm", "interpret"))
+def bindjoin_grouped_pallas(cand_s, cand_p, cand_o, pat_s, pat_p, pat_o,
+                            pat_valid, *, groups: int,
+                            bt: int = DEFAULT_BT, bm: int = DEFAULT_BM,
+                            interpret: bool = False):
+    """Grouped bind-join filter: one candidate pass, G pattern sets.
+
+    Pattern inputs are flat ``int32 [G * Mp]`` with ``Mp`` (= per-group
+    padded pattern count) a multiple of ``bm``; candidates ``int32 [T]``
+    with ``T`` a multiple of ``bt`` (``ops.bindjoin_grouped`` pads).
+    Returns (keep int32[T, G], idx int32[T, G], nmatch int32[T, G]) where
+    ``idx == Mp`` when a row matches none of group g's patterns and
+    ``nmatch`` counts group g's matching patterns per row.
+    """
+    t = cand_s.shape[0]
+    gm = pat_s.shape[0]
+    assert gm % groups == 0, (gm, groups)
+    mp = gm // groups
+    assert t % bt == 0 and mp % bm == 0, (t, mp, bt, bm)
+    tiles_per_group = mp // bm
+
+    cand2 = lambda x: x.reshape(t, 1)
+    pat2 = lambda x: x.reshape(1, gm)
+
+    grid = (t // bt, gm // bm)
+    kernel = functools.partial(_bindjoin_grouped_kernel, bm=bm,
+                               m_per_group=mp)
+    out_spec = pl.BlockSpec((bt, 1),
+                            lambda i, j: (i, j // tiles_per_group))
+    keep, idx, nmatch = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),   # cand s
+            pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),   # cand p
+            pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),   # cand o
+            pl.BlockSpec((1, bm), lambda i, j: (0, j)),   # pat s
+            pl.BlockSpec((1, bm), lambda i, j: (0, j)),   # pat p
+            pl.BlockSpec((1, bm), lambda i, j: (0, j)),   # pat o
+            pl.BlockSpec((1, bm), lambda i, j: (0, j)),   # pat valid
+        ],
+        out_specs=[out_spec, out_spec, out_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, groups), jnp.int32),
+            jax.ShapeDtypeStruct((t, groups), jnp.int32),
+            jax.ShapeDtypeStruct((t, groups), jnp.int32),
+        ],
+        interpret=interpret,
+    )(cand2(cand_s), cand2(cand_p), cand2(cand_o),
+      pat2(pat_s), pat2(pat_p), pat2(pat_o), pat2(pat_valid))
+    return keep, idx, nmatch

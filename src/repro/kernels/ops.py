@@ -15,7 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import ref
-from .bindjoin import DEFAULT_BM, DEFAULT_BT, bindjoin_pallas
+from .bindjoin import (DEFAULT_BM, DEFAULT_BT, bindjoin_grouped_pallas,
+                       bindjoin_pallas)
 from .tpf_match import DEFAULT_BR, LANES, tpf_match_pallas
 
 
@@ -64,6 +65,58 @@ def bindjoin(cand: jnp.ndarray, patterns: jnp.ndarray,
         keep, idx = ref.bindjoin_ref(cs, cp, co, ps, pp, po, pv)
         keep = keep.astype(jnp.int32)
     return keep[:t].astype(bool), idx[:t]
+
+
+def padded_pattern_slots(m: int, bm: int = DEFAULT_BM) -> int:
+    """Per-group pattern-slot count after padding to the m-tile size --
+    the single source of truth for the launch geometry that
+    ``bindjoin_grouped`` uses and the selector/sim cost models charge."""
+    return max(m + (-m) % bm, bm)
+
+
+def bindjoin_grouped(cand: jnp.ndarray, patterns: jnp.ndarray,
+                     pat_valid: jnp.ndarray, *, bt: int = DEFAULT_BT,
+                     bm: int = DEFAULT_BM, use_pallas: bool = True
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Grouped bind-join filter: G pattern sets, one candidate pass.
+
+    Args:
+      cand: int32 [T, 3] candidate data triples (shared by all groups).
+      patterns: int32 [G, M, 3] per-group instantiated patterns
+        (component < 0 = wild).
+      pat_valid: int32 [G, M] (0 marks padding rows).
+
+    Returns:
+      keep:   bool  [T, G] -- triple joins with >= 1 of group g's patterns.
+      idx:    int32 [T, G] -- first matching within-group pattern index
+        (= padded M if none).
+      nmatch: int32 [T, G] -- matching-pattern count (cnt contribution).
+    """
+    t = cand.shape[0]
+    g, m = patterns.shape[0], patterns.shape[1]
+    cs = _pad_to(cand[:, 0], bt, 0)
+    cp = _pad_to(cand[:, 1], bt, 0)
+    co = _pad_to(cand[:, 2], bt, 0)
+    mp = padded_pattern_slots(m, bm)
+
+    def pad_flat(x, fill):
+        out = jnp.full((g, mp), fill, dtype=x.dtype)
+        return out.at[:, :m].set(x).reshape(g * mp)
+
+    ps = pad_flat(patterns[:, :, 0], 0)
+    pp = pad_flat(patterns[:, :, 1], 0)
+    po = pad_flat(patterns[:, :, 2], 0)
+    pv = pad_flat(pat_valid.astype(jnp.int32), 0)
+    if use_pallas:
+        keep, idx, nmatch = bindjoin_grouped_pallas(
+            cs, cp, co, ps, pp, po, pv, groups=g, bt=bt, bm=bm,
+            interpret=_use_interpret())
+    else:
+        keep, idx, nmatch = ref.bindjoin_grouped_ref(
+            cs, cp, co, ps.reshape(g, mp), pp.reshape(g, mp),
+            po.reshape(g, mp), pv.reshape(g, mp))
+        keep = keep.astype(jnp.int32)
+    return keep[:t].astype(bool), idx[:t], nmatch[:t]
 
 
 def tpf_match(cand: jnp.ndarray, pattern_vec: jnp.ndarray, *,

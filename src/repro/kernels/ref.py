@@ -48,6 +48,41 @@ def bindjoin_ref(cand_s, cand_p, cand_o, pat_s, pat_p, pat_o, pat_valid):
     return keep, idx
 
 
+def bindjoin_grouped_ref(cand_s, cand_p, cand_o, pat_s, pat_p, pat_o,
+                         pat_valid):
+    """Reference grouped bind-join filter.
+
+    Pattern components are ``[G, M]`` (G request groups sharing one
+    candidate pass). Returns per-group results:
+
+      keep[T, G]    -- row matches >= 1 valid pattern of group g
+      idx[T, G]     -- smallest matching within-group pattern index
+                       (= M when none)
+      nmatch[T, G]  -- number of group g's patterns the row matches
+                       (the Definition-2 ``cnt`` contribution of the row)
+    """
+    m = pat_s.shape[1]
+    cs = cand_s[:, None, None]
+    cp = cand_p[:, None, None]
+    co = cand_o[:, None, None]
+    ms = pat_s[None, :, :]
+    mp = pat_p[None, :, :]
+    mo = pat_o[None, :, :]
+    comp = (
+        ((ms < 0) | (cs == ms))
+        & ((mp < 0) | (cp == mp))
+        & ((mo < 0) | (co == mo))
+        & (pat_valid[None, :, :] != 0)
+    )  # [T, G, M]
+    keep = jnp.any(comp, axis=-1)
+    nmatch = jnp.sum(comp.astype(jnp.int32), axis=-1)
+    big = jnp.int32(m)
+    idx_grid = jnp.where(
+        comp, jnp.arange(m, dtype=jnp.int32)[None, None, :], big)
+    idx = jnp.min(idx_grid, axis=-1).astype(jnp.int32)
+    return keep, idx, nmatch
+
+
 def tpf_match_ref(cand_s, cand_p, cand_o, pattern_vec):
     """Reference triple-pattern matcher.
 

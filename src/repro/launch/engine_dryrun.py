@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import enable_x64
 from repro.core.federation import FederatedStore
 from repro.launch import roofline as RL
 from repro.launch.mesh import make_production_mesh
@@ -68,7 +69,7 @@ def lower_variant(variant: str, out_dir: str):
     sp = specs(mesh, shard_n)
 
     t0 = time.time()
-    with jax.enable_x64(True):
+    with enable_x64(True):
         if variant == "baseline":
             fn = fed.lowerable(CAPACITY)
             lowered = fn.lower(sp["triples"], sp["valid"], sp["pats"],

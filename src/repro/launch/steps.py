@@ -71,14 +71,20 @@ def make_train_step(model: ModelDef, optimizer: AdamW,
                 acc, loss_sum = carry
                 (loss, metrics), grads = jax.value_and_grad(
                     loss_fn, has_aux=True)(params, mb)
+                # Accumulate the raw fp32 *sum*; the mean weighting is
+                # applied once after the scan. Dividing inside the loop
+                # rounds every microbatch contribution for non-power-of-
+                # two grad_accum.
                 acc = jax.tree.map(
-                    lambda a, g: a + g.astype(jnp.float32) / grad_accum,
-                    acc, grads)
+                    lambda a, g: a + g.astype(jnp.float32), acc, grads)
                 acc = zero_constrain(acc)
-                return (acc, loss_sum + loss / grad_accum), metrics
+                return (acc, loss_sum + loss), metrics
 
             (grads, loss), metrics_stack = jax.lax.scan(
                 body, (acc0, jnp.zeros((), jnp.float32)), micro)
+            inv = jnp.float32(1.0 / grad_accum)
+            grads = jax.tree.map(lambda a: a * inv, grads)
+            loss = loss * inv
             metrics = jax.tree.map(lambda m: m[-1], metrics_stack)
 
         updates, opt_state, opt_metrics = optimizer.update(
@@ -87,7 +93,12 @@ def make_train_step(model: ModelDef, optimizer: AdamW,
         out_metrics = {"loss": loss, **metrics, **opt_metrics}
         return params, opt_state, out_metrics
 
-    return train_step
+    # jit here so the grad_accum=1 and grad_accum=k paths run the same
+    # compiled backward numerics (eager per-op dispatch reassociates
+    # reductions differently from the scan body XLA compiles, which is
+    # visible through Adam's eps on near-cancelling gradients). Callers
+    # that re-wrap with jax.jit(..., donate_argnums) just inline this.
+    return jax.jit(train_step)
 
 
 def make_grad_step(model: ModelDef) -> Callable:

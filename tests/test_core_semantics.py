@@ -8,6 +8,8 @@ from repro.core import (BGP, BrTPFClient, BrTPFServer, TPFClient,
                         instantiate_patterns, parse_bgp, tpf_select,
                         MaxMprExceeded, Request, TermDictionary)
 
+pytestmark = pytest.mark.tier1
+
 
 def small_graph(seed=0, n=200, terms=12):
     rng = np.random.default_rng(seed)

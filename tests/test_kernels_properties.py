@@ -1,0 +1,32 @@
+"""Property-based (hypothesis) kernel tests, split from test_kernels.py
+so the non-property kernel tests stay collectible when hypothesis is not
+installed in the environment."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this environment")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.kernels import bindjoin  # noqa: E402
+
+from test_kernels import rand_patterns, rand_triples  # noqa: E402
+
+
+class TestBindJoinProperties:
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(1, 60), st.integers(1, 20), st.integers(0, 2**31 - 1))
+    def test_property_matches_oracle(self, t, m, seed):
+        rng = np.random.default_rng(seed)
+        cand = rand_triples(rng, t, terms=6)
+        pats = rand_patterns(rng, m, terms=6, wild_frac=0.6)
+        valid = np.ones(m, np.int32)
+        keep, _ = bindjoin(jnp.asarray(cand), jnp.asarray(pats),
+                           jnp.asarray(valid))
+        want = np.zeros(t, bool)
+        for i, c in enumerate(cand):
+            for pm in pats:
+                ok = all(pm[k] < 0 or pm[k] == c[k] for k in range(3))
+                want[i] |= ok
+        np.testing.assert_array_equal(np.asarray(keep), want)

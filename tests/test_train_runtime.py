@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import shard_map
 from repro.train import checkpoint as ckpt
 from repro.train.grad_compress import (compress_with_feedback,
                                        compressed_psum_tree, dequantize,
@@ -236,7 +237,7 @@ class TestCompression:
         def fn(g, e):
             return compressed_psum_tree(g, e, "data")
 
-        out, new_e = jax.shard_map(
+        out, new_e = shard_map(
             fn, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
             check_vma=False)(grads, errs)
         np.testing.assert_allclose(np.asarray(out["w"]),
