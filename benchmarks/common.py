@@ -10,9 +10,8 @@ import dataclasses
 import functools
 import os
 import time
-from typing import List, Optional, Tuple
+from typing import Optional
 
-import numpy as np
 
 from repro.core import BrTPFClient, BrTPFServer, LRUCache, TPFClient
 from repro.data.watdiv import (WatDivData, WatDivScale, generate,

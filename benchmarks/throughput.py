@@ -19,13 +19,20 @@ same request streams, not an assertion.
 """
 from __future__ import annotations
 
+import asyncio
 import dataclasses
+import json
+import os
+import time
 from typing import Dict
 
-from repro.core.sim import (SimParams, calibrate, collect_traces,
-                            simulate, split_workload)
+from repro.core import AsyncBrTPFClient, AsyncBrTPFServer
+from repro.core.sim import (calibrate, collect_traces, simulate,
+                            split_workload)
 
-from .common import BenchConfig, dataset, emit, make_server, workload
+from .common import BenchConfig, emit, make_server, workload
+
+BUDGETS_PATH = os.path.join(os.path.dirname(__file__), "budgets.json")
 
 
 def run(full: bool = False) -> Dict:
@@ -89,6 +96,121 @@ def run(full: bool = False) -> Dict:
     return out
 
 
+# ---------------------------------------------------------------------------
+# Concurrency axis: REAL in-flight clients over the async front end
+# ---------------------------------------------------------------------------
+
+
+def _run_concurrent(backend: str, n: int, wl, request_budget: int,
+                    batch_window_s: float = 2e-3,
+                    max_batch: int = 64) -> Dict:
+    """Run ``n`` concurrent AsyncBrTPFClients over one front end;
+    returns wall-clock + launch accounting."""
+    server = make_server(selector_backend=backend)
+    front = AsyncBrTPFServer(server, batch_window_s=batch_window_s,
+                             max_batch=max_batch)
+    per_client = split_workload(wl, n)
+
+    async def main():
+        clients = [AsyncBrTPFClient(front, request_budget=request_budget)
+                   for _ in range(n)]
+        try:
+            return await asyncio.gather(
+                *[c.run_workload(w)
+                  for c, w in zip(clients, per_client)])
+        finally:
+            await front.aclose()
+
+    t0 = time.perf_counter()
+    results = asyncio.run(main())
+    wall = time.perf_counter() - t0
+    c = server.counters
+    reqs = max(c.num_requests, 1)
+    return {
+        "wall_s": wall,
+        "requests": c.num_requests,
+        "req_per_s": c.num_requests / max(wall, 1e-9),
+        "launches": c.kernel_launches,
+        "launches_per_request": c.kernel_launches / reqs,
+        "batched_requests": c.kernel_batched_requests,
+        "flushes": front.stats.flushes,
+        "mean_batch": front.stats.mean_batch,
+        "completed": sum(sum(1 for r in rs if not r.timed_out)
+                         for rs in results),
+    }
+
+
+def run_async(full: bool = False, smoke: bool = False) -> Dict:
+    """Wall-clock concurrency axis: 1/4/16/64 in-flight clients on the
+    real async batching front end, numpy vs kernel backend."""
+    cfg = BenchConfig.default()
+    wl = list(workload())
+    if smoke:
+        wl = wl[:6]
+        grid = [("kernel", 1), ("kernel", 8)]
+    else:
+        if not full:
+            wl = wl[:12]
+        counts = [1, 4, 16, 64]
+        grid = [(b, n) for b in ("numpy", "kernel") for n in counts]
+    out: Dict = {}
+    for backend, n in grid:
+        r = _run_concurrent(backend, n, wl, cfg.request_budget)
+        out[(backend, n)] = r
+        emit(
+            f"throughput/async_{backend}_c{n}", 0.0,
+            f"req_per_s={r['req_per_s']:.0f};"
+            f"requests={r['requests']};"
+            f"launches_per_request={r['launches_per_request']:.3f};"
+            f"batched={r['batched_requests']};"
+            f"mean_batch={r['mean_batch']:.1f};"
+            f"completed={r['completed']};"
+            f"wall={r['wall_s']:.1f}s")
+    return out
+
+
+def check_budgets(results: Dict, path: str = BUDGETS_PATH) -> int:
+    """Gate kernel-backend launch coalescing against checked-in budgets.
+
+    Budgets are *counts*, not wall-clock times, so the gate is stable
+    across CI machine speeds. Returns the number of violations.
+    """
+    with open(path) as fh:
+        budgets = json.load(fh)
+    failures = 0
+    for key, limit in budgets.items():
+        name, metric = key.rsplit(":", 1)
+        backend, _, cn = name.partition("_c")
+        r = results.get((backend, int(cn)))
+        if r is None:
+            print(f"budget SKIP {key}: combination not measured")
+            continue
+        value = r[metric]
+        ok = value <= limit
+        print(f"budget {'OK  ' if ok else 'FAIL'} {key}: "
+              f"{value:.3f} <= {limit}")
+        failures += 0 if ok else 1
+    return failures
+
+
+def main(argv=None) -> int:
+    import argparse
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--full", action="store_true")
+    parser.add_argument("--smoke", action="store_true",
+                        help="tiny concurrency run + budget gate (CI job 3)")
+    parser.add_argument("--async-only", action="store_true",
+                        help="skip the trace-replay simulation section")
+    args = parser.parse_args(argv)
+    if args.smoke:
+        results = run_async(smoke=True)
+        failures = check_budgets(results)
+        return 1 if failures else 0
+    if not args.async_only:
+        run(full=args.full)
+    run_async(full=args.full)
+    return 0
+
+
 if __name__ == "__main__":
-    import sys
-    run(full="--full" in sys.argv)
+    raise SystemExit(main())

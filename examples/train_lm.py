@@ -16,7 +16,7 @@ import tempfile
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_arch, reduced_for_smoke
+from repro.configs import get_arch
 from repro.data.pipeline import BrTPFDataPipeline, SyntheticCorpus
 from repro.launch.steps import make_train_step
 from repro.models.model import build_model

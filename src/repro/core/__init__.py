@@ -5,9 +5,12 @@ selector functions per Definitions 1-2 (``selectors``), the combined
 TPF/brTPF server (``server``), the two client algorithms (``client``),
 LRU cache simulation (``cache``), and request accounting (``metrics``).
 """
+from .batching import (AsyncBrTPFServer, BatchStats, drive_streams,
+                       serve_concurrent)
 from .bgp import BGP, bgp_from_arrays, evaluate_bgp_reference, parse_bgp
 from .cache import LRUCache, request_key
-from .client import BrTPFClient, ExecutionResult, TPFClient
+from .client import (AsyncBrTPFClient, BrTPFClient, ExecutionResult,
+                     TPFClient, plan_join_order)
 from .metrics import Counters
 from .rdf import (TermDictionary, TriplePattern, UNBOUND, compatible,
                   decode_var, dedup_mappings, encode_var, is_var,
@@ -24,10 +27,12 @@ from .store import CandidateRange, TripleStore, store_from_ntriples
 # selector_backend="kernel", and direct users import
 # repro.core.kernel_selectors explicitly.
 __all__ = [
+    "AsyncBrTPFClient", "AsyncBrTPFServer", "BatchStats",
     "BGP", "BrTPFClient", "BrTPFServer", "CandidateRange", "Counters",
     "ExecutionResult",
     "Fragment", "LRUCache",
     "MaxMprExceeded", "Request", "TPFClient",
+    "drive_streams", "plan_join_order", "serve_concurrent",
     "TermDictionary", "TriplePattern", "TripleStore", "UNBOUND",
     "bgp_from_arrays", "brtpf_cardinality", "brtpf_select", "brtpf_select_with_cnt", "compatible",
     "decode_var", "dedup_mappings", "encode_var", "evaluate_bgp_reference",

@@ -77,7 +77,7 @@ def bgp_from_arrays(patterns: Sequence[Sequence[int]]) -> BGP:
 def evaluate_bgp_reference(triples: np.ndarray, bgp: BGP) -> np.ndarray:
     """Brute-force BGP evaluation oracle (for tests): nested-loop join
     over the raw triple array. Returns solution mappings int32 [R, V]."""
-    from .rdf import UNBOUND, mapping_from_triple, compatible, merge
+    from .rdf import UNBOUND, mapping_from_triple, merge
 
     solutions = [np.full((bgp.num_vars,), UNBOUND, dtype=np.int32)]
     for tp in bgp.patterns:

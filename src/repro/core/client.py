@@ -17,8 +17,9 @@ through the same ``handle`` boundary so every metric is comparable.
 """
 from __future__ import annotations
 
+import asyncio
 import dataclasses
-from typing import Callable, Iterator, List, Optional, Tuple
+from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
@@ -181,6 +182,28 @@ class TPFClient(_ClientBase):
             self._recurse(rest, merged, num_vars, acc)
 
 
+def plan_join_order(bgp: BGP, cnts: Sequence[int]) -> List[int]:
+    """Fixed left-deep join order (paper section 4.3): smallest first-page
+    cardinality estimate first, then greedily the cheapest pattern
+    *connected* to the already-bound variables (a bind join against a
+    pattern sharing no variable restricts nothing). Shared by the sync
+    and async brTPF clients."""
+    remaining = set(range(len(bgp)))
+    first = min(remaining, key=lambda i: (cnts[i], i))
+    order = [first]
+    remaining.discard(first)
+    bound = set(bgp.patterns[first].variables())
+    while remaining:
+        connected = [i for i in remaining
+                     if bound & set(bgp.patterns[i].variables())]
+        pool = connected or sorted(remaining)
+        nxt = min(pool, key=lambda i: (cnts[i], i))
+        order.append(nxt)
+        remaining.discard(nxt)
+        bound |= set(bgp.patterns[nxt].variables())
+    return order
+
+
 # ---------------------------------------------------------------------------
 # brTPF client (paper section 4.3)
 # ---------------------------------------------------------------------------
@@ -225,19 +248,7 @@ class BrTPFClient(_ClientBase):
         probes = [self._fetch(tp, None, 0) for tp in bgp.patterns]
         if min(p.cnt for p in probes) == 0:
             return np.empty((0, nv), dtype=np.int32)
-        remaining = set(range(len(bgp)))
-        first = min(remaining, key=lambda i: (probes[i].cnt, i))
-        order = [first]
-        remaining.discard(first)
-        bound = set(bgp.patterns[first].variables())
-        while remaining:
-            connected = [i for i in remaining
-                         if bound & set(bgp.patterns[i].variables())]
-            pool = connected or sorted(remaining)
-            nxt = min(pool, key=lambda i: (probes[i].cnt, i))
-            order.append(nxt)
-            remaining.discard(nxt)
-            bound |= set(bgp.patterns[nxt].variables())
+        order = plan_join_order(bgp, [p.cnt for p in probes])
 
         # Iterator 1: plain TPF over the most selective pattern.
         first_idx = order[0]
@@ -259,6 +270,153 @@ class BrTPFClient(_ClientBase):
                 self._tick("join", int(data.shape[0]) * 1)
                 if joined.shape[0]:
                     next_rounds.append(joined)
+            solutions = (np.concatenate(next_rounds, axis=0)
+                         if next_rounds
+                         else np.empty((0, nv), dtype=np.int32))
+        return np.unique(solutions, axis=0) if solutions.shape[0] \
+            else solutions
+
+
+# ---------------------------------------------------------------------------
+# Async brTPF client (concurrent BGP driver over the batching front end)
+# ---------------------------------------------------------------------------
+
+
+class AsyncBrTPFClient:
+    """Concurrent BGP driver for :class:`~repro.core.batching.AsyncBrTPFServer`.
+
+    Runs the same fixed left-deep plan as :class:`BrTPFClient`
+    (``plan_join_order``), but issues the independent pieces of each
+    stage concurrently: the upfront cardinality probes go out together,
+    and at every bind-join iterator the per-``maxMpR``-chunk page
+    sequences are *all in flight at once* (each chunk still pages
+    sequentially -- page ``n+1`` depends on page ``n``'s ``has_next``).
+    Same-pattern chunk requests therefore land inside one batching
+    window and coalesce into grouped kernel launches on the server --
+    the client-visible results are identical to the sequential client's
+    (both end in ``np.unique``; chunk arrival order doesn't matter).
+    """
+
+    def __init__(self, front, max_mpr: Optional[int] = None,
+                 request_budget: Optional[int] = None,
+                 client_cache: bool = True) -> None:
+        self.front = front
+        self.server: BrTPFServer = front.server
+        self.max_mpr = max_mpr if max_mpr is not None else self.server.max_mpr
+        self.request_budget = request_budget
+        self._requests_used = 0
+        self._received = 0
+        self._use_client_cache = client_cache
+        self._client_cache: dict = {}
+
+    # -- HTTP boundary (async) ----------------------------------------------
+
+    async def _fetch(self, pattern: TriplePattern,
+                     omega: Optional[np.ndarray], page: int):
+        req = Request(pattern, omega, page)
+        if self._use_client_cache:
+            cached = self._client_cache.get(req.key())
+            if cached is not None:
+                return cached
+        if (self.request_budget is not None
+                and self._requests_used >= self.request_budget):
+            raise RequestBudgetExceeded()
+        self._requests_used += 1
+        if omega is not None:
+            self.server.counters.mappings_sent += int(omega.shape[0])
+        frag = await self.front.handle(req)
+        self._received += frag.triples_received
+        if self._use_client_cache:
+            self._client_cache[req.key()] = frag
+        return frag
+
+    async def _fetch_all_pages(self, pattern: TriplePattern,
+                               omega: Optional[np.ndarray] = None,
+                               first: Optional[object] = None) -> np.ndarray:
+        pages: List[np.ndarray] = []
+        page = 0
+        frag = first
+        if frag is None:
+            frag = await self._fetch(pattern, omega, 0)
+        pages.append(frag.data)
+        while frag.has_next:
+            page += 1
+            frag = await self._fetch(pattern, omega, page)
+            pages.append(frag.data)
+        if len(pages) == 1:
+            return pages[0]
+        return np.concatenate(pages, axis=0)
+
+    # -- execution ----------------------------------------------------------
+
+    async def execute(self, bgp: BGP) -> ExecutionResult:
+        # Accounting is client-local (requests issued / triples received
+        # by THIS client): with N concurrent clients on one server,
+        # server-counter deltas would attribute everyone's traffic to
+        # everyone.
+        self._requests_used = 0
+        self._received = 0
+        self._client_cache.clear()
+        timed_out = False
+        sols = np.empty((0, bgp.num_vars), dtype=np.int32)
+        try:
+            sols = await self._run_pipeline(bgp)
+        except RequestBudgetExceeded:
+            timed_out = True
+        return ExecutionResult(
+            solutions=sols,
+            num_requests=self._requests_used,
+            data_received=self._received,
+            timed_out=timed_out,
+        )
+
+    async def run_workload(self, workload) -> List[ExecutionResult]:
+        """Execute a (name, BGP) sequence; the unit the concurrency
+        benchmarks hand to each simulated client."""
+        return [await self.execute(bgp) for _name, bgp in workload]
+
+    @staticmethod
+    async def _gather(coros):
+        """asyncio.gather that cancels (and drains) siblings when one
+        coroutine raises -- a budget-exhausted query must not leave
+        orphan fetches running into the next query's accounting."""
+        tasks = [asyncio.ensure_future(c) for c in coros]
+        try:
+            return await asyncio.gather(*tasks)
+        except BaseException:
+            for t in tasks:
+                t.cancel()
+            await asyncio.gather(*tasks, return_exceptions=True)
+            raise
+
+    async def _run_pipeline(self, bgp: BGP) -> np.ndarray:
+        nv = bgp.num_vars
+        probes = await self._gather(
+            [self._fetch(tp, None, 0) for tp in bgp.patterns])
+        if min(p.cnt for p in probes) == 0:
+            return np.empty((0, nv), dtype=np.int32)
+        order = plan_join_order(bgp, [p.cnt for p in probes])
+
+        first_idx = order[0]
+        first_tp = bgp.patterns[first_idx]
+        triples = await self._fetch_all_pages(first_tp, None,
+                                              probes[first_idx])
+        solutions = _mappings_from_matches(first_tp, triples, nv)
+
+        for idx in order[1:]:
+            tp = bgp.patterns[idx]
+            if solutions.shape[0] == 0:
+                return solutions
+            chunks = [solutions[lo : lo + self.max_mpr]
+                      for lo in range(0, solutions.shape[0], self.max_mpr)]
+            # Independent omega chunks in flight together: same pattern,
+            # same batching window -> one grouped launch server-side.
+            datas = await self._gather(
+                [self._fetch_all_pages(tp, chunk) for chunk in chunks])
+            next_rounds = [joined
+                           for chunk, data in zip(chunks, datas)
+                           for joined in [_bind_join(tp, data, chunk, nv)]
+                           if joined.shape[0]]
             solutions = (np.concatenate(next_rounds, axis=0)
                          if next_rounds
                          else np.empty((0, nv), dtype=np.int32))

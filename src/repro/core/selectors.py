@@ -23,7 +23,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-from .rdf import TriplePattern, UNBOUND, is_var
+from .rdf import TriplePattern
 from .store import TripleStore
 
 

@@ -104,16 +104,25 @@ class BrTPFServer:
         # it does not affect any metric, only host CPU time).
         self._selector_memo: "OrderedDict" = OrderedDict()
         self._selector_memo_cap = 256
+        # pattern_tuple -> number of live selector-memo entries for it;
+        # makes the coherent-eviction check O(1) on the request path.
+        self._memo_pattern_refs: dict = {}
 
     # -- request handling ---------------------------------------------------
 
-    def handle(self, req: Request) -> Fragment:
-        """Serve one page request (the HTTP GET boundary)."""
-        self.counters.num_requests += 1
+    def validate(self, req: Request) -> None:
+        """Reject an over-maxMpR request (HTTP 414). Shared by ``handle``,
+        ``handle_batch`` and the async batching front end, which must
+        validate per request *before* coalescing."""
         if req.omega is not None and req.omega.shape[0] > self.max_mpr:
             raise MaxMprExceeded(
                 f"{req.omega.shape[0]} mappings > maxMpR={self.max_mpr}"
             )
+
+    def handle(self, req: Request) -> Fragment:
+        """Serve one page request (the HTTP GET boundary)."""
+        self.counters.num_requests += 1
+        self.validate(req)
 
         if self.cache is not None:
             cached = self.cache.get(req.key())
@@ -187,9 +196,25 @@ class BrTPFServer:
 
     def _memoize(self, memo_key, data: np.ndarray, cnt: int) -> None:
         self.counters.server_triples_scanned += int(data.shape[0])
+        if memo_key not in self._selector_memo:
+            pattern = memo_key[0]
+            self._memo_pattern_refs[pattern] = \
+                self._memo_pattern_refs.get(pattern, 0) + 1
         self._selector_memo[memo_key] = (data, cnt)
-        if len(self._selector_memo) > self._selector_memo_cap:
-            self._selector_memo.popitem(last=False)
+        self._trim_selector_memo()
+
+    def _trim_selector_memo(self) -> None:
+        """LRU-trim the selector memo; evict the store's candidate-range
+        memo coherently (a pattern no fragment is streaming has no reason
+        to pin its materialized range either)."""
+        while len(self._selector_memo) > self._selector_memo_cap:
+            (pattern, _omega), _ = self._selector_memo.popitem(last=False)
+            refs = self._memo_pattern_refs.get(pattern, 1) - 1
+            if refs:  # another live fragment still streams this pattern
+                self._memo_pattern_refs[pattern] = refs
+                continue
+            self._memo_pattern_refs.pop(pattern, None)
+            self.store.evict_candidate_range(pattern)
 
     def _paginate(self, data: np.ndarray, cnt: int, req: Request) -> Fragment:
         lo = req.page * self.page_size
@@ -221,11 +246,7 @@ class BrTPFServer:
         work runs, so no member's computed fragment is ever discarded.
         """
         for req in reqs:
-            if (req.omega is not None
-                    and req.omega.shape[0] > self.max_mpr):
-                raise MaxMprExceeded(
-                    f"{req.omega.shape[0]} mappings > "
-                    f"maxMpR={self.max_mpr}")
+            self.validate(req)
         if self._kernel_selector is None:
             return [self.handle(r) for r in reqs]
         # A batch may carry more distinct selections than the memo cap;
@@ -238,8 +259,7 @@ class BrTPFServer:
             return [self.handle(r) for r in reqs]
         finally:
             self._selector_memo_cap = cap
-            while len(self._selector_memo) > cap:
-                self._selector_memo.popitem(last=False)
+            self._trim_selector_memo()
 
     def _prefill_batch(self, reqs: Sequence[Request]) -> None:
         groups: "OrderedDict" = OrderedDict()

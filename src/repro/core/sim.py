@@ -163,6 +163,16 @@ class SimResult:
     qet_sum: float            # total QET of completed queries
     qets: List[float]
     simulated_s: float = 3600.0   # horizon actually replayed
+    # kernel-backend replay only: launches *created* (a request joining
+    # an open same-pattern launch inside the batching window does not
+    # create one) and kernel-path requests replayed -- the pair the live
+    # validation loop (``live_replay``) checks against the real front end.
+    launches: int = 0
+    kernel_requests: int = 0
+
+    @property
+    def launches_per_request(self) -> float:
+        return self.launches / max(self.kernel_requests, 1)
 
     @property
     def throughput_per_hour(self) -> float:
@@ -263,6 +273,7 @@ def simulate(traces_per_client: Sequence[Sequence[QueryTrace]],
     server = _Server(params.server_workers,
                      batch_window=params.batch_window_s)
     cache = LRUCache(cache_size) if use_cache else None
+    sim_launches = kernel_requests = 0
     completed = timeouts = attempted = 0
     qet_sum = 0.0
     qets: List[float] = []
@@ -353,6 +364,8 @@ def simulate(traces_per_client: Sequence[Sequence[QueryTrace]],
                             + ev.cand * ev.pats * params.kernel_cell_s)
                 launch, created = server.schedule_launch(
                     t, ev.pattern_key, shared, marginal)
+                kernel_requests += 1
+                sim_launches += int(created)
                 if params.batch_window_s > 0.0:
                     # block this client on the launch: it resumes (with
                     # its response transfer) when the launch completes,
@@ -380,7 +393,9 @@ def simulate(traces_per_client: Sequence[Sequence[QueryTrace]],
     simulated = (params.duration_s if events <= params.max_events
                  else frontier)
     return SimResult(completed, timeouts, attempted, qet_sum, qets,
-                     simulated_s=max(simulated, 1e-9))
+                     simulated_s=max(simulated, 1e-9),
+                     launches=sim_launches,
+                     kernel_requests=kernel_requests)
 
 
 def split_workload(workload, num_clients: int):
@@ -389,3 +404,152 @@ def split_workload(workload, num_clients: int):
     per = max(1, len(workload) // num_clients)
     return [workload[i * per:(i + 1) * per] or workload[:per]
             for i in range(num_clients)]
+
+
+# ---------------------------------------------------------------------------
+# Live validation: replay traces through the REAL async front end
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LiveValidation:
+    """Simulated vs observed launch counts for one trace replay.
+
+    ``simulated`` comes from the cost model's launch bookkeeping
+    (:attr:`SimResult.launches`); ``observed`` from actually pushing the
+    same request streams through ``AsyncBrTPFServer`` over a
+    kernel-backend server and reading ``Counters.kernel_launches``. The
+    two use different clocks (simulated seconds vs wall time), so exact
+    equality is not expected -- agreement within ~10% validates that the
+    sim's batching window models what the server now really does.
+    """
+
+    simulated_launches: int
+    observed_launches: int
+    requests: int
+    observed_batched: int     # requests served via shared grouped launches
+    flushes: int
+
+    @property
+    def agreement(self) -> float:
+        """observed / simulated launch ratio (1.0 = perfect)."""
+        return self.observed_launches / max(self.simulated_launches, 1)
+
+    @property
+    def within(self) -> float:
+        """Relative disagreement |obs - sim| / sim."""
+        return (abs(self.observed_launches - self.simulated_launches)
+                / max(self.simulated_launches, 1))
+
+
+def requests_from_trace(trace: QueryTrace) -> List["object"]:
+    """Rebuild the :class:`~repro.core.server.Request` sequence of a
+    trace (join events are client-local and carry no request)."""
+    from .rdf import TriplePattern
+    from .server import Request
+    reqs = []
+    for ev in trace.events:
+        if not isinstance(ev, HttpRecord):
+            continue
+        pattern_tuple, omega_rows, page = ev.key
+        omega = (None if not omega_rows
+                 else np.asarray(omega_rows, dtype=np.int32))
+        reqs.append(Request(TriplePattern(*pattern_tuple), omega, page))
+    return reqs
+
+
+def live_replay(traces_per_client: Sequence[Sequence[QueryTrace]],
+                server: BrTPFServer,
+                params: SimParams,
+                batch_window_s: float = 2e-3,
+                max_batch: int = 64) -> LiveValidation:
+    """Validate the sim's launch model against the real front end.
+
+    Replays each client's request stream through an
+    :class:`~repro.core.batching.AsyncBrTPFServer` wrapped around
+    ``server`` (which must use the kernel backend for launch counts to
+    be meaningful), runs the cost-model replay of the *same* traces, and
+    reports both launch counts side by side. Each live client awaits its
+    responses in order, mirroring the sim's one-outstanding-request-per-
+    client-per-stream structure.
+    """
+    from .batching import serve_concurrent
+    sim_params = dataclasses.replace(params, batch_window_s=batch_window_s)
+    sim = simulate(traces_per_client, sim_params)
+
+    streams = [[req for trace in traces for req in requests_from_trace(trace)]
+               for traces in traces_per_client]
+    base = server.counters.snapshot()
+    _responses, front = serve_concurrent(
+        server, streams, batch_window_s=batch_window_s, max_batch=max_batch)
+    after = server.counters
+    return LiveValidation(
+        simulated_launches=sim.launches,
+        observed_launches=after.kernel_launches - base.kernel_launches,
+        requests=front.stats.requests,
+        observed_batched=(after.kernel_batched_requests
+                          - base.kernel_batched_requests),
+        flushes=front.stats.flushes,
+    )
+
+
+def main(argv=None) -> int:
+    """CLI: replay a small WatDiv workload through the cost model and
+    (with ``--live``) through the real async front end.
+
+    Example::
+
+        python -m repro.core.sim --live --clients 16 --window 2e-3
+    """
+    import argparse
+    parser = argparse.ArgumentParser(
+        description="brTPF multi-client replay: cost model vs live front end")
+    parser.add_argument("--live", action="store_true",
+                        help="also replay through AsyncBrTPFServer and "
+                             "report observed launch counts")
+    parser.add_argument("--clients", type=int, default=16)
+    parser.add_argument("--queries", type=int, default=12)
+    parser.add_argument("--window", type=float, default=2e-3,
+                        help="batching window in seconds (sim and live)")
+    parser.add_argument("--max-batch", type=int, default=64)
+    parser.add_argument("--max-mpr", type=int, default=30)
+    parser.add_argument("--seed", type=int, default=0)
+    args = parser.parse_args(argv)
+
+    from ..data.watdiv import WatDivScale, generate, generate_workload
+    scale = WatDivScale(users=600, products=240, reviews=1000,
+                        retailers=12, genres=15, cities=20, tags=40)
+    data = generate(scale, seed=args.seed)
+    workload = generate_workload(data, args.queries, seed=args.seed + 1)
+
+    server = BrTPFServer(data.store, max_mpr=args.max_mpr,
+                         selector_backend="kernel")
+    traces = collect_traces(server, workload, "brtpf",
+                            max_mpr=args.max_mpr)
+    params = calibrate(server, workload)
+    params.batch_window_s = args.window
+    per_client = split_workload(traces, args.clients)
+
+    sim = simulate(per_client, params)
+    print(f"sim: clients={args.clients} window={args.window:g}s "
+          f"completed={sim.completed} kernel_requests={sim.kernel_requests} "
+          f"launches={sim.launches} "
+          f"launches_per_request={sim.launches_per_request:.3f}")
+    if not args.live:
+        return 0
+
+    live_server = BrTPFServer(data.store, max_mpr=args.max_mpr,
+                              selector_backend="kernel")
+    lv = live_replay(per_client, live_server, params,
+                     batch_window_s=args.window, max_batch=args.max_batch)
+    print(f"live: requests={lv.requests} flushes={lv.flushes} "
+          f"observed_launches={lv.observed_launches} "
+          f"batched_requests={lv.observed_batched}")
+    print(f"validation: simulated={lv.simulated_launches} "
+          f"observed={lv.observed_launches} "
+          f"agreement={lv.agreement:.3f} "
+          f"(|rel err|={lv.within:.1%})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

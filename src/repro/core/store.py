@@ -20,7 +20,8 @@ POS, OSP) and packed-int64 binary search:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from collections import OrderedDict
+from typing import Tuple
 
 import numpy as np
 
@@ -100,6 +101,21 @@ class TripleStore:
             )
             perm = np.argsort(keys, kind="stable").astype(np.int32)
             self._indexes[name] = _Index(order, keys[perm], perm)
+        # Per-pattern candidate-range memo (ROADMAP "Kernel-path TPF
+        # paging"): materializing ``triples[perm[lo:hi]]`` is the
+        # expensive part of ``candidate_range`` -- a gather over a range
+        # that can span the whole store. The store is immutable, so the
+        # memo never goes stale; the server evicts it coherently with
+        # its selector memo (``BrTPFServer._trim_selector_memo``).
+        self._range_memo: "OrderedDict[tuple, CandidateRange]" = OrderedDict()
+        self.range_memo_cap = 64
+        # Broad patterns materialize near-store-sized copies; bound the
+        # memo by retained ROWS as well as entries so 64 low-selectivity
+        # ranges can't pin ~64x the store (newest entry always kept).
+        self.range_memo_max_rows = max(4 * triples.shape[0], 4096)
+        self._range_memo_rows = 0
+        self.range_memo_hits = 0
+        self.range_memo_misses = 0
 
     def __len__(self) -> int:
         return int(self.triples.shape[0])
@@ -164,10 +180,35 @@ class TripleStore:
         components and repeated-variable constraints are *not* applied
         here -- the bind-join/tpf-match kernels resolve those on device).
         """
+        key = tp.as_tuple()
+        memo = self._range_memo.get(key)
+        if memo is not None:
+            self.range_memo_hits += 1
+            self._range_memo.move_to_end(key)
+            return memo
+        self.range_memo_misses += 1
         name, lo, hi, plen = self._prefix_range(tp)
         idx = self._indexes[name]
-        return CandidateRange(index=name, lo=lo, hi=hi, prefix_len=plen,
-                              triples=self.triples[idx.perm[lo:hi]])
+        rng = CandidateRange(index=name, lo=lo, hi=hi, prefix_len=plen,
+                             triples=self.triples[idx.perm[lo:hi]])
+        self._range_memo[key] = rng
+        self._range_memo_rows += len(rng)
+        while len(self._range_memo) > 1 and (
+                len(self._range_memo) > self.range_memo_cap
+                or self._range_memo_rows > self.range_memo_max_rows):
+            _, old = self._range_memo.popitem(last=False)
+            self._range_memo_rows -= len(old)
+        return rng
+
+    def evict_candidate_range(self, pattern_tuple: Tuple[int, int, int]
+                              ) -> bool:
+        """Drop a memoized candidate range (coherence hook for the
+        server's selector-memo eviction). Returns True if present."""
+        old = self._range_memo.pop(pattern_tuple, None)
+        if old is None:
+            return False
+        self._range_memo_rows -= len(old)
+        return True
 
     def cardinality(self, tp: TriplePattern) -> int:
         """Cardinality estimate ``cnt`` (Definition 2).

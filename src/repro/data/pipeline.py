@@ -13,7 +13,7 @@ corpus); the selection path is the real integration point.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, List, Optional, Sequence
+from typing import Dict, Iterator, List
 
 import numpy as np
 

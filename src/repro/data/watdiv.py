@@ -18,7 +18,7 @@ driven by intermediate-result sizes, which the zipfian skew preserves).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import List, Tuple
 
 import numpy as np
 

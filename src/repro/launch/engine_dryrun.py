@@ -23,7 +23,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.compat import enable_x64
 from repro.core.federation import FederatedStore

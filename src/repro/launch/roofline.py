@@ -30,7 +30,6 @@ HBM, ~50 GB/s/link ICI.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Dict, List, Optional, Tuple
 

@@ -9,7 +9,6 @@ python built during tracing, captured by closure).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Tuple
 
 import jax
@@ -17,7 +16,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..configs.base import ArchConfig, ShapeSpec
-from ..models.model import ModelDef, build_model
+from ..models.model import ModelDef
 from ..sharding.rules import param_shardings, spec_for
 from ..train.optimizer import AdamW, AdamWState
 

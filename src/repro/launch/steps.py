@@ -6,8 +6,7 @@ and the real launchers attach shardings via ShapeDtypeStruct inputs (see
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

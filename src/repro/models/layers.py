@@ -15,13 +15,10 @@ HBM.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..configs.base import ArchConfig
 

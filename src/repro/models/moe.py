@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
-from .layers import dense_param, _init_normal
+from .layers import _init_normal
 
 Params = Dict[str, Any]
 

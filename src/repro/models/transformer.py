@@ -18,7 +18,7 @@ cache pytree; the decode scan threads them as scan xs/ys.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ exactly these step functions on the production meshes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp

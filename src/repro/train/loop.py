@@ -27,11 +27,9 @@ import dataclasses
 import time
 from typing import Any, Callable, Dict, Iterator, List, Optional
 
-import jax
 import numpy as np
 
 from . import checkpoint as ckpt
-from .optimizer import AdamW
 
 
 @dataclasses.dataclass

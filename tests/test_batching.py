@@ -1,0 +1,490 @@
+"""Async batching front end: flush semantics, parity, live-sim validation.
+
+The contract under test (src/repro/core/batching.py docstring):
+responses through ``AsyncBrTPFServer`` are byte-identical to sequential
+``handle`` calls, concurrent same-pattern requests coalesce into
+strictly fewer grouped kernel launches, and the discrete-event sim's
+launch model agrees with what the real front end does.
+"""
+import asyncio
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+from repro.core import (AsyncBrTPFClient, AsyncBrTPFServer, BrTPFClient,
+                        BrTPFServer, MaxMprExceeded, Request, TriplePattern,
+                        TripleStore, UNBOUND, bgp_from_arrays, encode_var,
+                        serve_concurrent)
+from repro.core.sim import (HttpRecord, QueryTrace, SimParams, live_replay)
+
+V = encode_var
+
+pytestmark = pytest.mark.tier1
+
+
+def make_store(seed=0, n=500, terms=15):
+    rng = np.random.default_rng(seed)
+    return TripleStore(np.unique(
+        rng.integers(0, terms, size=(n, 3)).astype(np.int32), axis=0))
+
+
+def rand_omega(rng, m, v=2, terms=15, unbound_frac=0.3):
+    om = rng.integers(0, terms, size=(m, v)).astype(np.int32)
+    om[rng.random((m, v)) < unbound_frac] = UNBOUND
+    return om
+
+
+class RecordingServer(BrTPFServer):
+    """BrTPFServer that records every handle_batch call (and can be made
+    slow, so flushes overlap with new arrivals in executor mode)."""
+
+    def __init__(self, *args, delay=0.0, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.batches = []
+        self.delay = delay
+
+    def handle_batch(self, reqs):
+        self.batches.append(list(reqs))
+        if self.delay:
+            time.sleep(self.delay)
+        return super().handle_batch(reqs)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: concurrency coalescing + numpy parity
+# ---------------------------------------------------------------------------
+
+
+class TestConcurrentCoalescing:
+    def test_16_clients_fewer_launches_and_numpy_identical(self):
+        """16 concurrent same-pattern clients with batch_window_s > 0
+        must issue strictly fewer kernel launches than 16 sequential
+        handle calls, with responses byte-identical to the numpy
+        backend."""
+        store = make_store(0, n=600)
+        tp = TriplePattern(V(0), 3, V(1))
+        reqs = [Request(tp, rand_omega(np.random.default_rng(i), 6), 0)
+                for i in range(16)]
+
+        kserver = BrTPFServer(store, selector_backend="kernel")
+        responses, front = serve_concurrent(
+            kserver, [[r] for r in reqs], batch_window_s=2e-3)
+        concurrent_launches = kserver.counters.kernel_launches
+
+        seq = BrTPFServer(store, selector_backend="kernel")
+        for r in reqs:
+            seq.handle(r)
+        assert concurrent_launches < seq.counters.kernel_launches
+        assert concurrent_launches == 1          # one grouped launch
+        assert front.stats.coalesced_requests == 16
+
+        nserver = BrTPFServer(store, selector_backend="numpy")
+        for (frag,), req in zip(responses, reqs):
+            want = nserver.handle(req)
+            assert frag.data.dtype == want.data.dtype
+            np.testing.assert_array_equal(frag.data, want.data)
+            assert frag.cnt == want.cnt
+            assert frag.has_next == want.has_next
+        # transfer accounting identical to the sequential server too
+        assert (kserver.counters.data_received
+                == seq.counters.data_received)
+
+    def test_window_zero_dispatches_immediately(self):
+        store = make_store(1)
+        server = RecordingServer(store, selector_backend="kernel")
+        reqs = [[Request(TriplePattern(V(0), 3, V(1)),
+                         rand_omega(np.random.default_rng(i), 4), 0)]
+                for i in range(4)]
+        _responses, front = serve_concurrent(server, reqs,
+                                             batch_window_s=0.0)
+        assert front.stats.flushes == 4
+        assert all(len(b) == 1 for b in server.batches)
+
+
+# ---------------------------------------------------------------------------
+# Flush semantics
+# ---------------------------------------------------------------------------
+
+
+class TestFlushSemantics:
+    def test_window_flush_ordering(self):
+        """One window flush; responses resolve in enqueue order."""
+        store = make_store(2)
+        server = RecordingServer(store, selector_backend="kernel")
+        front = AsyncBrTPFServer(server, batch_window_s=0.05,
+                                 max_batch=100)
+        tp = TriplePattern(V(0), 3, V(1))
+        reqs = [Request(tp, rand_omega(np.random.default_rng(i), 4), 0)
+                for i in range(5)]
+        done_order = []
+
+        async def client(i):
+            frag = await front.handle(reqs[i])
+            done_order.append(i)
+            return frag
+
+        async def main():
+            # enqueue in a staggered but deterministic order
+            tasks = []
+            for i in range(5):
+                tasks.append(asyncio.ensure_future(client(i)))
+                await asyncio.sleep(0)
+            out = await asyncio.gather(*tasks)
+            await front.aclose()
+            return out
+
+        frags = asyncio.run(main())
+        assert front.stats.flushes == 1
+        assert front.stats.timer_flushes == 1
+        assert [r.key() for r in server.batches[0]] \
+            == [r.key() for r in reqs]
+        assert done_order == list(range(5))
+        solo = BrTPFServer(store, selector_backend="kernel")
+        for req, frag in zip(reqs, frags):
+            want = solo.handle(req)
+            np.testing.assert_array_equal(frag.data, want.data)
+
+    def test_flush_on_full_beats_timer(self):
+        """max_batch pending flushes immediately; the later timer finds
+        an empty queue and is a no-op (no double flush)."""
+        store = make_store(3)
+        server = RecordingServer(store, selector_backend="kernel")
+        front = AsyncBrTPFServer(server, batch_window_s=0.2, max_batch=3)
+        tp = TriplePattern(V(0), 3, V(1))
+        # warm the jit cache for this launch geometry so the elapsed
+        # check below measures flush latency, not compile time
+        warm = BrTPFServer(store, selector_backend="kernel")
+        warm.handle_batch([
+            Request(tp, rand_omega(np.random.default_rng(90 + i), 4), 0)
+            for i in range(3)])
+
+        async def main():
+            t0 = time.perf_counter()
+            await asyncio.gather(*[
+                front.handle(Request(
+                    tp, rand_omega(np.random.default_rng(i), 4), 0))
+                for i in range(3)])
+            elapsed = time.perf_counter() - t0
+            # wait past the window: the armed timer must not re-flush
+            await asyncio.sleep(0.25)
+            await front.aclose()
+            return elapsed
+
+        elapsed = asyncio.run(main())
+        assert elapsed < 0.2          # did not wait for the window
+        assert front.stats.flushes == 1
+        assert front.stats.full_flushes == 1
+        assert len(server.batches) == 1 and len(server.batches[0]) == 3
+
+    def test_partial_batch_flushes_on_timer(self):
+        store = make_store(4)
+        server = RecordingServer(store, selector_backend="kernel")
+        front = AsyncBrTPFServer(server, batch_window_s=0.02,
+                                 max_batch=100)
+        tp = TriplePattern(V(0), 3, V(1))
+
+        async def main():
+            return await asyncio.gather(*[
+                front.handle(Request(
+                    tp, rand_omega(np.random.default_rng(i), 4), 0))
+                for i in range(2)])
+
+        frags = asyncio.run(main())
+        assert len(frags) == 2
+        assert front.stats.flushes == 1
+        assert front.stats.timer_flushes == 1
+        assert front.stats.full_flushes == 0
+
+    def test_request_arriving_mid_flush_starts_new_batch(self):
+        """With an executor, the loop stays live during a flush: a
+        request arriving while handle_batch runs joins the NEXT batch,
+        never the in-flight one."""
+        store = make_store(5)
+        server = RecordingServer(store, delay=0.08,
+                                 selector_backend="kernel")
+        with ThreadPoolExecutor(max_workers=1) as pool:
+            front = AsyncBrTPFServer(server, batch_window_s=0.01,
+                                     max_batch=10, executor=pool)
+            tp = TriplePattern(V(0), 3, V(1))
+            early = [Request(tp, rand_omega(np.random.default_rng(i), 4),
+                             0) for i in range(2)]
+            late = Request(tp, rand_omega(np.random.default_rng(9), 4), 0)
+
+            async def late_client():
+                # land inside the first flush's handle_batch (which
+                # sleeps `delay` on the executor thread)
+                await asyncio.sleep(0.04)
+                return await front.handle(late)
+
+            async def main():
+                tasks = [asyncio.ensure_future(front.handle(r))
+                         for r in early]
+                tasks.append(asyncio.ensure_future(late_client()))
+                out = await asyncio.gather(*tasks)
+                await front.aclose()
+                return out
+
+            frags = asyncio.run(main())
+        assert len(server.batches) == 2
+        assert [r.key() for r in server.batches[0]] \
+            == [r.key() for r in early]
+        assert [r.key() for r in server.batches[1]] == [late.key()]
+        solo = BrTPFServer(store, selector_backend="kernel")
+        for req, frag in zip(early + [late], frags):
+            want = solo.handle(req)
+            np.testing.assert_array_equal(frag.data, want.data)
+
+    def test_aclose_flushes_pending(self):
+        store = make_store(6)
+        server = RecordingServer(store, selector_backend="kernel")
+        front = AsyncBrTPFServer(server, batch_window_s=30.0,
+                                 max_batch=100)
+        req = Request(TriplePattern(V(0), 3, V(1)), None, 0)
+
+        async def main():
+            task = asyncio.ensure_future(front.handle(req))
+            await asyncio.sleep(0)       # let it enqueue
+            await front.aclose()         # don't wait 30 s
+            frag = await task
+            with pytest.raises(RuntimeError):
+                await front.handle(req)
+            return frag
+
+        frag = asyncio.run(main())
+        assert frag.data.shape[0] > 0
+        assert front.stats.flushes == 1
+
+
+# ---------------------------------------------------------------------------
+# maxMpR validation under coalescing
+# ---------------------------------------------------------------------------
+
+
+class TestMaxMprUnderCoalescing:
+    def test_oversized_request_fails_alone(self):
+        """When coalesced requests disagree on validity, only the
+        oversized one fails -- it never reaches handle_batch, whose
+        batch-atomic check would otherwise poison its peers."""
+        store = make_store(7)
+        server = RecordingServer(store, max_mpr=5,
+                                 selector_backend="kernel")
+        front = AsyncBrTPFServer(server, batch_window_s=0.02,
+                                 max_batch=100)
+        tp = TriplePattern(V(0), 3, V(1))
+        rng = np.random.default_rng(7)
+        good = [Request(tp, rand_omega(rng, 4), 0) for _ in range(3)]
+        bad = Request(tp, rand_omega(rng, 9), 0)   # 9 > maxMpR=5
+
+        async def main():
+            results = await asyncio.gather(
+                *[front.handle(r) for r in good + [bad]],
+                return_exceptions=True)
+            await front.aclose()
+            return results
+
+        results = asyncio.run(main())
+        assert isinstance(results[-1], MaxMprExceeded)
+        assert front.stats.rejected == 1
+        assert len(server.batches) == 1
+        assert [r.key() for r in server.batches[0]] \
+            == [r.key() for r in good]
+        solo = BrTPFServer(store, max_mpr=5, selector_backend="kernel")
+        for req, frag in zip(good, results[:3]):
+            want = solo.handle(req)
+            np.testing.assert_array_equal(frag.data, want.data)
+
+    def test_direct_handle_batch_stays_atomic(self):
+        """The pre-existing handle_batch contract is unchanged: an
+        invalid member rejects the whole batch before any work."""
+        store = make_store(8)
+        server = BrTPFServer(store, max_mpr=5, selector_backend="kernel")
+        tp = TriplePattern(V(0), 3, V(1))
+        rng = np.random.default_rng(8)
+        with pytest.raises(MaxMprExceeded):
+            server.handle_batch([Request(tp, rand_omega(rng, 4), 0),
+                                 Request(tp, rand_omega(rng, 9), 0)])
+        assert server.counters.kernel_launches == 0
+        assert len(server._selector_memo) == 0
+
+
+# ---------------------------------------------------------------------------
+# Candidate-range memo (kernel-path TPF paging)
+# ---------------------------------------------------------------------------
+
+
+class TestCandidateRangeMemo:
+    def test_page_miss_after_selector_eviction_reuses_range(self):
+        """A page>0 request whose selector memo entry was evicted must
+        not re-materialize the candidate range: the store-level range
+        memo serves it."""
+        store = make_store(10, n=900)
+        server = BrTPFServer(store, page_size=20,
+                             selector_backend="kernel")
+        tp = TriplePattern(V(0), 3, V(1))
+        om = rand_omega(np.random.default_rng(10), 8)
+        om[0] = UNBOUND                     # multi-page fragment
+        f0 = server.handle(Request(tp, om, 0))
+        assert f0.has_next
+        misses0 = store.range_memo_misses
+        hits0 = store.range_memo_hits
+        server._selector_memo.clear()       # simulate memo pressure
+        f1 = server.handle(Request(tp, om, 1))
+        assert store.range_memo_misses == misses0   # no re-materialize
+        assert store.range_memo_hits > hits0
+        # ... and the page is still byte-identical to the numpy backend
+        nserver = BrTPFServer(store, page_size=20,
+                              selector_backend="numpy")
+        nserver.handle(Request(tp, om, 0))
+        want = nserver.handle(Request(tp, om, 1))
+        np.testing.assert_array_equal(f1.data, want.data)
+
+    def test_selector_memo_eviction_evicts_range_coherently(self):
+        store = make_store(11, n=600)
+        server = BrTPFServer(store, selector_backend="kernel")
+        server._selector_memo_cap = 2
+        pats = [TriplePattern(V(0), p, V(1)) for p in (3, 5, 7)]
+        for tp in pats:
+            server.handle(Request(tp, None, 0))
+        # oldest pattern evicted from both memos; newest two retained
+        assert pats[0].as_tuple() not in store._range_memo
+        assert pats[1].as_tuple() in store._range_memo
+        assert pats[2].as_tuple() in store._range_memo
+        assert len(server._selector_memo) == 2
+
+    def test_shared_pattern_keeps_range_until_last_fragment_evicted(self):
+        """Two live fragments on one pattern: evicting one selector-memo
+        entry must not drop the range the other still streams."""
+        store = make_store(12, n=600)
+        server = BrTPFServer(store, selector_backend="kernel")
+        server._selector_memo_cap = 2
+        tp = TriplePattern(V(0), 3, V(1))
+        rng = np.random.default_rng(12)
+        server.handle(Request(tp, rand_omega(rng, 4), 0))
+        server.handle(Request(tp, rand_omega(rng, 4), 0))
+        # a third selection on the same pattern evicts the first entry,
+        # but the second still references the pattern -> range stays
+        server.handle(Request(tp, rand_omega(rng, 4), 0))
+        assert tp.as_tuple() in store._range_memo
+
+
+# ---------------------------------------------------------------------------
+# Live replay vs simulated launch counts
+# ---------------------------------------------------------------------------
+
+
+class TestLiveSimValidation:
+    def test_live_launches_agree_with_sim_within_10pct(self):
+        """The sim's batching-window launch model and the real front end
+        must agree on launch counts for a concurrent same-pattern load
+        (the ROADMAP 'make the server match the sim' loop, closed)."""
+        store = make_store(13, n=600)
+        tp_a = TriplePattern(V(0), 3, V(1))
+        tp_b = TriplePattern(V(0), 5, V(1))
+        rng = np.random.default_rng(13)
+
+        def rec(tp, om):
+            return HttpRecord(key=Request(tp, om, 0).key(), lookups=1,
+                              scanned=10, recv=5,
+                              pattern_key=tp.as_tuple(), cand=1024,
+                              pats=8)
+
+        traces_per_client = [
+            [QueryTrace(f"q{ci}",
+                        [rec(tp_a, rand_omega(rng, 4)),
+                         rec(tp_b, rand_omega(rng, 4))],
+                        completed=True)]
+            for ci in range(16)]
+
+        params = SimParams()
+        server = BrTPFServer(store, selector_backend="kernel")
+        lv = live_replay(traces_per_client, server, params,
+                         batch_window_s=5e-3)
+        assert lv.requests == 32
+        assert lv.simulated_launches == 2    # one grouped launch per wave
+        assert lv.within <= 0.10
+        assert lv.observed_launches < 32     # strictly fewer than solo
+
+
+# ---------------------------------------------------------------------------
+# Async client vs sequential client
+# ---------------------------------------------------------------------------
+
+
+class TestAsyncClient:
+    def test_async_client_matches_sync_client(self):
+        """The concurrent BGP driver returns exactly the sequential
+        brTPF client's solutions, while its in-flight omega chunks
+        coalesce into fewer kernel launches."""
+        store = make_store(14, n=2000, terms=10)
+        bgp = bgp_from_arrays([[V(0), 3, V(1)], [V(1), 5, V(2)]])
+
+        sync_server = BrTPFServer(store, page_size=40, max_mpr=10,
+                                  selector_backend="kernel")
+        sync_res = BrTPFClient(sync_server, max_mpr=10).execute(bgp)
+
+        async_server = BrTPFServer(store, page_size=40, max_mpr=10,
+                                   selector_backend="kernel")
+        front = AsyncBrTPFServer(async_server, batch_window_s=2e-3,
+                                 max_batch=64)
+
+        async def main():
+            client = AsyncBrTPFClient(front, max_mpr=10)
+            try:
+                return await client.execute(bgp)
+            finally:
+                await front.aclose()
+
+        async_res = asyncio.run(main())
+        assert sync_res.solutions.shape[0] > 0   # non-trivial query
+        np.testing.assert_array_equal(async_res.solutions,
+                                      sync_res.solutions)
+        assert async_res.num_requests == sync_res.num_requests
+        assert (async_server.counters.kernel_launches
+                < sync_server.counters.kernel_launches)
+
+    def test_budget_abort_cancels_inflight_fetches(self):
+        """A budget-exhausted query must not leave orphan fetch tasks
+        running into the next query (they would corrupt accounting)."""
+        store = make_store(16, n=2000, terms=10)
+        bgp = bgp_from_arrays([[V(0), 3, V(1)], [V(1), 5, V(2)]])
+        server = BrTPFServer(store, page_size=20, max_mpr=5,
+                             selector_backend="kernel")
+        front = AsyncBrTPFServer(server, batch_window_s=2e-3)
+
+        async def main():
+            client = AsyncBrTPFClient(front, max_mpr=5,
+                                      request_budget=4)
+            res = await client.execute(bgp)
+            assert res.timed_out
+            await asyncio.sleep(0.05)   # drain any stragglers
+            # nothing but this coroutine may still be alive
+            leftover = [t for t in asyncio.all_tasks()
+                        if t is not asyncio.current_task()]
+            await front.aclose()
+            return leftover
+
+        leftover = asyncio.run(main())
+        assert leftover == []
+
+    def test_async_client_matches_numpy_reference(self):
+        store = make_store(15, n=2000, terms=10)
+        bgp = bgp_from_arrays([[V(0), 3, V(1)], [V(1), 5, V(2)]])
+        ref_server = BrTPFServer(store, page_size=40, max_mpr=10,
+                                 selector_backend="numpy")
+        ref = BrTPFClient(ref_server, max_mpr=10).execute(bgp)
+
+        server = BrTPFServer(store, page_size=40, max_mpr=10,
+                             selector_backend="kernel")
+        front = AsyncBrTPFServer(server, batch_window_s=2e-3)
+
+        async def main():
+            try:
+                return await AsyncBrTPFClient(front,
+                                              max_mpr=10).execute(bgp)
+            finally:
+                await front.aclose()
+
+        got = asyncio.run(main())
+        np.testing.assert_array_equal(got.solutions, ref.solutions)

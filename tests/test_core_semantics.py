@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 
-from repro.core import (BGP, BrTPFClient, BrTPFServer, TPFClient,
+from repro.core import (BrTPFClient, BrTPFServer, TPFClient,
                         TriplePattern, TripleStore, UNBOUND,
                         brtpf_select, encode_var, evaluate_bgp_reference,
                         instantiate_patterns, parse_bgp, tpf_select,

@@ -134,7 +134,6 @@ def test_encdec_decode_matches_forward():
 def test_moe_gather_matches_einsum_dispatch():
     """With drop-free capacity, gather- and einsum-based MoE dispatch
     compute identical outputs."""
-    import dataclasses
     from repro.models import moe as MOE
 
     cfg = _smoke_cfg("olmoe-1b-7b")  # capacity_factor=4 -> no drops

@@ -14,7 +14,7 @@ from repro.train.grad_compress import (compress_with_feedback,
                                        init_error_state, quantize)
 from repro.train.loop import Trainer, TrainerConfig
 from repro.train.optimizer import (AdamW, apply_updates, constant_lr,
-                                   global_norm, warmup_cosine)
+                                   warmup_cosine)
 
 
 # ---------------------------------------------------------------------------
@@ -270,7 +270,6 @@ class TestDataPipeline:
         dom = d.lookup("hasDomain")
         code = d.lookup("code")
         for doc in pipe.selected_docs:
-            from repro.core import TriplePattern
             assert corpus.store.contains(
                 np.array([doc, dom, code], np.int32))
 
