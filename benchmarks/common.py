@@ -8,9 +8,10 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import json
 import os
 import time
-from typing import Optional
+from typing import Dict, Optional
 
 
 from repro.core import BrTPFClient, BrTPFServer, LRUCache, TPFClient
@@ -18,6 +19,7 @@ from repro.data.watdiv import (WatDivData, WatDivScale, generate,
                                generate_workload)
 
 FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 @dataclasses.dataclass
@@ -56,10 +58,12 @@ def workload(seed: int = 1):
 
 def make_server(page_size: int = 100, max_mpr: int = 30,
                 cache: Optional[LRUCache] = None,
-                selector_backend: str = "numpy") -> BrTPFServer:
+                selector_backend: str = "numpy",
+                shard_window: Optional[int] = None) -> BrTPFServer:
     return BrTPFServer(dataset().store, page_size=page_size,
                        max_mpr=max_mpr, cache=cache,
-                       selector_backend=selector_backend)
+                       selector_backend=selector_backend,
+                       shard_window=shard_window)
 
 
 def run_sequence(client_kind: str, page_size: int = 100,
@@ -88,3 +92,41 @@ def timed(fn, *args, **kw):
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def _jsonable(obj):
+    """Best-effort conversion of benchmark results to JSON values."""
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return {f.name: _jsonable(getattr(obj, f.name))
+                for f in dataclasses.fields(obj)
+                # per-query latency lists blow up the tracked file
+                if f.name != "qets"}
+    if isinstance(obj, dict):
+        return {k if isinstance(k, str) else repr(k): _jsonable(v)
+                for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if hasattr(obj, "item"):          # numpy scalar
+        return obj.item()
+    if isinstance(obj, float):
+        return round(obj, 6)
+    return obj
+
+
+def persist(kind: str, results: Dict) -> str:
+    """Write results to ``BENCH_<kind>.json`` at the repo root.
+
+    The file is committed per PR, so the perf trajectory (req/s,
+    launches-per-request, candidates-streamed, ...) is diffable across
+    the PR history rather than lost in CI logs.
+    """
+    path = os.path.join(REPO_ROOT, f"BENCH_{kind}.json")
+    payload = {
+        "config": _jsonable(dataclasses.asdict(BenchConfig.default())),
+        "full": FULL,
+        "results": _jsonable(results),
+    }
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    return path

@@ -17,7 +17,7 @@ import numpy as np
 from repro.kernels import bindjoin, ops, tpf_match
 from repro.kernels import ref
 
-from .common import emit
+from .common import emit, persist
 
 
 def _time(fn, *args, reps=5, **kw):
@@ -56,6 +56,8 @@ def run(full: bool = False) -> Dict:
         emit(f"kernels/tpf_match_T{t}_ref", dt_m * 1e6, f"rows={t}")
 
     out["selector"] = run_selector_backends(full=full)
+    path = persist("kernels", out)
+    print(f"# persisted -> {path}")
     return out
 
 
@@ -69,6 +71,9 @@ def run_selector_backends(full: bool = False) -> Dict:
     streamed per HBM pass, compare-grid cells, passes saved by batching)
     are the quantities the TPU cost model in ``core/sim.py`` charges.
     """
+    import jax
+    from jax.sharding import Mesh
+    from repro.core.federation import FederatedStore, ShardedSelector
     from repro.core.kernel_selectors import KernelSelector
     from repro.core.rdf import TriplePattern, encode_var
     from repro.core.selectors import brtpf_select_with_cnt
@@ -81,6 +86,9 @@ def run_selector_backends(full: bool = False) -> Dict:
     store = TripleStore(triples)
     v = encode_var
     out: Dict = {}
+
+    fed = FederatedStore.build(
+        store.triples, Mesh(np.array(jax.devices()), ("data",)))
 
     cases = [
         ("bound_p", TriplePattern(v(0), 7, v(1)), 30),
@@ -110,6 +118,20 @@ def run_selector_backends(full: bool = False) -> Dict:
              dt_b * 1e6 / len(omegas),
              f"per_request;cand_shared={rec.cand_streamed};"
              f"cells={rec.cells};hbm_passes_saved={rec.groups - 1}")
+
+        # sharded windowed backend: same selection, per-shard window
+        # launches -- per-launch streaming is the window, not the range
+        ssel = ShardedSelector(fed, window=2048)
+        dt_s = _time(lambda: ssel.select_with_cnt(tp, omegas[0]), reps=2)
+        ssel.launches.clear()
+        ssel.select_with_cnt(tp, omegas[0])  # launch count of ONE select
+        per_launch = ssel.launches[-1]
+        n_launch = len(ssel.launches)
+        out[name + "_sharded"] = (dt_s, n_launch, per_launch)
+        emit(f"kernels/selector_{name}_sharded_interp", dt_s * 1e6,
+             f"window={per_launch.cand_streamed};"
+             f"launches={n_launch};shards={fed.shards};"
+             f"cand_total={per_launch.cand_streamed * n_launch}")
     return out
 
 

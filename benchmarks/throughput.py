@@ -12,10 +12,14 @@ overtake brTPF in completed queries; average QET grows slower for brTPF.
 
 Selector-backend axis (beyond-paper): the brTPF workload is also traced
 through the *kernel* selector backend (Pallas bind-join over the store's
-candidate ranges) and replayed under the TPU launch cost model, with and
-without cross-request batching (``SimParams.batch_window_s``), so the
-server-side speedup of the kernel path is a measured comparison on the
-same request streams, not an assertion.
+candidate ranges) and the *sharded* windowed backend (mesh-partitioned
+store, fixed per-shard window launches) and replayed under the TPU
+launch cost model, with and without cross-request batching
+(``SimParams.batch_window_s``), so the server-side speedup of the
+accelerated paths is a measured comparison on the same request streams,
+not an assertion. ``run_sharded_axis`` sweeps the sharded geometry
+(per-shard window) and the whole run persists to
+``BENCH_throughput.json`` at the repo root for cross-PR tracking.
 """
 from __future__ import annotations
 
@@ -30,9 +34,15 @@ from repro.core import AsyncBrTPFClient, AsyncBrTPFServer
 from repro.core.sim import (calibrate, collect_traces, simulate,
                             split_workload)
 
-from .common import BenchConfig, emit, make_server, workload
+from .common import BenchConfig, emit, make_server, persist, workload
 
 BUDGETS_PATH = os.path.join(os.path.dirname(__file__), "budgets.json")
+
+# Per-shard window used by every sharded-backend measurement below (and
+# by the budget gate): large enough that WatDiv CI-scale ranges take a
+# handful of window launches, small enough that per-launch streaming
+# stays an order of magnitude under the store size.
+SHARD_WINDOW = 2048
 
 
 def run(full: bool = False) -> Dict:
@@ -53,8 +63,10 @@ def run(full: bool = False) -> Dict:
     traces = {}
     for kind, backend, mpr in [("tpf", "numpy", None),
                                ("brtpf", "numpy", 30),
-                               ("brtpf-kernel", "kernel", 30)]:
-        server = make_server(max_mpr=mpr or 30, selector_backend=backend)
+                               ("brtpf-kernel", "kernel", 30),
+                               ("brtpf-sharded", "sharded", 30)]:
+        server = make_server(max_mpr=mpr or 30, selector_backend=backend,
+                             shard_window=SHARD_WINDOW)
         traces[kind] = collect_traces(
             server, wl, kind.split("-")[0], max_mpr=mpr,
             request_budget=cfg.request_budget)
@@ -79,20 +91,25 @@ def run(full: bool = False) -> Dict:
                     f"horizon={res.simulated_s:.0f}s")
 
     # selector-backend axis: same brTPF request streams, kernel launch
-    # cost model, batching off vs on
-    for n in client_counts:
-        for label, window in [("batch0", 0.0), ("batch2ms", 2e-3)]:
-            kp = dataclasses.replace(params, batch_window_s=window)
-            per_client = split_workload(traces["brtpf-kernel"], n)
-            res = simulate(per_client, kp, cache_size=None,
-                           use_cache=False, wrap=True)
-            out[("brtpf-kernel", n, label)] = res
-            emit(
-                f"throughput/brtpf_kernel_c{n}_{label}", 0.0,
-                f"completed_per_hr={res.throughput_per_hour:.0f};"
-                f"timeouts={res.timeouts};"
-                f"avg_qet={res.avg_qet:.2f}s;"
-                f"horizon={res.simulated_s:.0f}s")
+    # cost model (single-host kernel vs mesh-sharded windowed), batching
+    # off vs on
+    for kind in ("brtpf-kernel", "brtpf-sharded"):
+        for n in client_counts:
+            for label, window in [("batch0", 0.0), ("batch2ms", 2e-3)]:
+                kp = dataclasses.replace(params, batch_window_s=window)
+                per_client = split_workload(traces[kind], n)
+                res = simulate(per_client, kp, cache_size=None,
+                               use_cache=False, wrap=True)
+                out[(kind, n, label)] = res
+                emit(
+                    f"throughput/{kind.replace('-', '_')}_c{n}_{label}",
+                    0.0,
+                    f"completed_per_hr={res.throughput_per_hour:.0f};"
+                    f"timeouts={res.timeouts};"
+                    f"launches_per_request="
+                    f"{res.launches_per_request:.3f};"
+                    f"avg_qet={res.avg_qet:.2f}s;"
+                    f"horizon={res.simulated_s:.0f}s")
     return out
 
 
@@ -103,10 +120,12 @@ def run(full: bool = False) -> Dict:
 
 def _run_concurrent(backend: str, n: int, wl, request_budget: int,
                     batch_window_s: float = 2e-3,
-                    max_batch: int = 64) -> Dict:
+                    max_batch: int = 64,
+                    shard_window: int = SHARD_WINDOW) -> Dict:
     """Run ``n`` concurrent AsyncBrTPFClients over one front end;
     returns wall-clock + launch accounting."""
-    server = make_server(selector_backend=backend)
+    server = make_server(selector_backend=backend,
+                         shard_window=shard_window)
     front = AsyncBrTPFServer(server, batch_window_s=batch_window_s,
                              max_batch=max_batch)
     per_client = split_workload(wl, n)
@@ -132,6 +151,13 @@ def _run_concurrent(backend: str, n: int, wl, request_budget: int,
         "req_per_s": c.num_requests / max(wall, 1e-9),
         "launches": c.kernel_launches,
         "launches_per_request": c.kernel_launches / reqs,
+        # per-device candidate rows streamed (window * launches on the
+        # sharded backend, padded range buckets on the kernel backend)
+        "cand_streamed": c.kernel_cand_streamed,
+        "cand_streamed_per_request": c.kernel_cand_streamed / reqs,
+        "shard_window": shard_window if backend == "sharded" else 0,
+        "shards": (server.federated.shards
+                   if backend == "sharded" else 0),
         "batched_requests": c.kernel_batched_requests,
         "flushes": front.stats.flushes,
         "mean_batch": front.stats.mean_batch,
@@ -142,17 +168,18 @@ def _run_concurrent(backend: str, n: int, wl, request_budget: int,
 
 def run_async(full: bool = False, smoke: bool = False) -> Dict:
     """Wall-clock concurrency axis: 1/4/16/64 in-flight clients on the
-    real async batching front end, numpy vs kernel backend."""
+    real async batching front end, numpy vs kernel vs sharded backend."""
     cfg = BenchConfig.default()
     wl = list(workload())
     if smoke:
         wl = wl[:6]
-        grid = [("kernel", 1), ("kernel", 8)]
+        grid = [("kernel", 1), ("kernel", 8), ("sharded", 8)]
     else:
         if not full:
             wl = wl[:12]
         counts = [1, 4, 16, 64]
-        grid = [(b, n) for b in ("numpy", "kernel") for n in counts]
+        grid = [(b, n) for b in ("numpy", "kernel", "sharded")
+                for n in counts]
     out: Dict = {}
     for backend, n in grid:
         r = _run_concurrent(backend, n, wl, cfg.request_budget)
@@ -162,8 +189,45 @@ def run_async(full: bool = False, smoke: bool = False) -> Dict:
             f"req_per_s={r['req_per_s']:.0f};"
             f"requests={r['requests']};"
             f"launches_per_request={r['launches_per_request']:.3f};"
+            f"cand_per_request={r['cand_streamed_per_request']:.0f};"
             f"batched={r['batched_requests']};"
             f"mean_batch={r['mean_batch']:.1f};"
+            f"completed={r['completed']};"
+            f"wall={r['wall_s']:.1f}s")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Sharded axis: shards x window (the tentpole's perf claim)
+# ---------------------------------------------------------------------------
+
+
+def run_sharded_axis(full: bool = False) -> Dict:
+    """Sweep the sharded backend's geometry: per-shard window size (and
+    every shard the host exposes -- on a multi-device host the store is
+    mesh-partitioned across all of them).
+
+    The claim this axis demonstrates: candidates streamed per request
+    are bounded by the *window* (one device's per-launch stream),
+    independent of range/store/shard size -- versus the kernel backend,
+    whose per-request stream is the pattern's padded range bucket.
+    """
+    cfg = BenchConfig.default()
+    wl = list(workload())
+    if not full:
+        wl = wl[:12]
+    windows = [256, 1024, 2048, 8192] if full else [512, 2048]
+    out: Dict = {}
+    for window in windows:
+        r = _run_concurrent("sharded", 8, wl, cfg.request_budget,
+                            shard_window=window)
+        out[("sharded", 8, window)] = r
+        emit(
+            f"throughput/sharded_c8_w{window}", 0.0,
+            f"shards={r['shards']};"
+            f"req_per_s={r['req_per_s']:.0f};"
+            f"launches_per_request={r['launches_per_request']:.3f};"
+            f"cand_per_request={r['cand_streamed_per_request']:.0f};"
             f"completed={r['completed']};"
             f"wall={r['wall_s']:.1f}s")
     return out
@@ -206,9 +270,13 @@ def main(argv=None) -> int:
         results = run_async(smoke=True)
         failures = check_budgets(results)
         return 1 if failures else 0
+    out: Dict = {}
     if not args.async_only:
-        run(full=args.full)
-    run_async(full=args.full)
+        out["replay"] = run(full=args.full)
+    out["async"] = run_async(full=args.full)
+    out["sharded_axis"] = run_sharded_axis(full=args.full)
+    path = persist("throughput", out)
+    print(f"# persisted -> {path}")
     return 0
 
 

@@ -21,10 +21,12 @@ def main() -> None:
     ap.add_argument("--clients", type=int, default=16)
     ap.add_argument("--queries", type=int, default=48)
     ap.add_argument("--cache", action="store_true")
-    ap.add_argument("--selector-backend", choices=["numpy", "kernel"],
+    ap.add_argument("--selector-backend",
+                    choices=["numpy", "kernel", "sharded"],
                     default="numpy",
-                    help="origin-server selector: numpy per-pattern loop"
-                         " or the Pallas bind-join kernel path")
+                    help="origin-server selector: numpy per-pattern loop,"
+                         " the Pallas bind-join kernel path, or the"
+                         " mesh-sharded windowed path")
     args = ap.parse_args()
 
     data = generate(WatDivScale(users=1000, products=400, reviews=1500),

@@ -100,6 +100,8 @@ class _ClientBase:
             "cand": (after.kernel_cand_streamed
                      - before.kernel_cand_streamed),
             "pats": after.kernel_pat_slots - before.kernel_pat_slots,
+            "launches": (after.kernel_launches
+                         - before.kernel_launches),
         })
         if self._use_client_cache:
             self._client_cache[req.key()] = frag

@@ -12,11 +12,22 @@ This is the paper's thesis expressed in mesh terms: the bindings (a few
 KB) travel to the data, instead of the data (the full TPF fragment)
 traveling to the client. The dry-run rooflines in EXPERIMENTS.md quantify
 exactly this collective-byte saving.
+
+Since PR 3 the *windowed* request step is the default: each shard
+binary-searches its sorted keys for the pattern's bound-prefix range and
+streams only a fixed ``window`` of it per launch, so per-request device
+work scales with the window -- never with the range or the shard size.
+:class:`ShardedSelector` packages this as a first-class selector backend
+for :class:`~repro.core.server.BrTPFServer` (``selector_backend=
+"sharded"``), byte-identical to ``selectors.brtpf_select_with_cnt`` and
+sharing the grouped multi-request geometry (G same-pattern requests =
+one sharded launch) and :class:`~repro.core.kernel_selectors.LaunchRecord`
+accounting surface with the single-host kernel path.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,8 +36,16 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import enable_x64, shard_map
 from ..kernels import ops as kops
+from .kernel_selectors import (LaunchRecord, marshal_pattern_grid,
+                               stream_order)
 from .rdf import TriplePattern, is_var
 from .selectors import instantiate_patterns
+
+# Default per-shard window: one launch streams this many candidate rows
+# per device. 8 * 128 VPU sublane*lane tiles; small enough that a page-0
+# probe of a selective pattern costs a fraction of a shard pass, large
+# enough that WatDiv-scale ranges need a handful of windows.
+DEFAULT_SHARD_WINDOW = 1024
 
 
 def _local_brtpf(cand: jnp.ndarray, patterns: jnp.ndarray,
@@ -53,9 +72,10 @@ class FederatedStore:
 
     Each shard keeps its partition SPO-sorted with packed int64 keys
     (every federation member is an HDT-style server), which enables the
-    beyond-paper *windowed* request path: a bound-prefix pattern binary-
-    searches the shard-local range and scans only a fixed window of it,
-    instead of streaming the whole shard through the bind-join kernel.
+    *windowed* request path (the default since PR 3): a bound-prefix
+    pattern binary-searches the shard-local range and scans only a fixed
+    window of it, instead of streaming the whole shard through the
+    bind-join kernel.
     """
 
     mesh: Mesh
@@ -64,6 +84,14 @@ class FederatedStore:
     valid: jax.Array         # bool  [shards * shard_n]
     keys: jax.Array          # int64 [shards * shard_n], per-shard sorted
     shard_n: int
+    # jit-cache for the windowed request steps, keyed on the static
+    # launch geometry (window, groups, pattern slots, projection).
+    _steps: Dict[tuple, object] = dataclasses.field(
+        default_factory=dict, repr=False)
+
+    @property
+    def shards(self) -> int:
+        return self.mesh.shape[self.axis]
 
     @classmethod
     def build(cls, triples_np: np.ndarray, mesh: Mesh,
@@ -99,7 +127,7 @@ class FederatedStore:
                    keys=keys_dev,
                    shard_n=shard_n)
 
-    # -- the request path ----------------------------------------------------
+    # -- host-side request marshalling ---------------------------------------
 
     def request_arrays(self, tp: TriplePattern,
                        omega: Optional[np.ndarray],
@@ -124,9 +152,46 @@ class FederatedStore:
         )
         return pats, valid, base_vec
 
+    @staticmethod
+    def prefix_keys(tp: TriplePattern) -> Tuple[int, int]:
+        """(lo_key, hi_key) of the pattern's bound SPO prefix -- the
+        host-computed range bounds every shard binary-searches (the
+        client computing a page URL, in mesh terms)."""
+        from .store import _MAX_ID, _pack
+        prefix = []
+        for c in tp.as_tuple():
+            if is_var(c):
+                break
+            prefix.append(c)
+        lo_vals = prefix + [0] * (3 - len(prefix))
+        hi_vals = prefix + [_MAX_ID] * (3 - len(prefix))
+        lo = int(_pack(np.int64(lo_vals[0]), np.int64(lo_vals[1]),
+                       np.int64(lo_vals[2])))
+        hi = int(_pack(np.int64(hi_vals[0]), np.int64(hi_vals[1]),
+                       np.int64(hi_vals[2])))
+        return lo, hi
+
+    # -- the request path ----------------------------------------------------
+
     def execute(self, tp: TriplePattern, omega: Optional[np.ndarray],
                 max_mpr: int, capacity: int) -> np.ndarray:
-        """Run one distributed brTPF request; returns matching triples."""
+        """Run one distributed brTPF request; returns matching triples.
+
+        Routed through the windowed step (the default request path):
+        per-shard device work is bounded by the window, and -- unlike
+        :meth:`execute_full` -- the result can never be truncated by an
+        undersized ``capacity`` (each window's page capacity is the
+        window itself).
+        """
+        return self.execute_windowed(tp, omega, max_mpr, capacity,
+                                     window=min(capacity, self.shard_n))
+
+    def execute_full(self, tp: TriplePattern, omega: Optional[np.ndarray],
+                     max_mpr: int, capacity: int) -> np.ndarray:
+        """The paper-faithful baseline: every shard streams its whole
+        partition through the bind-join kernel in one launch. Kept for
+        the dry-run roofline comparison; ``capacity`` bounds the local
+        page (matches beyond it are silently dropped)."""
         pats, valid, base_vec = self.request_arrays(tp, omega, max_mpr)
         pages, counts = self.lowerable(capacity)(
             self.triples, self.valid, jnp.asarray(pats),
@@ -136,9 +201,10 @@ class FederatedStore:
         return pages[keep]
 
     def lowerable(self, capacity: int):
-        """The jitted distributed request step (also used by the dry-run:
-        ``.lower(...).compile()`` proves the collective schedule)."""
-        mesh, axis, shard_n = self.mesh, self.axis, self.shard_n
+        """The jitted full-shard-stream request step (also used by the
+        dry-run: ``.lower(...).compile()`` proves the collective
+        schedule of the baseline variant)."""
+        mesh, axis = self.mesh, self.axis
 
         def step(triples, valid, pats, pat_valid, base_vec):
             def shard_fn(cand, cand_valid, p, pv, bv):
@@ -161,11 +227,11 @@ class FederatedStore:
 
         return jax.jit(step)
 
-    # -- beyond-paper optimized request path ----------------------------------
+    # -- the windowed request path (default) ---------------------------------
 
     def lowerable_windowed(self, capacity: int, window: int,
                            wild_cols: tuple = (0, 1, 2)):
-        """Optimized request step (see EXPERIMENTS.md §Perf(D)):
+        """Single-request windowed step (see EXPERIMENTS.md §Perf(D)):
 
         1. *windowed scan*: each shard binary-searches its sorted keys
            for the pattern's bound-prefix range and runs the bind-join
@@ -178,9 +244,12 @@ class FederatedStore:
            bytes by (3 - len(wild_cols))/3.
 
         Inputs add (lo_key, hi_key) int64 scalars (host-computed from
-        the pattern prefix, identical on every shard).
+        the pattern prefix, identical on every shard). Page windows are
+        *disjoint* spans of the range (a span near the shard edge is
+        masked, not shifted), so paging never double-reports a triple.
         """
         mesh, axis = self.mesh, self.axis
+        window = max(1, min(window, self.shard_n))
 
         def step(triples, valid, keys, pats, pat_valid, base_vec,
                  lo_key, hi_key, page_idx):
@@ -188,18 +257,10 @@ class FederatedStore:
                 start = jnp.searchsorted(k, lo, side="left")
                 end = jnp.searchsorted(k, hi, side="right")
                 range_len = end - start                 # page metadata
-                start = start + pi.astype(start.dtype) * window
-                start = jnp.minimum(start,
-                                    jnp.asarray(max(k.shape[0] - window,
-                                                    0), start.dtype))
-                win = jax.lax.dynamic_slice_in_dim(
-                    cand, start.astype(jnp.int32), window, axis=0)
-                win_valid = jax.lax.dynamic_slice_in_dim(
-                    cand_valid, start.astype(jnp.int32), window, axis=0)
-                idx_in_range = (jnp.arange(window, dtype=start.dtype)
-                                + start) < end
+                win, win_valid, in_span = _window_slice(
+                    cand, cand_valid, start, end, pi, window)
                 page, count = _local_brtpf(
-                    win, p, pv, bv, win_valid & idx_in_range, capacity)
+                    win, p, pv, bv, win_valid & in_span, capacity)
                 page = page[:, list(wild_cols)]
                 page = jax.lax.all_gather(page, axis)
                 count = jax.lax.all_gather(count, axis)
@@ -218,57 +279,249 @@ class FederatedStore:
 
         return jax.jit(step)
 
+    def lowerable_windowed_grouped(self, window: int, groups: int,
+                                   wild_cols: tuple = (0, 1, 2)):
+        """Grouped windowed step: G same-pattern requests, one launch.
+
+        The sharded twin of ``kops.bindjoin_grouped``'s geometry: every
+        shard streams ONE window of its bound-prefix range and evaluates
+        all G requests' instantiated-pattern sets against it, so
+        coalesced batches (``BrTPFServer.handle_batch`` /
+        ``AsyncBrTPFServer``) cost one sharded launch per window instead
+        of G. Per (shard, group) the step emits a fixed-shape page of
+        compacted kept rows (capacity = window, so a window's matches
+        always fit), the first-matching-pattern index per kept row (the
+        stream id the ordering epilogue needs), the kept-row count, and
+        the group's Definition-2 ``cnt`` contribution (sum of per-row
+        matching-pattern counts); plus the shard's range length for
+        paging. Jitted steps are cached per static geometry on the
+        store (``_steps``).
+
+        Returns arrays shaped (shards, G, window[, C]) / (shards, G) /
+        (shards,) after the all-gather.
+        """
+        # clamp before building the cache key, so raw windows that
+        # clamp to the same effective value share one traced step
+        window = max(1, min(window, self.shard_n))
+        key = ("grouped", window, groups, wild_cols)
+        fn = self._steps.get(key)
+        if fn is not None:
+            return fn
+        mesh, axis = self.mesh, self.axis
+
+        def step(triples, valid, keys, pats, pat_valid, base_vec,
+                 lo_key, hi_key, page_idx):
+            def shard_fn(cand, cand_valid, k, p, pv, bv, lo, hi, pi):
+                start = jnp.searchsorted(k, lo, side="left")
+                end = jnp.searchsorted(k, hi, side="right")
+                range_len = end - start
+                win, win_valid, in_span = _window_slice(
+                    cand, cand_valid, start, end, pi, window)
+                keep, idx, nmatch = kops.bindjoin_grouped(win, p, pv)
+                base = kops.tpf_match(win, bv)
+                mask = (keep & base[:, None]
+                        & (win_valid & in_span)[:, None])        # (W, G)
+                cnts = jnp.sum(jnp.where(mask, nmatch, 0), axis=0)
+                rows, counts = jax.vmap(
+                    lambda m: kops.compact_mask(m, window),
+                    in_axes=1, out_axes=0)(mask)          # (G, W), (G,)
+                safe = jnp.maximum(rows, 0)
+                page = jnp.take(win, safe, axis=0)        # (G, W, 3)
+                first = jax.vmap(lambda r, col: col[r],
+                                 in_axes=(0, 1))(safe, idx)   # (G, W)
+                page = page[:, :, list(wild_cols)]
+                page = jnp.where((rows >= 0)[:, :, None], page, -1)
+                first = jnp.where(rows >= 0, first, -1)
+                page = jax.lax.all_gather(page, axis)
+                first = jax.lax.all_gather(first, axis)
+                counts = jax.lax.all_gather(counts, axis)
+                cnts = jax.lax.all_gather(cnts, axis)
+                range_len = jax.lax.all_gather(range_len, axis)
+                return page, first, counts, cnts, range_len
+
+            fn = shard_map(
+                shard_fn, mesh=mesh,
+                in_specs=(P(axis, None), P(axis), P(axis), P(), P(),
+                          P(), P(), P(), P()),
+                out_specs=(P(), P(), P(), P(), P()),
+                check_vma=False,
+            )
+            return fn(triples, valid, keys, pats, pat_valid, base_vec,
+                      lo_key, hi_key, page_idx)
+
+        fn = jax.jit(step)
+        self._steps[key] = fn
+        return fn
+
     def execute_windowed(self, tp: TriplePattern,
                          omega: Optional[np.ndarray], max_mpr: int,
                          capacity: int, window: int) -> np.ndarray:
-        """Run the optimized path end-to-end: window paging until every
-        shard\'s bound-prefix range is covered (the first response carries
-        each shard\'s range length -- the cnt metadata of Definition 2),
-        with client-side reconstruction of projected columns."""
-        from .store import _pack, _MAX_ID
-        pats, valid, base_vec = self.request_arrays(tp, omega, max_mpr)
+        """Run the windowed path end-to-end: disjoint window pages until
+        every shard's bound-prefix range is covered (the first response
+        carries each shard's range length -- the cnt metadata of
+        Definition 2), with client-side reconstruction of projected
+        columns.
+
+        Returns the fragment's data-triple sequence byte-identical
+        (values AND order) to ``selectors.brtpf_select_with_cnt``.
+        ``capacity`` is accepted for interface symmetry with
+        :meth:`execute_full` but the per-window page capacity is the
+        window itself, so results are never truncated.
+        """
+        del capacity  # windowed pages are capacity-safe by construction
+        insts = instantiate_patterns(tp, omega)
+        if len(insts) > max_mpr:
+            raise ValueError(f"{len(insts)} instantiations > maxMpR")
+        selector = ShardedSelector(self, window=window)
+        data, _cnt = selector.select_with_cnt(tp, omega, insts)
+        return data
+
+
+def _window_slice(cand, cand_valid, start, end, pi, window: int):
+    """Slice window ``pi`` of the shard-local range [start, end).
+
+    The span ``[start + pi*window, min(start + (pi+1)*window, end))`` is
+    what this page *owns*; the physical slice start is clamped into the
+    array so ``dynamic_slice`` never clips, and ``in_span`` masks the
+    slice back to the owned span -- spans are disjoint across pages and
+    exactly tile the range, so no triple is reported twice and none is
+    skipped.
+    """
+    shard_n = cand.shape[0]
+    span_lo = start + pi.astype(start.dtype) * window
+    slice_start = jnp.clip(span_lo, 0, max(shard_n - window, 0))
+    win = jax.lax.dynamic_slice_in_dim(
+        cand, slice_start.astype(jnp.int32), window, axis=0)
+    win_valid = jax.lax.dynamic_slice_in_dim(
+        cand_valid, slice_start.astype(jnp.int32), window, axis=0)
+    pos = jnp.arange(window, dtype=jnp.int64) + slice_start
+    in_span = (pos >= span_lo) & (pos < jnp.minimum(span_lo + window,
+                                                    end))
+    return win, win_valid, in_span
+
+
+def _pow2(n: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+class ShardedSelector:
+    """Mesh-sharded windowed selector with the KernelSelector contract.
+
+    Serves the bindings-restricted selector from a
+    :class:`FederatedStore` without ever materializing a candidate
+    range: each launch streams one ``window`` per shard, G same-pattern
+    requests share the launch (grouped geometry), and the host epilogue
+    (:func:`~repro.core.kernel_selectors.stream_order` over the
+    all-gathered kept rows + first-match indices) makes the returned
+    data-triple sequence and Definition-2 ``cnt`` byte-identical to
+    ``selectors.brtpf_select_with_cnt``.
+
+    Why parity holds across shards: the store partitions the triples,
+    so every triple is evaluated on exactly one shard, and page spans
+    are disjoint within a shard -- each matching triple is kept exactly
+    once, with the same first-matching-pattern stream id the single-host
+    kernel computes; the epilogue's (stream, packed-key) sort is a total
+    order, so concatenation order across shards/windows is irrelevant.
+    ``cnt`` sums the per-row matching-pattern counts over all shards,
+    which equals the oracle's sum of per-instantiation stream sizes.
+
+    ``launches`` records one :class:`LaunchRecord` per window launch
+    with ``cand_streamed = window`` -- the rows ONE device streams --
+    so the accounting surface (and the budgets gated on it) is shared
+    with the single-host kernel path.
+    """
+
+    def __init__(self, fed: FederatedStore,
+                 window: int = DEFAULT_SHARD_WINDOW) -> None:
+        self.fed = fed
+        self.window = max(1, min(int(window), fed.shard_n))
+        self.launches: List[LaunchRecord] = []
+
+    # -- public API (same contract as KernelSelector) ------------------------
+
+    def select_with_cnt(
+        self, tp: TriplePattern, omega: Optional[np.ndarray],
+        insts: Optional[List[TriplePattern]] = None,
+    ) -> Tuple[np.ndarray, int]:
+        """Sharded ``brtpf_select_with_cnt`` (byte-identical)."""
+        return self.select_same_pattern(
+            tp, [omega], None if insts is None else [insts])[0]
+
+    def select_same_pattern(
+        self, tp: TriplePattern, omegas: Sequence[Optional[np.ndarray]],
+        patterns: Optional[List[List[TriplePattern]]] = None,
+    ) -> List[Tuple[np.ndarray, int]]:
+        """Serve G same-pattern requests from one sharded launch per
+        window page. Returns per-request (data sequence, cnt), each
+        identical to ``brtpf_select_with_cnt(store, tp, omega_g)``."""
+        if patterns is None:
+            patterns = [instantiate_patterns(tp, om) for om in omegas]
+        g = len(omegas)
+        m = max(len(p) for p in patterns)
+        # pad the grid to bucketed static shapes (bounded jit cache):
+        # groups to a power of two, pattern slots to the kernel m-tile.
+        gpad = _pow2(g)
+        mp = kops.padded_pattern_slots(m)
+        pats, valid, base_vec = marshal_pattern_grid(tp, patterns,
+                                                     gpad, mp)
         comps = tp.as_tuple()
-        # bound-prefix range in SPO order (host side, like the client
-        # computing a page URL)
-        prefix = []
-        for c in comps:
-            if is_var(c):
-                break
-            prefix.append(c)
-        lo_vals = prefix + [0] * (3 - len(prefix))
-        hi_vals = prefix + [_MAX_ID] * (3 - len(prefix))
-        lo = int(_pack(np.int64(lo_vals[0]), np.int64(lo_vals[1]),
-                       np.int64(lo_vals[2])))
-        hi = int(_pack(np.int64(hi_vals[0]), np.int64(hi_vals[1]),
-                       np.int64(hi_vals[2])))
         wild = [i for i, c in enumerate(comps) if is_var(c)]
-        fn = self.lowerable_windowed(capacity, window,
-                                     wild_cols=tuple(wild) or (0,))
-        all_pages = []
+        wild_cols = tuple(wild) or (0,)  # dummy column when fully bound
+        lo, hi = self.fed.prefix_keys(tp)
+        window = self.window
+        fn = self.fed.lowerable_windowed_grouped(window, gpad,
+                                                 wild_cols=wild_cols)
+
+        kept: List[List[np.ndarray]] = [[] for _ in range(g)]
+        firsts: List[List[np.ndarray]] = [[] for _ in range(g)]
+        cnt_total = np.zeros((g,), dtype=np.int64)
         with enable_x64(True):
+            lo_dev = jnp.asarray(lo, jnp.int64)
+            hi_dev = jnp.asarray(hi, jnp.int64)
+            pats_dev = jnp.asarray(pats)
+            valid_dev = jnp.asarray(valid)
+            bv_dev = jnp.asarray(base_vec)
             page_idx = 0
             while True:
-                pages, counts, range_len = fn(
-                    self.triples, self.valid, self.keys,
-                    jnp.asarray(pats), jnp.asarray(valid),
-                    jnp.asarray(base_vec),
-                    jnp.asarray(lo, jnp.int64),
-                    jnp.asarray(hi, jnp.int64),
+                pages, first, counts, cnts, range_len = fn(
+                    self.fed.triples, self.fed.valid, self.fed.keys,
+                    pats_dev, valid_dev, bv_dev, lo_dev, hi_dev,
                     jnp.asarray(page_idx, jnp.int32))
-                all_pages.append(np.asarray(pages))
-                max_range = int(np.asarray(range_len).max())
+                pages = np.asarray(pages)
+                first = np.asarray(first)
+                counts = np.asarray(counts)
+                cnt_total += np.asarray(cnts)[:, :g].sum(axis=0)
+                self.launches.append(LaunchRecord(
+                    cand_streamed=window, pat_slots=gpad * mp, groups=g))
+                for s in range(pages.shape[0]):
+                    for gi in range(g):
+                        n = int(counts[s, gi])
+                        if n:
+                            kept[gi].append(pages[s, gi, :n])
+                            firsts[gi].append(first[s, gi, :n])
                 page_idx += 1
-                if page_idx * window >= max_range:
+                if page_idx * window >= int(np.asarray(range_len).max()):
                     break
-        pages = np.concatenate(all_pages).reshape(-1, max(len(wild), 1))
-        keep = pages[:, 0] >= 0
-        pages = pages[keep]
-        # reconstruct full triples from the request's bound components
-        out = np.empty((pages.shape[0], 3), np.int32)
-        wi = 0
-        for i, c in enumerate(comps):
-            if is_var(c):
-                out[:, i] = pages[:, wild.index(i)]
-            else:
-                out[:, i] = c
-        return np.unique(out, axis=0) if out.shape[0] else out
+
+        out: List[Tuple[np.ndarray, int]] = []
+        empty = np.empty((0, 3), dtype=np.int32)
+        for gi in range(g):
+            if not kept[gi]:
+                out.append((empty, int(cnt_total[gi])))
+                continue
+            proj = np.concatenate(kept[gi], axis=0)
+            first_g = np.concatenate(firsts[gi], axis=0)
+            # reconstruct full triples from the request's bound
+            # components (the wire carried only unbound columns)
+            full = np.empty((proj.shape[0], 3), dtype=np.int32)
+            for i, c in enumerate(comps):
+                if is_var(c):
+                    full[:, i] = proj[:, wild.index(i)]
+                else:
+                    full[:, i] = c
+            out.append((stream_order(full, first_g, patterns[gi]),
+                        int(cnt_total[gi])))
+        return out

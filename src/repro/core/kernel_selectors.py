@@ -84,7 +84,15 @@ def _compact_epilogue(keep, idx_first, nmatch, base_mask, row_valid,
 
 @dataclasses.dataclass
 class LaunchRecord:
-    """Geometry/accounting of one grouped kernel launch."""
+    """Geometry/accounting of one grouped kernel launch.
+
+    The single accounting surface for every accelerated selector path:
+    the single-host :class:`KernelSelector` records one per grouped
+    bind-join launch (``cand_streamed`` = padded range bucket), the
+    mesh-sharded selector (``federation.ShardedSelector``) one per
+    window launch (``cand_streamed`` = the per-shard window -- what one
+    device streams, independent of range or shard size).
+    """
 
     cand_streamed: int      # padded candidates streamed once (T)
     pat_slots: int          # padded pattern slots across groups (G * Mp)
@@ -93,6 +101,59 @@ class LaunchRecord:
     @property
     def cells(self) -> int:
         return self.cand_streamed * self.pat_slots
+
+
+def marshal_pattern_grid(
+    tp: TriplePattern, patterns: Sequence[List[TriplePattern]],
+    g_slots: int, m_slots: int,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Encode per-request instantiated-pattern lists as kernel inputs.
+
+    Returns (pats int32 [g_slots, m_slots, 3] with -1 wildcards,
+    valid int32 [g_slots, m_slots], base_vec int32 [8] carrying the
+    base pattern's components + repeated-variable equality flags).
+    Shared by the single-host kernel selector and the sharded windowed
+    selector so the two backends cannot drift in how they encode a
+    request (``g_slots``/``m_slots`` are each caller's padded grid).
+    """
+    pats = np.full((g_slots, m_slots, 3), -1, dtype=np.int32)
+    valid = np.zeros((g_slots, m_slots), dtype=np.int32)
+    for gi, insts in enumerate(patterns):
+        for mi, p in enumerate(insts):
+            pats[gi, mi] = [c if not is_var(c) else -1
+                            for c in p.as_tuple()]
+            valid[gi, mi] = 1
+    comps = tp.as_tuple()
+    base_vec = kops.pattern_vec_from(
+        tuple(-1 if is_var(c) else c for c in comps),
+        eq_sp=int(is_var(comps[0]) and comps[0] == comps[1]),
+        eq_so=int(is_var(comps[0]) and comps[0] == comps[2]),
+        eq_po=int(is_var(comps[1]) and comps[1] == comps[2]),
+    )
+    return pats, valid, base_vec
+
+
+def stream_order(kept: np.ndarray, first: np.ndarray,
+                 insts: List[TriplePattern]) -> np.ndarray:
+    """Reorder kept rows into the numpy selector's sequence order.
+
+    The numpy selector concatenates per-pattern match streams in
+    pattern order, then dedups keeping first occurrences: a triple
+    lands in the stream of the first pattern it matches, and within
+    a stream rows ascend by packed key under that pattern's chosen
+    index. ``first`` (from the kernel) gives the stream; the packed
+    key is recomputed here for the kept rows only. Shared by the
+    single-host kernel selector and the sharded windowed selector --
+    it is what makes both byte-identical to the oracle.
+    """
+    sortkey = np.empty(kept.shape[0], dtype=np.int64)
+    for j in np.unique(first):
+        name, _ = TripleStore._choose_index(insts[j])
+        order = _ORDERS[name]
+        sel = first == j
+        sortkey[sel] = _pack(kept[sel, order[0]], kept[sel, order[1]],
+                             kept[sel, order[2]])
+    return kept[np.lexsort((sortkey, first))]
 
 
 class KernelSelector:
@@ -135,21 +196,7 @@ class KernelSelector:
 
         g = len(omegas)
         m = max(len(p) for p in patterns)
-        pats = np.full((g, m, 3), -1, dtype=np.int32)
-        valid = np.zeros((g, m), dtype=np.int32)
-        for gi, insts in enumerate(patterns):
-            for mi, p in enumerate(insts):
-                pats[gi, mi] = [c if not is_var(c) else -1
-                                for c in p.as_tuple()]
-                valid[gi, mi] = 1
-
-        tp_comps = tp.as_tuple()
-        base_vec = kops.pattern_vec_from(
-            tuple(-1 if is_var(c) else c for c in tp_comps),
-            eq_sp=int(is_var(tp_comps[0]) and tp_comps[0] == tp_comps[1]),
-            eq_so=int(is_var(tp_comps[0]) and tp_comps[0] == tp_comps[2]),
-            eq_po=int(is_var(tp_comps[1]) and tp_comps[1] == tp_comps[2]),
-        )
+        pats, valid, base_vec = marshal_pattern_grid(tp, patterns, g, m)
 
         # Pad the candidate block to a shape bucket (bounded jit cache).
         tpad = _bucket(t)
@@ -190,20 +237,4 @@ class KernelSelector:
 
     def _stream_order(self, kept: np.ndarray, first: np.ndarray,
                       insts: List[TriplePattern]) -> np.ndarray:
-        """Reorder kept rows into the numpy selector's sequence order.
-
-        The numpy selector concatenates per-pattern match streams in
-        pattern order, then dedups keeping first occurrences: a triple
-        lands in the stream of the first pattern it matches, and within
-        a stream rows ascend by packed key under that pattern's chosen
-        index. ``first`` (from the kernel) gives the stream; the packed
-        key is recomputed here for the kept rows only.
-        """
-        sortkey = np.empty(kept.shape[0], dtype=np.int64)
-        for j in np.unique(first):
-            name, _ = TripleStore._choose_index(insts[j])
-            order = _ORDERS[name]
-            sel = first == j
-            sortkey[sel] = _pack(kept[sel, order[0]], kept[sel, order[1]],
-                                 kept[sel, order[2]])
-        return kept[np.lexsort((sortkey, first))]
+        return stream_order(kept, first, insts)

@@ -19,6 +19,19 @@ bindings-restricted selector:
   candidate range (``kernel_selectors.KernelSelector``); byte-identical
   fragments, one HBM pass per request, and ``handle_batch`` coalesces
   concurrent same-pattern requests into one grouped launch.
+* ``"sharded"`` -- the mesh-partitioned windowed selector
+  (``federation.ShardedSelector`` over a ``FederatedStore``): one shard
+  per device along ``mesh`` axis ``data``, each launch streams one
+  fixed ``shard_window`` of the shard-local sorted range (per-device
+  work bounded by the window, never by range or shard size), and
+  ``handle_batch`` coalescing rides the same grouped geometry (G
+  same-pattern requests = one sharded launch per window). Fragments are
+  byte-identical to both other backends.
+
+The kernel and sharded backends share one selector interface
+(``select_with_cnt`` / ``select_same_pattern`` / ``launches``) and one
+``LaunchRecord`` accounting surface, so batching, memoization, paging
+and the launch-budget gates are backend-agnostic.
 """
 from __future__ import annotations
 
@@ -84,8 +97,11 @@ class BrTPFServer:
         meta_triples_per_page: int = DEFAULT_META_TRIPLES_PER_PAGE,
         cache: Optional[LRUCache] = None,
         selector_backend: str = "numpy",
+        mesh=None,
+        shard_window: Optional[int] = None,
+        shard_axis: str = "data",
     ) -> None:
-        if selector_backend not in ("numpy", "kernel"):
+        if selector_backend not in ("numpy", "kernel", "sharded"):
             raise ValueError(f"unknown selector_backend {selector_backend!r}")
         self.store = store
         self.page_size = int(page_size)
@@ -93,10 +109,25 @@ class BrTPFServer:
         self.meta_triples_per_page = int(meta_triples_per_page)
         self.cache = cache
         self.selector_backend = selector_backend
-        self._kernel_selector = None
+        # Accelerated selector (kernel or sharded backend); None for the
+        # paper-faithful numpy oracle. Both implementations share the
+        # select_with_cnt / select_same_pattern / launches interface.
+        self._selector = None
         if selector_backend == "kernel":
             from .kernel_selectors import KernelSelector
-            self._kernel_selector = KernelSelector(store)
+            self._selector = KernelSelector(store)
+        elif selector_backend == "sharded":
+            from .federation import (DEFAULT_SHARD_WINDOW, FederatedStore,
+                                     ShardedSelector)
+            if mesh is None:
+                import jax
+                from jax.sharding import Mesh
+                mesh = Mesh(np.array(jax.devices()), (shard_axis,))
+            self.federated = FederatedStore.build(store.triples, mesh,
+                                                  axis=shard_axis)
+            self._selector = ShardedSelector(
+                self.federated,
+                window=shard_window or DEFAULT_SHARD_WINDOW)
         self.counters = Counters()
         # Selector memo: a real server streams a fragment across its
         # pages instead of recomputing the selection per page request.
@@ -161,7 +192,7 @@ class BrTPFServer:
         if req.is_brtpf:
             patterns = instantiate_patterns(req.pattern, req.omega)
             self.counters.server_lookups += len(patterns)
-            if self._kernel_selector is not None:
+            if self._selector is not None:
                 data, cnt = self._select_kernel(req.pattern, req.omega,
                                                 patterns)
             else:
@@ -169,7 +200,7 @@ class BrTPFServer:
                                                   req.omega)
         else:
             self.counters.server_lookups += 1
-            if self._kernel_selector is not None:
+            if self._selector is not None:
                 data, cnt = self._select_kernel(req.pattern, None,
                                                 [req.pattern])
             else:
@@ -181,10 +212,10 @@ class BrTPFServer:
     def _select_kernel(self, tp: TriplePattern,
                        omega: Optional[np.ndarray],
                        insts) -> Tuple[np.ndarray, int]:
-        n0 = len(self._kernel_selector.launches)
-        data, cnt = self._kernel_selector.select_with_cnt(tp, omega,
+        n0 = len(self._selector.launches)
+        data, cnt = self._selector.select_with_cnt(tp, omega,
                                                           insts)
-        self._charge_launches(self._kernel_selector.launches[n0:])
+        self._charge_launches(self._selector.launches[n0:])
         return data, cnt
 
     def _charge_launches(self, launches, batched_requests: int = 0) -> None:
@@ -233,13 +264,15 @@ class BrTPFServer:
     def handle_batch(self, reqs: Sequence[Request]) -> List[Fragment]:
         """Serve a set of concurrent page requests as one unit.
 
-        With the kernel backend, brTPF/TPF requests for the *same*
-        triple pattern whose selector results are not already available
-        (memo or HTTP cache) are coalesced into one grouped bind-join
-        launch -- one shared HBM pass over the pattern's candidate range
-        instead of one pass per request. Responses (and all paging /
-        caching / transfer accounting) are identical to issuing the
-        requests through :meth:`handle` one by one.
+        With an accelerated backend (kernel or sharded), brTPF/TPF
+        requests for the *same* triple pattern whose selector results
+        are not already available (memo or HTTP cache) are coalesced
+        into one grouped launch sequence -- one shared pass over the
+        pattern's candidate stream (the range bucket on the kernel
+        path; each per-shard window on the sharded path) instead of one
+        pass per request. Responses (and all paging / caching /
+        transfer accounting) are identical to issuing the requests
+        through :meth:`handle` one by one.
 
         The batch is atomic with respect to validation: an over-maxMpR
         member raises :class:`MaxMprExceeded` *before* any selector
@@ -247,7 +280,7 @@ class BrTPFServer:
         """
         for req in reqs:
             self.validate(req)
-        if self._kernel_selector is None:
+        if self._selector is None:
             return [self.handle(r) for r in reqs]
         # A batch may carry more distinct selections than the memo cap;
         # widen it for the batch's lifetime so prefilled results are
@@ -281,10 +314,10 @@ class BrTPFServer:
             omegas = [r.omega if r.is_brtpf else None
                       for r in member_reqs]
             insts = [instantiate_patterns(tp, om) for om in omegas]
-            n0 = len(self._kernel_selector.launches)
-            results = self._kernel_selector.select_same_pattern(
+            n0 = len(self._selector.launches)
+            results = self._selector.select_same_pattern(
                 tp, omegas, insts)
-            self._charge_launches(self._kernel_selector.launches[n0:],
+            self._charge_launches(self._selector.launches[n0:],
                                   batched_requests=len(member_reqs))
             for req, patterns, (data, cnt) in zip(member_reqs, insts,
                                                   results):

@@ -43,12 +43,18 @@ class HttpRecord:
     scanned: int
     recv: int
     # kernel-backend launch geometry (zero for numpy-backend traces):
-    # ``cand`` padded candidates streamed, ``pats`` padded pattern slots
-    # of this request's launch share; ``pattern_key`` identifies requests
-    # that can share one candidate stream under cross-request batching.
+    # ``cand`` padded candidates streamed (summed over this request's
+    # launches; on the sharded backend each launch streams one per-shard
+    # window, so cand = launches * window), ``pats`` padded pattern
+    # slots of this request's launch share, ``launches`` how many kernel
+    # launches the request triggered (1 on the single-host kernel path;
+    # the per-shard window-page count on the sharded path);
+    # ``pattern_key`` identifies requests that can share one candidate
+    # stream under cross-request batching.
     pattern_key: tuple = ()
     cand: int = 0
     pats: int = 0
+    launches: int = 0
 
 
 @dataclasses.dataclass
@@ -356,16 +362,28 @@ def simulate(traces_per_client: Sequence[Sequence[QueryTrace]],
             elif ev.cand > 0:
                 # kernel-backend request: per-launch cost model, with
                 # optional cross-request batching on the pattern key.
-                shared = (params.kernel_launch_overhead_s
+                # ``cand`` already sums the candidate rows streamed over
+                # all of the request's launches (window pages on the
+                # sharded backend run as separate launches -- on every
+                # shard in parallel -- so each pays dispatch overhead
+                # but the HBM stream total is just ``cand``).
+                n_launch = max(ev.launches, 1)
+                shared = (n_launch * params.kernel_launch_overhead_s
                           + ev.cand * params.kernel_stream_s)
                 # per-request work that never batches: HTTP handling +
-                # this request's own pattern-slot compare cells
+                # this request's own pattern-slot compare cells (pats
+                # sums per-launch slot counts, so the per-launch grid is
+                # cand/n * pats/n cells, summed over n launches).
                 marginal = (params.req_overhead_s
-                            + ev.cand * ev.pats * params.kernel_cell_s)
+                            + ev.cand * ev.pats
+                            * params.kernel_cell_s / n_launch)
                 launch, created = server.schedule_launch(
                     t, ev.pattern_key, shared, marginal)
                 kernel_requests += 1
-                sim_launches += int(created)
+                # a created request stands for all of its window
+                # launches (1 on the single-host kernel path); a
+                # joining request rides them and creates none.
+                sim_launches += n_launch if created else 0
                 if params.batch_window_s > 0.0:
                     # block this client on the launch: it resumes (with
                     # its response transfer) when the launch completes,

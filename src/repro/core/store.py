@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -57,22 +57,56 @@ class _Index:
 class CandidateRange:
     """The contiguous prefix range a pattern maps to in its chosen index.
 
-    This is the store's device-facing contract: ``triples`` is the packed
-    candidate block the Pallas bind-join kernel streams through VMEM in
-    one HBM pass (index order, hence deterministic), and ``(index, lo,
-    hi, prefix_len)`` identify the range for paging/accounting. Every
+    This is the store's device-facing contract: ``(index, lo, hi,
+    prefix_len)`` identify the range for paging/accounting, and every
     triple matching the pattern -- or any instantiation of it -- lies in
-    this range.
+    this range. The range is *lazy*: holding a ``CandidateRange`` (e.g.
+    in the store's range memo) costs O(1), not O(hi - lo).
+
+    ``window(page, size)`` gathers only ``perm[lo + page*size : ...]``
+    -- the true range->page index: a page>0 request materializes just
+    its window, never the whole range. ``triples`` materializes the full
+    block (index order, hence deterministic) for consumers that stream
+    it in one HBM pass (the single-host bind-join kernel) and caches it,
+    so repeated full reads through the memo gather once.
     """
 
     index: str                   # index name: "spo" | "pos" | "osp"
     lo: int                      # range start in the index
     hi: int                      # range end (exclusive)
     prefix_len: int              # bound components covered by the prefix
-    triples: np.ndarray          # int32 [hi - lo, 3], in index order
+    _store_triples: np.ndarray = dataclasses.field(repr=False, default=None)
+    _perm: np.ndarray = dataclasses.field(repr=False, default=None)
+    _materialized: Optional[np.ndarray] = dataclasses.field(
+        repr=False, default=None)
 
     def __len__(self) -> int:
         return self.hi - self.lo
+
+    def window(self, page: int, size: int) -> np.ndarray:
+        """Rows ``[lo + page*size, min(lo + (page+1)*size, hi))`` of the
+        range, int32 [<=size, 3], gathered without materializing the
+        rest (unless the full block is already cached)."""
+        a = self.lo + page * size
+        b = min(a + size, self.hi)
+        if a >= b:
+            return np.empty((0, 3), dtype=np.int32)
+        if self._materialized is not None:
+            return self._materialized[a - self.lo : b - self.lo]
+        return self._store_triples[self._perm[a:b]]
+
+    @property
+    def triples(self) -> np.ndarray:
+        """Full materialized block, int32 [hi - lo, 3] (cached)."""
+        if self._materialized is None:
+            self._materialized = \
+                self._store_triples[self._perm[self.lo:self.hi]]
+        return self._materialized
+
+    @property
+    def materialized_rows(self) -> int:
+        """Rows this range actually pins (memo accounting unit)."""
+        return 0 if self._materialized is None else len(self)
 
     @property
     def components(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -103,15 +137,18 @@ class TripleStore:
             self._indexes[name] = _Index(order, keys[perm], perm)
         # Per-pattern candidate-range memo (ROADMAP "Kernel-path TPF
         # paging"): materializing ``triples[perm[lo:hi]]`` is the
-        # expensive part of ``candidate_range`` -- a gather over a range
-        # that can span the whole store. The store is immutable, so the
-        # memo never goes stale; the server evicts it coherently with
-        # its selector memo (``BrTPFServer._trim_selector_memo``).
+        # expensive part of a range read -- a gather over a range that
+        # can span the whole store. Ranges are lazy, so a memo entry is
+        # O(1) until some consumer materializes its full block; the
+        # store is immutable, so the memo never goes stale; the server
+        # evicts it coherently with its selector memo
+        # (``BrTPFServer._trim_selector_memo``).
         self._range_memo: "OrderedDict[tuple, CandidateRange]" = OrderedDict()
         self.range_memo_cap = 64
-        # Broad patterns materialize near-store-sized copies; bound the
-        # memo by retained ROWS as well as entries so 64 low-selectivity
-        # ranges can't pin ~64x the store (newest entry always kept).
+        # Broad patterns can materialize near-store-sized copies; bound
+        # the memo by retained (materialized) ROWS as well as entries so
+        # 64 low-selectivity ranges can't pin ~64x the store (newest
+        # entry always kept).
         self.range_memo_max_rows = max(4 * triples.shape[0], 4096)
         self._range_memo_rows = 0
         self.range_memo_hits = 0
@@ -173,32 +210,44 @@ class TripleStore:
     # -- public API (the HDT-backend contract) ------------------------------
 
     def candidate_range(self, tp: TriplePattern) -> CandidateRange:
-        """Candidate block for ``tp`` as packed arrays (kernel input).
+        """Lazy candidate range for ``tp`` (kernel / windowed input).
 
-        The chosen index's bound-prefix range, materialized in index
-        order. Supersets the exact match set (non-prefix bound
-        components and repeated-variable constraints are *not* applied
-        here -- the bind-join/tpf-match kernels resolve those on device).
+        The chosen index's bound-prefix range, in index order. Supersets
+        the exact match set (non-prefix bound components and
+        repeated-variable constraints are *not* applied here -- the
+        bind-join/tpf-match kernels resolve those on device). No rows
+        are gathered until ``.window()`` or ``.triples`` is read.
         """
         key = tp.as_tuple()
         memo = self._range_memo.get(key)
         if memo is not None:
             self.range_memo_hits += 1
             self._range_memo.move_to_end(key)
+            # rows are pinned lazily (a consumer may have materialized
+            # since the last access), so re-enforce the row bound on
+            # hits too -- the just-hit entry is LRU-newest, never popped
+            self._trim_range_memo()
             return memo
         self.range_memo_misses += 1
         name, lo, hi, plen = self._prefix_range(tp)
         idx = self._indexes[name]
         rng = CandidateRange(index=name, lo=lo, hi=hi, prefix_len=plen,
-                             triples=self.triples[idx.perm[lo:hi]])
+                             _store_triples=self.triples, _perm=idx.perm)
         self._range_memo[key] = rng
-        self._range_memo_rows += len(rng)
+        self._trim_range_memo()
+        return rng
+
+    def _trim_range_memo(self) -> None:
+        # Ranges pin rows lazily (only after a full ``.triples`` read),
+        # so retained rows are recounted here rather than tracked
+        # incrementally at insert time.
+        self._range_memo_rows = sum(r.materialized_rows
+                                    for r in self._range_memo.values())
         while len(self._range_memo) > 1 and (
                 len(self._range_memo) > self.range_memo_cap
                 or self._range_memo_rows > self.range_memo_max_rows):
             _, old = self._range_memo.popitem(last=False)
-            self._range_memo_rows -= len(old)
-        return rng
+            self._range_memo_rows -= old.materialized_rows
 
     def evict_candidate_range(self, pattern_tuple: Tuple[int, int, int]
                               ) -> bool:
@@ -207,7 +256,7 @@ class TripleStore:
         old = self._range_memo.pop(pattern_tuple, None)
         if old is None:
             return False
-        self._range_memo_rows -= len(old)
+        self._range_memo_rows -= old.materialized_rows
         return True
 
     def cardinality(self, tp: TriplePattern) -> int:
@@ -232,11 +281,15 @@ class TripleStore:
         return int(self.match(tp).shape[0])
 
     def match(self, tp: TriplePattern) -> np.ndarray:
-        """All matching triples for ``tp``, int32 [M, 3], SPO-sorted order
-        of the chosen index (deterministic for paging)."""
-        name, lo, hi, _ = self._prefix_range(tp)
-        idx = self._indexes[name]
-        cand = self.triples[idx.perm[lo:hi]]
+        """All matching triples for ``tp``, int32 [M, 3], sorted order
+        of the chosen index (deterministic for paging).
+
+        Routed through :meth:`candidate_range` so a range the memo
+        already holds is not re-gathered (``cardinality``'s fallback
+        scan previously double-paid the gather) and the reuse is counted
+        in ``range_memo_hits``.
+        """
+        cand = self.candidate_range(tp).triples
         if cand.shape[0] == 0:
             return cand
         mask = np.ones(cand.shape[0], dtype=bool)

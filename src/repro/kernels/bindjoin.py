@@ -148,8 +148,11 @@ def _bindjoin_grouped_kernel(cs_ref, cp_ref, co_ref, ps_ref, pp_ref,
     )                          # (BT, BM) bool
 
     any_m = jnp.any(comp, axis=1, keepdims=True)              # (BT, 1)
+    # dtype pinned: under an enable_x64 context (the sharded windowed
+    # path traces with int64 keys live) the sum would promote to int64
+    # and no longer match the int32 output ref.
     cnt_m = jnp.sum(comp.astype(jnp.int32), axis=1,
-                    keepdims=True)                            # (BT, 1)
+                    keepdims=True).astype(jnp.int32)          # (BT, 1)
     # Within-group pattern index of each column in this m-tile.
     col = jax.lax.broadcasted_iota(jnp.int32, comp.shape, 1)
     col = col + m_step * bm

@@ -81,6 +81,57 @@ class TestStore:
         assert store.match(TriplePattern(V(0), V(1), V(2))).shape == (0, 3)
         assert store.cardinality(TriplePattern(1, 2, 3)) == 0
 
+    def test_candidate_range_is_lazy_and_windowed(self):
+        """A range holds no rows until materialized; window(page, size)
+        gathers only its slice and tiles the range exactly."""
+        store = TripleStore(small_graph(4, n=400))
+        tp = TriplePattern(V(0), 5, V(1))
+        rng = store.candidate_range(tp)
+        assert rng.materialized_rows == 0
+        w0 = rng.window(0, 7)
+        assert w0.shape[0] == min(7, len(rng))
+        assert rng.materialized_rows == 0      # windows never pin rows
+        pages = []
+        p = 0
+        while True:
+            w = rng.window(p, 7)
+            if w.shape[0] == 0:
+                break
+            pages.append(w)
+            p += 1
+        full = rng.triples                     # now materialized + cached
+        assert rng.materialized_rows == len(rng)
+        assert np.array_equal(np.concatenate(pages) if pages
+                              else np.empty((0, 3), np.int32), full)
+        # out-of-range page is empty, not an error
+        assert rng.window(p + 3, 7).shape == (0, 3)
+
+    def test_lazy_materialization_still_bounded_by_row_cap(self):
+        """Ranges materialized AFTER their lazy insert must still be
+        trimmed by the row cap (re-enforced on every memo access)."""
+        store = TripleStore(small_graph(6, n=500))
+        store.range_memo_max_rows = 80
+        pats = [TriplePattern(V(0), V(1), o) for o in range(8)]
+        for tp in pats:            # lazy inserts: nothing pinned yet
+            store.candidate_range(tp)
+        for tp in pats:            # memo hits materialize full blocks
+            store.match(tp)
+        store.candidate_range(pats[-1])   # next access re-checks bound
+        live = sum(r.materialized_rows
+                   for r in store._range_memo.values())
+        assert live <= store.range_memo_max_rows
+
+    def test_match_reuses_memoized_range(self):
+        """cardinality's fallback scan must not re-gather a range match
+        already materialized (satellite: route match via the memo)."""
+        store = TripleStore(small_graph(5, n=400))
+        tp = TriplePattern(V(0), 5, V(0))      # repeated var -> scan fallback
+        store.match(tp)
+        misses0, hits0 = store.range_memo_misses, store.range_memo_hits
+        store.cardinality(tp)                  # fallback scan
+        assert store.range_memo_misses == misses0
+        assert store.range_memo_hits > hits0
+
 
 # ---------------------------------------------------------------------------
 # brTPF selector (Definition 1)

@@ -64,8 +64,9 @@ def test_federated_tpf_fallback_empty_omega():
     (5, 2, "v0"), (7, "v0", "v1"), ("v0", 3, "v1"),
     (4, "v0", 9), ("v0", 2, "v0"), ("v0", "v1", "v2")])
 def test_windowed_path_matches_host(tp_spec):
-    """Beyond-paper windowed+projected request == host selector, for
-    every bound/unbound pattern shape (incl. window paging)."""
+    """Windowed+projected request (the default path) is *byte-identical*
+    to the host selector sequence, for every bound/unbound pattern shape
+    (incl. window paging)."""
     comps = [encode_var(int(c[1:])) if isinstance(c, str) else c
              for c in tp_spec]
     tp = TriplePattern(*comps)
@@ -79,5 +80,92 @@ def test_windowed_path_matches_host(tp_spec):
     got = fed.execute_windowed(tp, omega, max_mpr=16, capacity=2048,
                                window=512)
     want = brtpf_select(store, tp, omega)
-    assert (set(map(tuple, got.tolist()))
-            == set(map(tuple, want.tolist())))
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# Windowed-path parity satellites: vs store.match, edges, multi-page
+# ---------------------------------------------------------------------------
+
+
+def build_pair(seed=5, n=3000, terms=30):
+    rng = np.random.default_rng(seed)
+    triples = np.unique(
+        rng.integers(0, terms, size=(n, 3)).astype(np.int32), axis=0)
+    store = TripleStore(triples)
+    fed = FederatedStore.build(store.triples, single_device_mesh())
+    return store, fed, rng
+
+
+def test_windowed_tpf_matches_store_match_byte_order():
+    """Plain TPF (omega=None) through the windowed path == store.match
+    exactly -- values AND order -- even when window << range."""
+    store, fed, _ = build_pair()
+    for tp in [TriplePattern(V(0), 3, V(1)),
+               TriplePattern(7, V(0), V(1)),
+               TriplePattern(V(0), V(1), V(2))]:
+        got = fed.execute_windowed(tp, None, max_mpr=4, capacity=64,
+                                   window=128)
+        np.testing.assert_array_equal(got, store.match(tp))
+
+
+def test_windowed_repeated_variable_multi_page():
+    """Repeated-variable patterns across multiple window pages."""
+    store, fed, rng = build_pair(seed=6)
+    for tp in [TriplePattern(V(0), 2, V(0)),
+               TriplePattern(V(0), V(0), V(1)),
+               TriplePattern(V(0), V(0), V(0))]:
+        got = fed.execute_windowed(tp, None, max_mpr=4, capacity=64,
+                                   window=64)
+        np.testing.assert_array_equal(got, store.match(tp))
+        omega = rng.integers(0, 30, size=(5, 1)).astype(np.int32)
+        got = fed.execute_windowed(tp, omega, max_mpr=8, capacity=64,
+                                   window=64)
+        want = brtpf_select(store, tp, omega)
+        np.testing.assert_array_equal(got, want)
+
+
+def test_windowed_omega_restricted_multi_page():
+    """Omega-restricted requests where window < range length: disjoint
+    page spans must neither drop nor duplicate triples."""
+    store, fed, rng = build_pair(seed=7)
+    tp = TriplePattern(V(0), 3, V(1))
+    omega = rng.integers(0, 30, size=(10, 2)).astype(np.int32)
+    omega[rng.random((10, 2)) < 0.5] = -1
+    range_len = len(store.candidate_range(tp))
+    window = max(range_len // 5, 1)     # force >= 5 window pages
+    got = fed.execute_windowed(tp, omega, max_mpr=16, capacity=64,
+                               window=window)
+    want = brtpf_select(store, tp, omega)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_windowed_fully_bound_pattern():
+    """Fully-bound patterns: no unbound column exists to project, and
+    the padding filter must not test a bound component (the pre-PR-3 bug
+    projected column 0)."""
+    store, fed, _ = build_pair(seed=8, n=500, terms=12)
+    present = store.triples[3]
+    tp_hit = TriplePattern(int(present[0]), int(present[1]),
+                           int(present[2]))
+    got = fed.execute_windowed(tp_hit, None, max_mpr=2, capacity=8,
+                               window=32)
+    np.testing.assert_array_equal(got, present.reshape(1, 3))
+    tp_miss = TriplePattern(11, 11, 11)
+    got = fed.execute_windowed(tp_miss, None, max_mpr=2, capacity=8,
+                               window=32)
+    np.testing.assert_array_equal(got, store.match(tp_miss))
+
+
+def test_windowed_empty_range():
+    """A bound prefix absent from the store: empty (0, 3) result, no
+    error, regardless of window size vs shard size."""
+    store, fed, _ = build_pair(seed=9, n=200, terms=10)
+    tp = TriplePattern(9999, V(0), V(1))
+    got = fed.execute_windowed(tp, None, max_mpr=2, capacity=8,
+                               window=4096)   # window > shard_n too
+    assert got.shape == (0, 3)
+    om = np.array([[3]], np.int32)
+    got = fed.execute_windowed(TriplePattern(9999, 1, V(0)), om,
+                               max_mpr=2, capacity=8, window=16)
+    assert got.shape == (0, 3)
