@@ -3,7 +3,9 @@
 Layers: dictionary-encoded RDF (``rdf``), HDT-style store (``store``),
 selector functions per Definitions 1-2 (``selectors``), the combined
 TPF/brTPF server (``server``), the two client algorithms (``client``),
-LRU cache simulation (``cache``), and request accounting (``metrics``).
+LRU cache simulation (``cache``), the unified page-granular fragment
+store under every cache layer (``fragments``), and request accounting
+(``metrics``).
 """
 from .batching import (AsyncBrTPFServer, BatchStats, drive_streams,
                        serve_concurrent)
@@ -11,7 +13,8 @@ from .bgp import BGP, bgp_from_arrays, evaluate_bgp_reference, parse_bgp
 from .cache import LRUCache, request_key
 from .client import (AsyncBrTPFClient, BrTPFClient, ExecutionResult,
                      TPFClient, plan_join_order)
-from .metrics import Counters
+from .fragments import (ClientFragmentCache, FragmentStore, fragment_key)
+from .metrics import Counters, layer_metrics
 from .rdf import (TermDictionary, TriplePattern, UNBOUND, compatible,
                   decode_var, dedup_mappings, encode_var, is_var,
                   mapping_from_triple, merge, project_mappings)
@@ -28,10 +31,12 @@ from .store import CandidateRange, TripleStore, store_from_ntriples
 # repro.core.kernel_selectors explicitly.
 __all__ = [
     "AsyncBrTPFClient", "AsyncBrTPFServer", "BatchStats",
-    "BGP", "BrTPFClient", "BrTPFServer", "CandidateRange", "Counters",
+    "BGP", "BrTPFClient", "BrTPFServer", "CandidateRange",
+    "ClientFragmentCache", "Counters",
     "ExecutionResult",
-    "Fragment", "LRUCache",
+    "Fragment", "FragmentStore", "LRUCache",
     "MaxMprExceeded", "Request", "TPFClient",
+    "fragment_key", "layer_metrics",
     "drive_streams", "plan_join_order", "serve_concurrent",
     "TermDictionary", "TriplePattern", "TripleStore", "UNBOUND",
     "bgp_from_arrays", "brtpf_cardinality", "brtpf_select", "brtpf_select_with_cnt", "compatible",

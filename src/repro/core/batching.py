@@ -18,6 +18,13 @@ Flush semantics (documented contract, tested in tests/test_batching.py):
   misbehaving client cannot poison the coalesced requests of others
   (``handle_batch`` itself stays atomic; the front end simply never
   feeds it an invalid member).
+* A request whose page is already resident in the server's unified
+  fragment store (HTTP-cached page or memo-resident fragment,
+  ``BrTPFServer.page_resident``) is served immediately instead of
+  waiting out the window: it launches nothing, so there is nothing to
+  coalesce, and holding it would only add latency. Counted in
+  ``BatchStats.fast_path``; responses/accounting identical to the
+  batched path.
 * The first pending request arms a flush timer for ``batch_window_s``
   seconds; the batch flushes when the timer fires or as soon as
   ``max_batch`` requests are pending, whichever comes first. Exactly one
@@ -55,6 +62,7 @@ class BatchStats:
 
     requests: int = 0           # accepted into a batch
     rejected: int = 0           # failed validation at enqueue
+    fast_path: int = 0          # served immediately: page already resident
     flushes: int = 0            # non-empty batches dispatched
     timer_flushes: int = 0      # ... because the window elapsed
     full_flushes: int = 0       # ... because max_batch was reached
@@ -114,6 +122,18 @@ class AsyncBrTPFServer:
         except Exception:
             self.stats.rejected += 1
             raise
+        # Unified-store fast path: a page that is already resident (an
+        # HTTP-cached page or a memo-resident fragment) launches
+        # nothing, so there is nothing to coalesce -- serve it now
+        # instead of holding it for the batching window. Responses and
+        # accounting are identical to the batched path (handle() serves
+        # from the store either way); only the window latency is saved.
+        # The flush lock serializes this handle() against handle_batch
+        # (with an executor, a flush mutates server state off-loop).
+        if self.server.page_resident(req):
+            async with self._flush_lock:
+                self.stats.fast_path += 1
+                return self.server.handle(req)
         loop = asyncio.get_running_loop()
         fut: "asyncio.Future" = loop.create_future()
         self._pending.append((req, fut))

@@ -24,6 +24,7 @@ from typing import Callable, List, Optional, Sequence
 import numpy as np
 
 from .bgp import BGP
+from .fragments import ClientFragmentCache
 from .rdf import (UNBOUND, TriplePattern, is_var, decode_var,
                   mapping_from_triple)
 from .server import BrTPFServer, Request
@@ -52,7 +53,11 @@ class _ClientBase:
     repeats would dominate #req/dataRecv and make them grow with page
     size -- which the paper's measurements rule out (section 5.3).
     The cache is cleared per execute() (the paper restarts the client
-    process between query executions)."""
+    process between query executions). Both the sync clients here and
+    :class:`AsyncBrTPFClient` share one implementation --
+    :class:`~repro.core.fragments.ClientFragmentCache`, a page layer of
+    the same :class:`~repro.core.fragments.FragmentStore` class the
+    server's unified cache is built on."""
 
     def __init__(self, server: BrTPFServer,
                  request_budget: Optional[int] = None,
@@ -61,8 +66,7 @@ class _ClientBase:
         self.server = server
         self.request_budget = request_budget
         self._requests_used = 0
-        self._use_client_cache = client_cache
-        self._client_cache: dict = {}
+        self.client_cache = ClientFragmentCache(client_cache)
         # tick(kind, units) lets the throughput simulator charge time for
         # client-side work ("join") and network round trips ("request").
         self._tick = tick or (lambda kind, units: None)
@@ -72,10 +76,9 @@ class _ClientBase:
     def _fetch(self, pattern: TriplePattern,
                omega: Optional[np.ndarray], page: int):
         req = Request(pattern, omega, page)
-        if self._use_client_cache:
-            cached = self._client_cache.get(req.key())
-            if cached is not None:
-                return cached  # local hit: nothing on the wire
+        cached = self.client_cache.get(req.key())
+        if cached is not None:
+            return cached  # local hit: nothing on the wire
         if (self.request_budget is not None
                 and self._requests_used >= self.request_budget):
             raise RequestBudgetExceeded()
@@ -103,8 +106,7 @@ class _ClientBase:
             "launches": (after.kernel_launches
                          - before.kernel_launches),
         })
-        if self._use_client_cache:
-            self._client_cache[req.key()] = frag
+        self.client_cache.put(req.key(), frag)
         return frag
 
     def _fetch_all_pages(self, pattern: TriplePattern,
@@ -135,7 +137,7 @@ class _ClientBase:
 class TPFClient(_ClientBase):
     def execute(self, bgp: BGP) -> ExecutionResult:
         self._requests_used = 0
-        self._client_cache.clear()
+        self.client_cache.clear()
         base = self.server.counters.snapshot()
         timed_out = False
         acc: List[np.ndarray] = []
@@ -220,7 +222,7 @@ class BrTPFClient(_ClientBase):
 
     def execute(self, bgp: BGP) -> ExecutionResult:
         self._requests_used = 0
-        self._client_cache.clear()
+        self.client_cache.clear()
         base = self.server.counters.snapshot()
         timed_out = False
         sols = np.empty((0, bgp.num_vars), dtype=np.int32)
@@ -308,18 +310,16 @@ class AsyncBrTPFClient:
         self.request_budget = request_budget
         self._requests_used = 0
         self._received = 0
-        self._use_client_cache = client_cache
-        self._client_cache: dict = {}
+        self.client_cache = ClientFragmentCache(client_cache)
 
     # -- HTTP boundary (async) ----------------------------------------------
 
     async def _fetch(self, pattern: TriplePattern,
                      omega: Optional[np.ndarray], page: int):
         req = Request(pattern, omega, page)
-        if self._use_client_cache:
-            cached = self._client_cache.get(req.key())
-            if cached is not None:
-                return cached
+        cached = self.client_cache.get(req.key())
+        if cached is not None:
+            return cached
         if (self.request_budget is not None
                 and self._requests_used >= self.request_budget):
             raise RequestBudgetExceeded()
@@ -328,8 +328,7 @@ class AsyncBrTPFClient:
             self.server.counters.mappings_sent += int(omega.shape[0])
         frag = await self.front.handle(req)
         self._received += frag.triples_received
-        if self._use_client_cache:
-            self._client_cache[req.key()] = frag
+        self.client_cache.put(req.key(), frag)
         return frag
 
     async def _fetch_all_pages(self, pattern: TriplePattern,
@@ -358,7 +357,7 @@ class AsyncBrTPFClient:
         # everyone.
         self._requests_used = 0
         self._received = 0
-        self._client_cache.clear()
+        self.client_cache.clear()
         timed_out = False
         sols = np.empty((0, bgp.num_vars), dtype=np.int32)
         try:

@@ -36,7 +36,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import enable_x64, shard_map
 from ..kernels import ops as kops
-from .kernel_selectors import (LaunchRecord, marshal_pattern_grid,
+from .fragments import FragmentStore
+from .kernel_selectors import (LaunchRecord, consult_fragments,
+                               marshal_pattern_grid, record_fragments,
                                stream_order)
 from .rdf import TriplePattern, is_var
 from .selectors import instantiate_patterns
@@ -435,9 +437,11 @@ class ShardedSelector:
     """
 
     def __init__(self, fed: FederatedStore,
-                 window: int = DEFAULT_SHARD_WINDOW) -> None:
+                 window: int = DEFAULT_SHARD_WINDOW,
+                 fragments: Optional[FragmentStore] = None) -> None:
         self.fed = fed
         self.window = max(1, min(int(window), fed.shard_n))
+        self.fragments = fragments
         self.launches: List[LaunchRecord] = []
 
     # -- public API (same contract as KernelSelector) ------------------------
@@ -456,9 +460,29 @@ class ShardedSelector:
     ) -> List[Tuple[np.ndarray, int]]:
         """Serve G same-pattern requests from one sharded launch per
         window page. Returns per-request (data sequence, cnt), each
-        identical to ``brtpf_select_with_cnt(store, tp, omega_g)``."""
+        identical to ``brtpf_select_with_cnt(store, tp, omega_g)``.
+
+        Groups resident in the connected fragment store never launch a
+        window: their share is recorded as skipped (same contract as
+        :class:`~repro.core.kernel_selectors.KernelSelector`)."""
         if patterns is None:
             patterns = [instantiate_patterns(tp, om) for om in omegas]
+        results, live = consult_fragments(self.fragments, tp, omegas,
+                                          self.launches)
+        if live:
+            live_omegas = [omegas[i] for i in live]
+            fresh = self._launch_groups(tp, live_omegas,
+                                        [patterns[i] for i in live])
+            record_fragments(self.fragments, tp, live_omegas, fresh)
+            for i, res in zip(live, fresh):
+                results[i] = res
+        return results
+
+    def _launch_groups(
+        self, tp: TriplePattern, omegas: Sequence[Optional[np.ndarray]],
+        patterns: List[List[TriplePattern]],
+    ) -> List[Tuple[np.ndarray, int]]:
+        """Windowed sharded launches over the store-miss groups."""
         g = len(omegas)
         m = max(len(p) for p in patterns)
         # pad the grid to bucketed static shapes (bounded jit cache):

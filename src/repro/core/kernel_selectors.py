@@ -47,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops as kops
+from .fragments import FragmentStore, fragment_key
 from .rdf import TriplePattern, is_var
 from .selectors import instantiate_patterns
 from .store import _ORDERS, TripleStore, _pack
@@ -92,11 +93,18 @@ class LaunchRecord:
     mesh-sharded selector (``federation.ShardedSelector``) one per
     window launch (``cand_streamed`` = the per-shard window -- what one
     device streams, independent of range or shard size).
+
+    ``skipped=True`` records a launch that was *avoided* because the
+    requested fragment was already resident in the unified fragment
+    store (``core/fragments.py``): no candidates were streamed, no
+    pattern slots paid, and the server's launch budget must not charge
+    it (``Counters.launches_skipped`` counts these instead).
     """
 
     cand_streamed: int      # padded candidates streamed once (T)
     pat_slots: int          # padded pattern slots across groups (G * Mp)
     groups: int             # requests served by the launch
+    skipped: bool = False   # avoided entirely: fragment-store residency
 
     @property
     def cells(self) -> int:
@@ -156,11 +164,64 @@ def stream_order(kept: np.ndarray, first: np.ndarray,
     return kept[np.lexsort((sortkey, first))]
 
 
-class KernelSelector:
-    """Bind-join-kernel selector over one :class:`TripleStore`."""
+def consult_fragments(
+    fragments: Optional[FragmentStore], tp: TriplePattern,
+    omegas: Sequence[Optional[np.ndarray]],
+    launches: List[LaunchRecord],
+) -> Tuple[List[Optional[Tuple[np.ndarray, int]]], List[int]]:
+    """Serve request groups already resident in the unified fragment
+    store; return (results-with-resident-filled, live group indices).
 
-    def __init__(self, store: TripleStore) -> None:
+    Shared by the single-host and sharded selectors: each resident
+    group's launch share is *skipped* -- recorded as a
+    ``LaunchRecord(skipped=True)`` plus ``fragments.note_skip()`` --
+    and only the live indices proceed to marshalling/launch. Residency
+    peeks are non-counting (the server accounts its own memo lookups
+    for the same requests); they do bump the entry's LRU position.
+    """
+    results: List[Optional[Tuple[np.ndarray, int]]] = [None] * len(omegas)
+    if fragments is None:
+        return results, list(range(len(omegas)))
+    live: List[int] = []
+    for i, om in enumerate(omegas):
+        got = fragments.peek_data(fragment_key(tp.as_tuple(), om),
+                                  touch=True)
+        if got is not None:
+            results[i] = got
+            fragments.note_skip()
+            launches.append(LaunchRecord(cand_streamed=0, pat_slots=0,
+                                         groups=1, skipped=True))
+        else:
+            live.append(i)
+    return results, live
+
+
+def record_fragments(
+    fragments: Optional[FragmentStore], tp: TriplePattern,
+    omegas: Sequence[Optional[np.ndarray]],
+    results: Sequence[Tuple[np.ndarray, int]],
+) -> None:
+    """Register freshly computed selections so the *next* identical
+    request -- through any layer -- skips its launch."""
+    if fragments is None:
+        return
+    for om, payload in zip(omegas, results):
+        fragments.put_data(fragment_key(tp.as_tuple(), om), payload)
+
+
+class KernelSelector:
+    """Bind-join-kernel selector over one :class:`TripleStore`.
+
+    ``fragments`` optionally connects the selector to the unified
+    fragment store: selections already resident there are returned
+    without a kernel launch (recorded as skipped launches), and fresh
+    selections are registered for every other layer to reuse.
+    """
+
+    def __init__(self, store: TripleStore,
+                 fragments: Optional[FragmentStore] = None) -> None:
         self.store = store
+        self.fragments = fragments
         self.launches: List[LaunchRecord] = []
 
     # -- public API ----------------------------------------------------------
@@ -185,9 +246,29 @@ class KernelSelector:
         redo steps 1-3 of the algorithm here).
         Returns per-request (data-triple sequence, cnt), each identical
         to what ``brtpf_select_with_cnt(store, tp, omega_g)`` returns.
+
+        Groups whose selection is already resident in the connected
+        fragment store never reach the kernel: their launch share is
+        recorded as skipped and only the remaining groups launch.
         """
         if patterns is None:
             patterns = [instantiate_patterns(tp, om) for om in omegas]
+        results, live = consult_fragments(self.fragments, tp, omegas,
+                                          self.launches)
+        if live:
+            live_omegas = [omegas[i] for i in live]
+            fresh = self._launch_groups(tp, live_omegas,
+                                        [patterns[i] for i in live])
+            record_fragments(self.fragments, tp, live_omegas, fresh)
+            for i, res in zip(live, fresh):
+                results[i] = res
+        return results
+
+    def _launch_groups(
+        self, tp: TriplePattern, omegas: Sequence[Optional[np.ndarray]],
+        patterns: List[List[TriplePattern]],
+    ) -> List[Tuple[np.ndarray, int]]:
+        """One grouped kernel launch over the store-miss groups."""
         rng = self.store.candidate_range(tp)
         t = len(rng)
         empty = np.empty((0, 3), dtype=np.int32)

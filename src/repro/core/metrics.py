@@ -6,7 +6,16 @@
 * ``data_received`` (dataRecv): RDF triples contained in all fragment
   pages received, data + metadata/control triples (section 5.1).
 * ``cache_hits`` (#hits): requests served by the HTTP cache (section 7.1).
+* ``launches_skipped``: requests served from the unified fragment store
+  (``core/fragments.py``) that would otherwise have reached an
+  accelerated selector -- kernel/window launches avoided by residency.
 * server/client work counters feed the throughput simulation (section 6).
+
+:func:`layer_metrics` is the per-layer observability surface over the
+unified store: one snapshot with the HTTP cache's section-7 hit rate,
+the selector-memo (data-layer) hit rate, the candidate-range memo hit
+rate and the skipped-launch count -- each layer accounted separately,
+so memo traffic can never masquerade as HTTP hits.
 """
 from __future__ import annotations
 
@@ -28,6 +37,7 @@ class Counters:
     kernel_cand_streamed: int = 0   # padded candidates streamed (HBM pass)
     kernel_pat_slots: int = 0       # padded pattern slots across groups
     kernel_batched_requests: int = 0  # requests served by shared launches
+    launches_skipped: int = 0       # launches avoided by store residency
 
     def merge(self, other: "Counters") -> None:
         for f in dataclasses.fields(self):
@@ -40,3 +50,39 @@ class Counters:
     def reset(self) -> None:
         for f in dataclasses.fields(self):
             setattr(self, f.name, 0)
+
+
+def layer_metrics(server) -> dict:
+    """Per-layer cache accounting snapshot for a ``BrTPFServer``.
+
+    Duck-typed on the server (``fragments``, ``store``, optional
+    ``cache``) so this module stays import-light. Each layer reports
+    its own hits/misses/hit_rate; ``launches_skipped`` is the unified
+    store's count of kernel/window launches avoided by residency.
+    """
+    f = server.fragments
+    out = {
+        "counters": dataclasses.asdict(server.counters),
+        "launches_skipped": f.launches_skipped,
+        "selector_memo": {
+            "hits": f.hits,
+            "misses": f.misses,
+            "hit_rate": f.hit_rate,
+            "entries": f.data_entries,
+        },
+        "range_memo": {
+            "hits": server.store.range_memo_hits,
+            "misses": server.store.range_memo_misses,
+            "hit_rate": (server.store.range_memo_hits
+                         / max(server.store.range_memo_hits
+                               + server.store.range_memo_misses, 1)),
+        },
+    }
+    if server.cache is not None:
+        out["http"] = {
+            "hits": server.cache.hits,
+            "misses": server.cache.misses,
+            "hit_rate": server.cache.hit_rate,
+            "entries": len(server.cache),
+        }
+    return out

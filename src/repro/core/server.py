@@ -32,6 +32,14 @@ The kernel and sharded backends share one selector interface
 (``select_with_cnt`` / ``select_same_pattern`` / ``launches``) and one
 ``LaunchRecord`` accounting surface, so batching, memoization, paging
 and the launch-budget gates are backend-agnostic.
+
+Every reuse layer -- the HTTP cache's pages, the selector memo and (via
+``on_release``) the store's candidate-range memo -- lives in ONE
+unified :class:`~repro.core.fragments.FragmentStore` per server: a
+kernel or sharded window launch is skipped whenever the requested page
+is already resident, regardless of which path populated it
+(``Counters.launches_skipped``), and eviction is coherent across layers
+(docs/caching.md).
 """
 from __future__ import annotations
 
@@ -42,7 +50,8 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from .cache import LRUCache, request_key
-from .metrics import Counters
+from .fragments import FragmentStore
+from .metrics import Counters, layer_metrics
 from .rdf import TriplePattern
 from .selectors import (Fragment, brtpf_select_with_cnt,
                         instantiate_patterns, tpf_select)
@@ -109,13 +118,29 @@ class BrTPFServer:
         self.meta_triples_per_page = int(meta_triples_per_page)
         self.cache = cache
         self.selector_backend = selector_backend
+        # Unified fragment store (core/fragments.py): ONE page-granular
+        # layer under the HTTP cache, the selector memo and the store's
+        # candidate-range memo. The data layer is the selector memo (a
+        # real server streams a fragment across its pages instead of
+        # recomputing the selection per page request; it is NOT the HTTP
+        # cache of section 7 and does not touch its hit/miss metrics);
+        # the page layer holds the HTTP cache's rendered pages (the
+        # LRUCache binds itself to it below); and when a pattern's last
+        # live fragment is evicted, on_release drops the store's
+        # candidate range coherently.
+        self.fragments = FragmentStore(
+            on_release=store.evict_candidate_range)
+        if cache is not None:
+            cache.bind(self.fragments)
         # Accelerated selector (kernel or sharded backend); None for the
         # paper-faithful numpy oracle. Both implementations share the
-        # select_with_cnt / select_same_pattern / launches interface.
+        # select_with_cnt / select_same_pattern / launches interface,
+        # and both consult the unified store before launching.
         self._selector = None
         if selector_backend == "kernel":
             from .kernel_selectors import KernelSelector
-            self._selector = KernelSelector(store)
+            self._selector = KernelSelector(store,
+                                            fragments=self.fragments)
         elif selector_backend == "sharded":
             from .federation import (DEFAULT_SHARD_WINDOW, FederatedStore,
                                      ShardedSelector)
@@ -127,17 +152,12 @@ class BrTPFServer:
                                                   axis=shard_axis)
             self._selector = ShardedSelector(
                 self.federated,
-                window=shard_window or DEFAULT_SHARD_WINDOW)
+                window=shard_window or DEFAULT_SHARD_WINDOW,
+                fragments=self.fragments)
         self.counters = Counters()
-        # Selector memo: a real server streams a fragment across its
-        # pages instead of recomputing the selection per page request.
-        # This memo models that (it is NOT the HTTP cache of section 7 --
-        # it does not affect any metric, only host CPU time).
-        self._selector_memo: "OrderedDict" = OrderedDict()
-        self._selector_memo_cap = 256
-        # pattern_tuple -> number of live selector-memo entries for it;
-        # makes the coherent-eviction check O(1) on the request path.
-        self._memo_pattern_refs: dict = {}
+        # Memo keys prefilled by the *current* handle_batch call: their
+        # subsequent handle() reads are batched work, not cache skips.
+        self._prefilled: set = set()
 
     # -- request handling ---------------------------------------------------
 
@@ -159,6 +179,8 @@ class BrTPFServer:
             cached = self.cache.get(req.key())
             if cached is not None:
                 frag = cached  # served by the proxy, not the origin
+                if self._selector is not None:
+                    self._note_launch_skip()
                 self._charge_transfer(frag)
                 return frag
 
@@ -167,6 +189,24 @@ class BrTPFServer:
             self.cache.put(req.key(), frag)
         self._charge_transfer(frag)
         return frag
+
+    def page_resident(self, req: Request) -> bool:
+        """Non-counting residency peek: can this page be served without
+        origin selector work, from ANY layer of the unified store (a
+        registered HTTP page or the fragment's full memo data)? Used by
+        the async front end to bypass the batching window -- there is
+        nothing to coalesce for a request that launches nothing.
+
+        Delegates to the unified store's own residency notion: pages
+        only ever live there (the bound HTTP cache is a view), so one
+        definition serves both."""
+        return self.fragments.page_resident(req.key())
+
+    def _note_launch_skip(self) -> None:
+        """One request served from the unified store that would
+        otherwise have reached the accelerated selector."""
+        self.counters.launches_skipped += 1
+        self.fragments.note_skip()
 
     def _charge_transfer(self, frag: Fragment) -> None:
         self.counters.data_triples += int(frag.data.shape[0])
@@ -183,11 +223,19 @@ class BrTPFServer:
         """Memoized selector evaluation: the fragment's full data-triple
         sequence + cnt estimate, page-independent."""
         memo_key = req.key()[:2]  # (pattern, omega) -- page-independent
-        memo = self._selector_memo.get(memo_key)
+        memo = self.fragments.get_data(memo_key)
         if memo is not None:
-            self._selector_memo.move_to_end(memo_key)
             # work accounting still charges the originating computation
-            # only once -- matching the paper's streaming server.
+            # only once -- matching the paper's streaming server. A hit
+            # on an accelerated backend is a skipped launch, unless
+            # this request IS the batch member its selection was just
+            # prefilled for (that is coalescing, already counted as
+            # batched_requests). The mark is one-shot: a same-key
+            # duplicate beyond the consumer is an ordinary store hit.
+            if memo_key in self._prefilled:
+                self._prefilled.discard(memo_key)
+            elif self._selector is not None:
+                self._note_launch_skip()
             return memo
         if req.is_brtpf:
             patterns = instantiate_patterns(req.pattern, req.omega)
@@ -220,6 +268,11 @@ class BrTPFServer:
 
     def _charge_launches(self, launches, batched_requests: int = 0) -> None:
         for rec in launches:
+            if rec.skipped:
+                # a launch the selector avoided via the fragment store
+                # (the selector already bumped fragments.launches_skipped)
+                self.counters.launches_skipped += 1
+                continue
             self.counters.kernel_launches += 1
             self.counters.kernel_cand_streamed += rec.cand_streamed
             self.counters.kernel_pat_slots += rec.pat_slots
@@ -227,25 +280,11 @@ class BrTPFServer:
 
     def _memoize(self, memo_key, data: np.ndarray, cnt: int) -> None:
         self.counters.server_triples_scanned += int(data.shape[0])
-        if memo_key not in self._selector_memo:
-            pattern = memo_key[0]
-            self._memo_pattern_refs[pattern] = \
-                self._memo_pattern_refs.get(pattern, 0) + 1
-        self._selector_memo[memo_key] = (data, cnt)
-        self._trim_selector_memo()
-
-    def _trim_selector_memo(self) -> None:
-        """LRU-trim the selector memo; evict the store's candidate-range
-        memo coherently (a pattern no fragment is streaming has no reason
-        to pin its materialized range either)."""
-        while len(self._selector_memo) > self._selector_memo_cap:
-            (pattern, _omega), _ = self._selector_memo.popitem(last=False)
-            refs = self._memo_pattern_refs.get(pattern, 1) - 1
-            if refs:  # another live fragment still streams this pattern
-                self._memo_pattern_refs[pattern] = refs
-                continue
-            self._memo_pattern_refs.pop(pattern, None)
-            self.store.evict_candidate_range(pattern)
+        # The unified store LRU-trims the data layer; when a pattern's
+        # last live fragment goes, on_release evicts the store's
+        # candidate range coherently (a pattern no fragment is streaming
+        # has no reason to pin its materialized range either).
+        self.fragments.put_data(memo_key, (data, cnt))
 
     def _paginate(self, data: np.ndarray, cnt: int, req: Request) -> Fragment:
         lo = req.page * self.page_size
@@ -285,14 +324,15 @@ class BrTPFServer:
         # A batch may carry more distinct selections than the memo cap;
         # widen it for the batch's lifetime so prefilled results are
         # still there when handle() reads them, then trim back.
-        cap = self._selector_memo_cap
-        self._selector_memo_cap = cap + len(reqs)
+        cap = self.fragments.memo_capacity
+        self.fragments.memo_capacity = cap + len(reqs)
         try:
             self._prefill_batch(reqs)
             return [self.handle(r) for r in reqs]
         finally:
-            self._selector_memo_cap = cap
-            self._trim_selector_memo()
+            self._prefilled = set()
+            self.fragments.memo_capacity = cap
+            self.fragments.trim()
 
     def _prefill_batch(self, reqs: Sequence[Request]) -> None:
         groups: "OrderedDict" = OrderedDict()
@@ -300,8 +340,8 @@ class BrTPFServer:
             if self.cache is not None and self.cache.contains(req.key()):
                 continue  # served by the proxy, no origin work
             memo_key = req.key()[:2]
-            if memo_key in self._selector_memo:
-                continue
+            if self.fragments.contains_data(memo_key):
+                continue  # resident in the unified store, no launch
             per_pattern = groups.setdefault(req.pattern.as_tuple(),
                                             OrderedDict())
             if memo_key not in per_pattern:
@@ -322,12 +362,20 @@ class BrTPFServer:
             for req, patterns, (data, cnt) in zip(member_reqs, insts,
                                                   results):
                 self.counters.server_lookups += len(patterns)
-                self._memoize(req.key()[:2], data, cnt)
+                memo_key = req.key()[:2]
+                self._memoize(memo_key, data, cnt)
+                self._prefilled.add(memo_key)
 
     # -- convenience ---------------------------------------------------------
 
+    def metrics_snapshot(self) -> dict:
+        """Counters + per-layer cache accounting (one observability
+        surface over the unified fragment store; see metrics.py)."""
+        return layer_metrics(self)
+
     def reset_counters(self) -> None:
         self.counters.reset()
+        self.fragments.reset_counters()
         if self.cache is not None:
             self.cache.hits = 0
             self.cache.misses = 0

@@ -22,6 +22,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import time
+from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -130,6 +131,12 @@ class SimParams:
     # requests arriving while a launch is still queued share its
     # candidate stream and pay only their marginal pattern-slot cells.
     batch_window_s: float = 0.0
+    # unified fragment store (core/fragments.py): a kernel-path request
+    # whose fragment was computed by an EARLIER request (and whose
+    # launch is no longer joinable) skips its launch entirely -- it is
+    # served from the memo at servlet overhead. Mirrors the real
+    # server's memo-capacity LRU.
+    selector_memo_entries: int = 256
 
 
 def calibrate(server: BrTPFServer, workload, reps: int = 3) -> SimParams:
@@ -175,10 +182,18 @@ class SimResult:
     # validation loop (``live_replay``) checks against the real front end.
     launches: int = 0
     kernel_requests: int = 0
+    # launches avoided because the request's fragment was resident in
+    # the modeled unified store (memo or shared HTTP cache) -- the
+    # third quantity live_replay validates.
+    launches_skipped: int = 0
 
     @property
     def launches_per_request(self) -> float:
         return self.launches / max(self.kernel_requests, 1)
+
+    @property
+    def skips_per_request(self) -> float:
+        return self.launches_skipped / max(self.kernel_requests, 1)
 
     @property
     def throughput_per_hour(self) -> float:
@@ -279,7 +294,21 @@ def simulate(traces_per_client: Sequence[Sequence[QueryTrace]],
     server = _Server(params.server_workers,
                      batch_window=params.batch_window_s)
     cache = LRUCache(cache_size) if use_cache else None
-    sim_launches = kernel_requests = 0
+    # Unified-store memo model: LRU set of fragment keys served so far.
+    # A later request for a resident fragment skips its launch entirely
+    # -- served at servlet overhead, exactly like the real server's
+    # fragment store (whose async front end fast-paths resident pages
+    # instead of holding them for the batching window, and whose batch
+    # planner counts every same-key request beyond a prefilled
+    # selection's consumer as a store hit). Skip accounting applies to
+    # accelerated-backend replays only, mirroring
+    # ``Counters.launches_skipped``.
+    memo: "OrderedDict[tuple, None]" = OrderedDict()
+    kernel_replay = any(
+        isinstance(ev, HttpRecord) and ev.cand > 0
+        for traces in traces_per_client
+        for trace in traces for ev in trace.events)
+    sim_launches = kernel_requests = sim_skips = 0
     completed = timeouts = attempted = 0
     qet_sum = 0.0
     qets: List[float] = []
@@ -352,6 +381,7 @@ def simulate(traces_per_client: Sequence[Sequence[QueryTrace]],
             break
         if isinstance(ev, HttpRecord):
             t += params.net_latency_s / depth
+            frag_key = ev.key[:2]   # page-independent fragment identity
             hit = False
             if cache is not None:
                 hit = cache.get(ev.key) is not None
@@ -359,6 +389,17 @@ def simulate(traces_per_client: Sequence[Sequence[QueryTrace]],
                     cache.put(ev.key, True)
             if hit:
                 t += params.cache_hit_s
+                if kernel_replay:
+                    sim_skips += 1   # page resident: launch avoided
+            elif frag_key in memo:
+                # unified-store skip: the fragment was computed by an
+                # earlier request -- served from the memo at servlet
+                # overhead, no launch
+                memo.move_to_end(frag_key)
+                if kernel_replay:
+                    sim_skips += 1
+                    kernel_requests += 1
+                t = server.schedule(t, params.req_overhead_s)
             elif ev.cand > 0:
                 # kernel-backend request: per-launch cost model, with
                 # optional cross-request batching on the pattern key.
@@ -384,6 +425,12 @@ def simulate(traces_per_client: Sequence[Sequence[QueryTrace]],
                 # launches (1 on the single-host kernel path); a
                 # joining request rides them and creates none.
                 sim_launches += n_launch if created else 0
+                # the launch leaves this fragment resident in the
+                # modeled unified store
+                memo[frag_key] = None
+                memo.move_to_end(frag_key)
+                while len(memo) > params.selector_memo_entries:
+                    memo.popitem(last=False)
                 if params.batch_window_s > 0.0:
                     # block this client on the launch: it resumes (with
                     # its response transfer) when the launch completes,
@@ -400,6 +447,11 @@ def simulate(traces_per_client: Sequence[Sequence[QueryTrace]],
                            + ev.lookups * params.lookup_s
                            + ev.scanned * params.scan_s_per_triple)
                 t = server.schedule(t, service)
+                # served -> resident (repeats of this fragment skip)
+                memo[frag_key] = None
+                memo.move_to_end(frag_key)
+                while len(memo) > params.selector_memo_entries:
+                    memo.popitem(last=False)
             t += (params.net_latency_s / depth
                   + ev.recv * params.bytes_per_triple
                   / params.bandwidth_bps)
@@ -413,7 +465,8 @@ def simulate(traces_per_client: Sequence[Sequence[QueryTrace]],
     return SimResult(completed, timeouts, attempted, qet_sum, qets,
                      simulated_s=max(simulated, 1e-9),
                      launches=sim_launches,
-                     kernel_requests=kernel_requests)
+                     kernel_requests=kernel_requests,
+                     launches_skipped=sim_skips)
 
 
 def split_workload(workload, num_clients: int):
@@ -446,6 +499,11 @@ class LiveValidation:
     requests: int
     observed_batched: int     # requests served via shared grouped launches
     flushes: int
+    # unified-fragment-store validation: launches each side SKIPPED
+    # because the request's fragment was already resident (sim: the
+    # memo model; observed: Counters.launches_skipped).
+    simulated_skipped: int = 0
+    observed_skipped: int = 0
 
     @property
     def agreement(self) -> float:
@@ -457,6 +515,12 @@ class LiveValidation:
         """Relative disagreement |obs - sim| / sim."""
         return (abs(self.observed_launches - self.simulated_launches)
                 / max(self.simulated_launches, 1))
+
+    @property
+    def skip_within(self) -> float:
+        """Relative skipped-launch disagreement |obs - sim| / max(sim, 1)."""
+        return (abs(self.observed_skipped - self.simulated_skipped)
+                / max(self.simulated_skipped, 1))
 
 
 def requests_from_trace(trace: QueryTrace) -> List["object"]:
@@ -486,7 +550,8 @@ def live_replay(traces_per_client: Sequence[Sequence[QueryTrace]],
     :class:`~repro.core.batching.AsyncBrTPFServer` wrapped around
     ``server`` (which must use the kernel backend for launch counts to
     be meaningful), runs the cost-model replay of the *same* traces, and
-    reports both launch counts side by side. Each live client awaits its
+    reports both launch counts side by side -- including the launches
+    each side *skipped* via the unified fragment store. Each live client awaits its
     responses in order, mirroring the sim's one-outstanding-request-per-
     client-per-stream structure.
     """
@@ -503,10 +568,13 @@ def live_replay(traces_per_client: Sequence[Sequence[QueryTrace]],
     return LiveValidation(
         simulated_launches=sim.launches,
         observed_launches=after.kernel_launches - base.kernel_launches,
-        requests=front.stats.requests,
+        requests=front.stats.requests + front.stats.fast_path,
         observed_batched=(after.kernel_batched_requests
                           - base.kernel_batched_requests),
         flushes=front.stats.flushes,
+        simulated_skipped=sim.launches_skipped,
+        observed_skipped=(after.launches_skipped
+                          - base.launches_skipped),
     )
 
 
@@ -551,7 +619,8 @@ def main(argv=None) -> int:
     print(f"sim: clients={args.clients} window={args.window:g}s "
           f"completed={sim.completed} kernel_requests={sim.kernel_requests} "
           f"launches={sim.launches} "
-          f"launches_per_request={sim.launches_per_request:.3f}")
+          f"launches_per_request={sim.launches_per_request:.3f} "
+          f"launches_skipped={sim.launches_skipped}")
     if not args.live:
         return 0
 
@@ -561,11 +630,15 @@ def main(argv=None) -> int:
                      batch_window_s=args.window, max_batch=args.max_batch)
     print(f"live: requests={lv.requests} flushes={lv.flushes} "
           f"observed_launches={lv.observed_launches} "
-          f"batched_requests={lv.observed_batched}")
+          f"batched_requests={lv.observed_batched} "
+          f"observed_skipped={lv.observed_skipped}")
     print(f"validation: simulated={lv.simulated_launches} "
           f"observed={lv.observed_launches} "
           f"agreement={lv.agreement:.3f} "
           f"(|rel err|={lv.within:.1%})")
+    print(f"validation(skips): simulated={lv.simulated_skipped} "
+          f"observed={lv.observed_skipped} "
+          f"(|rel err|={lv.skip_within:.1%})")
     return 0
 
 

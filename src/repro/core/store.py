@@ -20,11 +20,11 @@ POS, OSP) and packed-int64 binary search:
 from __future__ import annotations
 
 import dataclasses
-from collections import OrderedDict
 from typing import Optional, Tuple
 
 import numpy as np
 
+from .fragments import FragmentStore
 from .rdf import TriplePattern, is_var
 
 _BITS = 21
@@ -65,10 +65,13 @@ class CandidateRange:
 
     ``window(page, size)`` gathers only ``perm[lo + page*size : ...]``
     -- the true range->page index: a page>0 request materializes just
-    its window, never the whole range. ``triples`` materializes the full
-    block (index order, hence deterministic) for consumers that stream
-    it in one HBM pass (the single-host bind-join kernel) and caches it,
-    so repeated full reads through the memo gather once.
+    its window, never the whole range; gathered windows register as
+    *pages* of the owning store's range fragment store (one bounded
+    page layer, evicted coherently with the range entry itself), so a
+    repeated window read never re-gathers. ``triples`` materializes the
+    full block (index order, hence deterministic) for consumers that
+    stream it in one HBM pass (the single-host bind-join kernel) and
+    caches it, so repeated full reads through the memo gather once.
     """
 
     index: str                   # index name: "spo" | "pos" | "osp"
@@ -79,6 +82,11 @@ class CandidateRange:
     _perm: np.ndarray = dataclasses.field(repr=False, default=None)
     _materialized: Optional[np.ndarray] = dataclasses.field(
         repr=False, default=None)
+    # page-layer hookup: (fragment store, fragment key) of the memo
+    # entry this range lives in -- set by TripleStore.candidate_range
+    _fragments: Optional[object] = dataclasses.field(
+        repr=False, default=None)
+    _key: Optional[tuple] = dataclasses.field(repr=False, default=None)
 
     def __len__(self) -> int:
         return self.hi - self.lo
@@ -86,14 +94,24 @@ class CandidateRange:
     def window(self, page: int, size: int) -> np.ndarray:
         """Rows ``[lo + page*size, min(lo + (page+1)*size, hi))`` of the
         range, int32 [<=size, 3], gathered without materializing the
-        rest (unless the full block is already cached)."""
+        rest (unless the full block or this exact window is already
+        cached)."""
         a = self.lo + page * size
         b = min(a + size, self.hi)
         if a >= b:
             return np.empty((0, 3), dtype=np.int32)
         if self._materialized is not None:
             return self._materialized[a - self.lo : b - self.lo]
-        return self._store_triples[self._perm[a:b]]
+        page_key = None
+        if self._fragments is not None:
+            page_key = (*self._key, (page, size))
+            got = self._fragments.http_get(page_key)
+            if got is not None:
+                return got
+        rows = self._store_triples[self._perm[a:b]]
+        if page_key is not None:
+            self._fragments.http_put(page_key, rows)
+        return rows
 
     @property
     def triples(self) -> np.ndarray:
@@ -141,18 +159,21 @@ class TripleStore:
         # can span the whole store. Ranges are lazy, so a memo entry is
         # O(1) until some consumer materializes its full block; the
         # store is immutable, so the memo never goes stale; the server
-        # evicts it coherently with its selector memo
-        # (``BrTPFServer._trim_selector_memo``).
-        self._range_memo: "OrderedDict[tuple, CandidateRange]" = OrderedDict()
-        self.range_memo_cap = 64
-        # Broad patterns can materialize near-store-sized copies; bound
-        # the memo by retained (materialized) ROWS as well as entries so
-        # 64 low-selectivity ranges can't pin ~64x the store (newest
-        # entry always kept).
-        self.range_memo_max_rows = max(4 * triples.shape[0], 4096)
-        self._range_memo_rows = 0
-        self.range_memo_hits = 0
-        self.range_memo_misses = 0
+        # evicts it coherently with its unified fragment store (its
+        # ``on_release`` hook calls :meth:`evict_candidate_range`).
+        # The memo itself is a FragmentStore data layer keyed
+        # ``(pattern_tuple, None)`` with a materialized-rows weigher:
+        # broad patterns can materialize near-store-sized copies, so
+        # the memo is bounded by retained ROWS as well as entries (64
+        # low-selectivity ranges must not pin ~64x the store; the
+        # newest entry is always kept).
+        # page_capacity bounds retained window slices (CandidateRange
+        # .window registers its gathers as pages of this store).
+        self._ranges = FragmentStore(
+            memo_capacity=64,
+            page_capacity=256,
+            max_rows=max(4 * triples.shape[0], 4096),
+            weigh=lambda rng: rng.materialized_rows)
 
     def __len__(self) -> int:
         return int(self.triples.shape[0])
@@ -160,6 +181,38 @@ class TripleStore:
     @property
     def num_terms(self) -> int:
         return int(self.triples.max(initial=-1)) + 1
+
+    # -- range-memo accounting (delegates to the fragment store) -------------
+
+    @property
+    def range_memo_hits(self) -> int:
+        return self._ranges.hits
+
+    @property
+    def range_memo_misses(self) -> int:
+        return self._ranges.misses
+
+    @property
+    def range_memo_cap(self) -> int:
+        return self._ranges.memo_capacity
+
+    @range_memo_cap.setter
+    def range_memo_cap(self, value: int) -> None:
+        self._ranges.memo_capacity = int(value)
+
+    @property
+    def range_memo_max_rows(self) -> Optional[int]:
+        return self._ranges.max_rows
+
+    @range_memo_max_rows.setter
+    def range_memo_max_rows(self, value: Optional[int]) -> None:
+        self._ranges.max_rows = value
+
+    @property
+    def _range_memo(self) -> dict:
+        """{pattern_tuple -> CandidateRange} view of the memo."""
+        return {key[0]: rng
+                for key, rng in self._ranges.data_payloads().items()}
 
     # -- index selection ----------------------------------------------------
 
@@ -218,46 +271,28 @@ class TripleStore:
         bind-join/tpf-match kernels resolve those on device). No rows
         are gathered until ``.window()`` or ``.triples`` is read.
         """
-        key = tp.as_tuple()
-        memo = self._range_memo.get(key)
+        # Rows are pinned lazily (a consumer may have materialized
+        # since the last access), so the fragment store re-enforces the
+        # row bound on hits too -- the just-hit entry is LRU-newest,
+        # never popped.
+        key = (tp.as_tuple(), None)
+        memo = self._ranges.get_data(key)
         if memo is not None:
-            self.range_memo_hits += 1
-            self._range_memo.move_to_end(key)
-            # rows are pinned lazily (a consumer may have materialized
-            # since the last access), so re-enforce the row bound on
-            # hits too -- the just-hit entry is LRU-newest, never popped
-            self._trim_range_memo()
             return memo
-        self.range_memo_misses += 1
         name, lo, hi, plen = self._prefix_range(tp)
         idx = self._indexes[name]
         rng = CandidateRange(index=name, lo=lo, hi=hi, prefix_len=plen,
-                             _store_triples=self.triples, _perm=idx.perm)
-        self._range_memo[key] = rng
-        self._trim_range_memo()
+                             _store_triples=self.triples, _perm=idx.perm,
+                             _fragments=self._ranges, _key=key)
+        self._ranges.put_data(key, rng)
         return rng
-
-    def _trim_range_memo(self) -> None:
-        # Ranges pin rows lazily (only after a full ``.triples`` read),
-        # so retained rows are recounted here rather than tracked
-        # incrementally at insert time.
-        self._range_memo_rows = sum(r.materialized_rows
-                                    for r in self._range_memo.values())
-        while len(self._range_memo) > 1 and (
-                len(self._range_memo) > self.range_memo_cap
-                or self._range_memo_rows > self.range_memo_max_rows):
-            _, old = self._range_memo.popitem(last=False)
-            self._range_memo_rows -= old.materialized_rows
 
     def evict_candidate_range(self, pattern_tuple: Tuple[int, int, int]
                               ) -> bool:
-        """Drop a memoized candidate range (coherence hook for the
-        server's selector-memo eviction). Returns True if present."""
-        old = self._range_memo.pop(pattern_tuple, None)
-        if old is None:
-            return False
-        self._range_memo_rows -= old.materialized_rows
-        return True
+        """Drop a memoized candidate range (coherence hook fired by the
+        server's fragment store when a pattern's last live fragment is
+        evicted). Returns True if present."""
+        return self._ranges.evict((pattern_tuple, None))
 
     def cardinality(self, tp: TriplePattern) -> int:
         """Cardinality estimate ``cnt`` (Definition 2).

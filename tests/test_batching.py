@@ -306,7 +306,7 @@ class TestMaxMprUnderCoalescing:
             server.handle_batch([Request(tp, rand_omega(rng, 4), 0),
                                  Request(tp, rand_omega(rng, 9), 0)])
         assert server.counters.kernel_launches == 0
-        assert len(server._selector_memo) == 0
+        assert server.fragments.data_entries == 0
 
 
 # ---------------------------------------------------------------------------
@@ -317,19 +317,25 @@ class TestMaxMprUnderCoalescing:
 class TestCandidateRangeMemo:
     def test_page_miss_after_selector_eviction_reuses_range(self):
         """A page>0 request whose selector memo entry was evicted must
-        not re-materialize the candidate range: the store-level range
-        memo serves it."""
+        not re-materialize the candidate range: while another fragment
+        still streams the pattern, the store-level range memo serves
+        it."""
         store = make_store(10, n=900)
         server = BrTPFServer(store, page_size=20,
                              selector_backend="kernel")
         tp = TriplePattern(V(0), 3, V(1))
-        om = rand_omega(np.random.default_rng(10), 8)
+        rng = np.random.default_rng(10)
+        om = rand_omega(rng, 8)
         om[0] = UNBOUND                     # multi-page fragment
         f0 = server.handle(Request(tp, om, 0))
         assert f0.has_next
+        # a second live fragment keeps the pattern referenced, so
+        # evicting om's entry must NOT drop the candidate range
+        server.handle(Request(tp, rand_omega(rng, 4), 0))
         misses0 = store.range_memo_misses
         hits0 = store.range_memo_hits
-        server._selector_memo.clear()       # simulate memo pressure
+        from repro.core import fragment_key
+        server.fragments.evict(fragment_key(tp.as_tuple(), om))
         f1 = server.handle(Request(tp, om, 1))
         assert store.range_memo_misses == misses0   # no re-materialize
         assert store.range_memo_hits > hits0
@@ -343,7 +349,7 @@ class TestCandidateRangeMemo:
     def test_selector_memo_eviction_evicts_range_coherently(self):
         store = make_store(11, n=600)
         server = BrTPFServer(store, selector_backend="kernel")
-        server._selector_memo_cap = 2
+        server.fragments.memo_capacity = 2
         pats = [TriplePattern(V(0), p, V(1)) for p in (3, 5, 7)]
         for tp in pats:
             server.handle(Request(tp, None, 0))
@@ -351,14 +357,14 @@ class TestCandidateRangeMemo:
         assert pats[0].as_tuple() not in store._range_memo
         assert pats[1].as_tuple() in store._range_memo
         assert pats[2].as_tuple() in store._range_memo
-        assert len(server._selector_memo) == 2
+        assert server.fragments.data_entries == 2
 
     def test_shared_pattern_keeps_range_until_last_fragment_evicted(self):
         """Two live fragments on one pattern: evicting one selector-memo
         entry must not drop the range the other still streams."""
         store = make_store(12, n=600)
         server = BrTPFServer(store, selector_backend="kernel")
-        server._selector_memo_cap = 2
+        server.fragments.memo_capacity = 2
         tp = TriplePattern(V(0), 3, V(1))
         rng = np.random.default_rng(12)
         server.handle(Request(tp, rand_omega(rng, 4), 0))

@@ -1,0 +1,452 @@
+"""Unified fragment store: eviction semantics, cross-layer coherence,
+launch skipping, and the shared client cache.
+
+The contract under test (src/repro/core/fragments.py + ISSUE 4):
+
+* ``LRUCache.contains`` / ``FragmentStore.http_contains`` /
+  ``contains_data`` are non-counting peeks;
+* eviction is LRU per layer and coherent across layers (evicting the
+  HTTP entry drops the memo's page and vice versa -- single storage);
+* a repeated request whose page is resident in the unified store issues
+  ZERO kernel/window launches, on both accelerated backends, while
+  responses stay byte-identical to the numpy oracle;
+* the section-7 HTTP hit/miss counters are not distorted by memo-only
+  traffic;
+* the sync and async clients share one ``ClientFragmentCache``;
+* ``live_replay`` validates observed vs simulated skipped-launch counts.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core import (AsyncBrTPFClient, AsyncBrTPFServer, BrTPFClient,
+                        BrTPFServer, ClientFragmentCache, FragmentStore,
+                        LRUCache, Request, TriplePattern, TripleStore,
+                        UNBOUND, bgp_from_arrays, encode_var,
+                        fragment_key)
+
+V = encode_var
+
+pytestmark = pytest.mark.tier1
+
+
+def make_store(seed=0, n=500, terms=15):
+    rng = np.random.default_rng(seed)
+    return TripleStore(np.unique(
+        rng.integers(0, terms, size=(n, 3)).astype(np.int32), axis=0))
+
+
+def rand_omega(rng, m, v=2, terms=15, unbound_frac=0.3):
+    om = rng.integers(0, terms, size=(m, v)).astype(np.int32)
+    om[rng.random((m, v)) < unbound_frac] = UNBOUND
+    return om
+
+
+# ---------------------------------------------------------------------------
+# FragmentStore semantics
+# ---------------------------------------------------------------------------
+
+
+class TestFragmentStoreSemantics:
+    def test_contains_is_non_counting(self):
+        fs = FragmentStore()
+        key = ((1, 2, 3), None)
+        fs.put_data(key, ("payload", 7))
+        fs.http_put((key[0], None, 0), "page0")
+        h0, m0, ph0, pm0 = fs.hits, fs.misses, fs.page_hits, fs.page_misses
+        assert fs.contains_data(key)
+        assert not fs.contains_data(((9, 9, 9), None))
+        assert fs.http_contains((key[0], None, 0))
+        assert not fs.http_contains((key[0], None, 5))
+        assert fs.page_resident((key[0], None, 3))   # via data residency
+        assert (fs.hits, fs.misses) == (h0, m0)
+        assert (fs.page_hits, fs.page_misses) == (ph0, pm0)
+
+    def test_contains_does_not_bump_lru(self):
+        fs = FragmentStore(memo_capacity=2)
+        a, b, c = (((p, 0, 0), None) for p in (1, 2, 3))
+        fs.put_data(a, "A")
+        fs.put_data(b, "B")
+        fs.contains_data(a)          # must NOT rescue `a` from eviction
+        fs.put_data(c, "C")
+        assert not fs.contains_data(a)
+        assert fs.contains_data(b) and fs.contains_data(c)
+
+    def test_data_layer_lru_eviction_order(self):
+        fs = FragmentStore(memo_capacity=2)
+        a, b, c = (((p, 0, 0), None) for p in (1, 2, 3))
+        fs.put_data(a, "A")
+        fs.put_data(b, "B")
+        assert fs.get_data(a) == "A"     # counting hit bumps `a`
+        fs.put_data(c, "C")              # evicts `b`, the LRU-oldest
+        assert fs.contains_data(a)
+        assert not fs.contains_data(b)
+        assert fs.contains_data(c)
+        assert fs.hits == 1 and fs.misses == 0
+
+    def test_page_layer_lru_eviction_order(self):
+        fs = FragmentStore(page_capacity=2)
+        keys = [((1, 2, 3), None, p) for p in range(3)]
+        fs.http_put(keys[0], "p0")
+        fs.http_put(keys[1], "p1")
+        assert fs.http_get(keys[0]) == "p0"   # bump page 0
+        fs.http_put(keys[2], "p2")            # evicts page 1
+        assert fs.http_contains(keys[0])
+        assert not fs.http_contains(keys[1])
+        assert fs.http_contains(keys[2])
+
+    def test_coherent_cross_layer_eviction(self):
+        """Evicting the HTTP entry drops the memo's page and vice versa
+        -- both layers are views of ONE entry."""
+        fs = FragmentStore()
+        key = ((4, 5, 6), None)
+        req0 = (key[0], None, 0)
+        fs.put_data(key, ("data", 1))
+        fs.http_put(req0, "page0")
+        # HTTP-side eviction drops the page everywhere
+        assert fs.evict_page(req0)
+        assert not fs.http_contains(req0)
+        assert fs.contains_data(key)          # data layer unaffected
+        # ... and entry-level eviction drops BOTH layers at once
+        fs.http_put(req0, "page0")
+        assert fs.evict(key)
+        assert not fs.contains_data(key)
+        assert not fs.http_contains(req0)
+        assert not fs.page_resident(req0)
+        assert len(fs) == 0
+
+    def test_on_release_fires_when_last_layer_goes(self):
+        released = []
+        fs = FragmentStore(on_release=released.append)
+        key = ((7, 8, 9), None)
+        fs.put_data(key, "data")
+        fs.http_put((key[0], None, 0), "page0")
+        fs.evict(key)
+        assert released == [(7, 8, 9)]
+        # two fragments on one pattern: only the LAST release fires
+        released.clear()
+        k1 = ((7, 8, 9), ((1, 1),))
+        k2 = ((7, 8, 9), ((2, 2),))
+        fs.put_data(k1, "a")
+        fs.put_data(k2, "b")
+        fs.evict(k1)
+        assert released == []
+        fs.evict(k2)
+        assert released == [(7, 8, 9)]
+
+    def test_bound_lru_cache_is_a_view(self):
+        """A bound LRUCache keeps the section-7 accounting while pages
+        live in the store; its capacity evicts store pages and store
+        eviction is visible through the cache."""
+        fs = FragmentStore()
+        cache = LRUCache(capacity=2)
+        cache.bind(fs)
+        keys = [((1, 2, 3), None, p) for p in range(3)]
+        assert cache.get(keys[0]) is None
+        assert cache.misses == 1
+        cache.put(keys[0], "p0")
+        cache.put(keys[1], "p1")
+        assert cache.get(keys[0]) == "p0"
+        assert cache.hits == 1
+        assert len(cache) == 2
+        cache.put(keys[2], "p2")            # capacity: evicts page 1
+        assert not fs.http_contains(keys[1])
+        assert cache.contains(keys[0]) and cache.contains(keys[2])
+        # store-side eviction is coherent with the cache view
+        fs.evict(((1, 2, 3), None))
+        assert len(cache) == 0
+        assert not cache.contains(keys[0])
+
+    def test_window_slices_register_as_range_pages(self):
+        """CandidateRange.window gathers register as pages of the
+        store's range fragment store: a repeated window read re-uses
+        the gathered slice, and evicting the range drops its pages."""
+        store = make_store(19, n=600)
+        tp = TriplePattern(V(0), 3, V(1))
+        rng = store.candidate_range(tp)
+        w0 = rng.window(0, 7)
+        ph0 = store._ranges.page_hits
+        w0_again = rng.window(0, 7)
+        assert w0_again is w0                  # served from the page layer
+        assert store._ranges.page_hits == ph0 + 1
+        np.testing.assert_array_equal(w0, rng.triples[:7])
+        # coherent eviction: dropping the range drops its window pages
+        store.evict_candidate_range(tp.as_tuple())
+        assert store._ranges.num_pages == 0
+
+    def test_weighted_trim_keeps_newest(self):
+        fs = FragmentStore(memo_capacity=8, max_rows=10,
+                           weigh=lambda p: p)
+        fs.put_data(((1, 0, 0), None), 6)
+        fs.put_data(((2, 0, 0), None), 6)    # 12 > 10: evicts oldest
+        assert not fs.contains_data(((1, 0, 0), None))
+        assert fs.contains_data(((2, 0, 0), None))
+        fs.put_data(((3, 0, 0), None), 99)   # newest always kept
+        assert fs.contains_data(((3, 0, 0), None))
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: resident pages launch nothing, on BOTH accelerated backends
+# ---------------------------------------------------------------------------
+
+
+class TestZeroLaunchOnResidency:
+    @pytest.mark.parametrize("backend", ["kernel", "sharded"])
+    def test_repeated_request_launches_nothing(self, backend):
+        store = make_store(20, n=700)
+        server = BrTPFServer(store, page_size=50,
+                             selector_backend=backend)
+        oracle = BrTPFServer(store, page_size=50,
+                             selector_backend="numpy")
+        tp = TriplePattern(V(0), 3, V(1))
+        om = rand_omega(np.random.default_rng(20), 8)
+        req = Request(tp, om, 0)
+        first = server.handle(req)
+        launches0 = server.counters.kernel_launches
+        assert launches0 > 0
+        repeat = server.handle(req)
+        # ZERO new kernel/window launches, one recorded skip
+        assert server.counters.kernel_launches == launches0
+        assert server.counters.launches_skipped == 1
+        assert server.fragments.launches_skipped == 1
+        # byte-identical to the numpy oracle, both times
+        want = oracle.handle(req)
+        for frag in (first, repeat):
+            np.testing.assert_array_equal(frag.data, want.data)
+            assert frag.cnt == want.cnt
+            assert frag.has_next == want.has_next
+
+    @pytest.mark.parametrize("backend", ["kernel", "sharded"])
+    def test_selector_consults_store_directly(self, backend):
+        """Both selector classes skip the launch themselves when handed
+        a fragment store (direct users, not just the server)."""
+        store = make_store(21, n=600)
+        fs = FragmentStore()
+        if backend == "kernel":
+            from repro.core.kernel_selectors import KernelSelector
+            sel = KernelSelector(store, fragments=fs)
+        else:
+            import jax
+            from jax.sharding import Mesh
+            from repro.core.federation import (FederatedStore,
+                                               ShardedSelector)
+            mesh = Mesh(np.array(jax.devices()), ("data",))
+            sel = ShardedSelector(FederatedStore.build(store.triples,
+                                                       mesh),
+                                  window=512, fragments=fs)
+        tp = TriplePattern(V(0), 3, V(1))
+        om = rand_omega(np.random.default_rng(21), 6)
+        data0, cnt0 = sel.select_with_cnt(tp, om)
+        real0 = sum(1 for rec in sel.launches if not rec.skipped)
+        assert real0 > 0
+        data1, cnt1 = sel.select_with_cnt(tp, om)
+        real1 = sum(1 for rec in sel.launches if not rec.skipped)
+        skips = [rec for rec in sel.launches if rec.skipped]
+        assert real1 == real0          # no new real launch
+        assert len(skips) == 1 and skips[0].cand_streamed == 0
+        assert fs.launches_skipped == 1
+        np.testing.assert_array_equal(data0, data1)
+        assert cnt0 == cnt1
+
+    def test_http_populated_page_skips_launch_after_memo_eviction(self):
+        """Cross-layer: the page was populated by the HTTP path; after
+        the memo data is gone, the repeat is STILL launch-free."""
+        store = make_store(22, n=600)
+        cache = LRUCache(None)
+        server = BrTPFServer(store, page_size=50, cache=cache,
+                             selector_backend="kernel")
+        tp = TriplePattern(V(0), 3, V(1))
+        om = rand_omega(np.random.default_rng(22), 6)
+        req = Request(tp, om, 0)
+        server.handle(req)
+        key = fragment_key(tp.as_tuple(), om)
+        # drop ONLY the memo data: the HTTP page must survive
+        server.fragments._drop_data(key)
+        assert not server.fragments.contains_data(key)
+        assert cache.contains(req.key())
+        launches0 = server.counters.kernel_launches
+        frag = server.handle(req)
+        assert server.counters.kernel_launches == launches0
+        assert server.counters.launches_skipped == 1
+        want = BrTPFServer(store, page_size=50,
+                           selector_backend="numpy").handle(req)
+        np.testing.assert_array_equal(frag.data, want.data)
+
+
+# ---------------------------------------------------------------------------
+# Section-7 accounting must not be distorted by memo traffic
+# ---------------------------------------------------------------------------
+
+
+class TestHttpAccountingIntegrity:
+    def test_memo_traffic_does_not_touch_http_counters(self):
+        store = make_store(23, n=900)
+        cache = LRUCache(None)
+        server = BrTPFServer(store, page_size=20, cache=cache,
+                             selector_backend="kernel")
+        tp = TriplePattern(V(0), 3, V(1))
+        om = rand_omega(np.random.default_rng(23), 8)
+        om[0] = UNBOUND                       # multi-page fragment
+        server.handle(Request(tp, om, 0))
+        assert (cache.hits, cache.misses) == (0, 1)
+        # page 1 is served from the MEMO (no launch) but it is a fresh
+        # URL: the proxy would miss -- and must still count a miss
+        launches0 = server.counters.kernel_launches
+        server.handle(Request(tp, om, 1))
+        assert server.counters.kernel_launches == launches0
+        assert (cache.hits, cache.misses) == (0, 2)
+        # a true repeat is an HTTP hit
+        server.handle(Request(tp, om, 0))
+        assert (cache.hits, cache.misses) == (1, 2)
+        # the batch planner's residency peeks count nothing: both pages
+        # are cached by now, so each counts exactly one ordinary hit
+        server.handle_batch([Request(tp, om, 0), Request(tp, om, 1)])
+        assert (cache.hits, cache.misses) == (3, 2)
+
+    def test_http_hit_counts_match_unbound_reference(self):
+        """A bound cache must report exactly the hit/miss sequence the
+        standalone LRUCache (pre-unification behavior) reports for the
+        same request stream."""
+        store = make_store(24, n=700)
+        rng = np.random.default_rng(24)
+        pats = [TriplePattern(V(0), p, V(1)) for p in (3, 5)]
+        reqs = []
+        for _ in range(30):
+            tp = pats[rng.integers(0, 2)]
+            om = (rand_omega(np.random.default_rng(int(rng.integers(0, 4))), 4)
+                  if rng.random() < 0.7 else None)
+            reqs.append(Request(tp, om, int(rng.integers(0, 2))))
+        bound = LRUCache(8)
+        srv = BrTPFServer(store, page_size=30, cache=bound,
+                          selector_backend="kernel")
+        reference = LRUCache(8)   # standalone, hand-driven
+        for req in reqs:
+            srv.handle(req)
+            if reference.get(req.key()) is None:
+                reference.put(req.key(), True)
+        assert (bound.hits, bound.misses) \
+            == (reference.hits, reference.misses)
+
+
+# ---------------------------------------------------------------------------
+# Client cache: one shared implementation
+# ---------------------------------------------------------------------------
+
+
+class TestClientFragmentCache:
+    def test_sync_and_async_share_one_implementation(self):
+        store = make_store(25, n=800, terms=10)
+        sync_client = BrTPFClient(BrTPFServer(store))
+        front = AsyncBrTPFServer(BrTPFServer(store), batch_window_s=0.0)
+        async_client = AsyncBrTPFClient(front)
+        assert isinstance(sync_client.client_cache, ClientFragmentCache)
+        assert isinstance(async_client.client_cache, ClientFragmentCache)
+
+    def test_repeat_fetch_within_execution_hits_local_cache(self):
+        store = make_store(26, n=800, terms=10)
+        server = BrTPFServer(store, page_size=50)
+        client = BrTPFClient(server)
+        tp = TriplePattern(V(0), 3, V(1))
+        f0 = client._fetch(tp, None, 0)
+        n0 = server.counters.num_requests
+        f1 = client._fetch(tp, None, 0)
+        assert f1 is f0                      # served locally
+        assert server.counters.num_requests == n0
+        assert client.client_cache.hits == 1
+        client.client_cache.clear()          # per-execution reset
+        client._fetch(tp, None, 0)
+        assert server.counters.num_requests == n0 + 1
+
+    def test_async_repeat_fetch_hits_local_cache(self):
+        store = make_store(27, n=800, terms=10)
+        front = AsyncBrTPFServer(BrTPFServer(store, page_size=50),
+                                 batch_window_s=0.0)
+        client = AsyncBrTPFClient(front)
+        tp = TriplePattern(V(0), 3, V(1))
+
+        async def main():
+            f0 = await client._fetch(tp, None, 0)
+            f1 = await client._fetch(tp, None, 0)
+            await front.aclose()
+            return f0, f1
+
+        f0, f1 = asyncio.run(main())
+        assert f1 is f0
+        assert client._requests_used == 1
+
+    def test_disabled_cache_refetches(self):
+        store = make_store(28, n=400, terms=10)
+        server = BrTPFServer(store, page_size=50)
+        client = BrTPFClient(server)
+        client.client_cache = ClientFragmentCache(enabled=False)
+        tp = TriplePattern(V(0), 3, V(1))
+        client._fetch(tp, None, 0)
+        client._fetch(tp, None, 0)
+        assert server.counters.num_requests == 2
+
+    def test_clients_still_match_reference_with_shared_cache(self):
+        store = make_store(29, n=2000, terms=10)
+        bgp = bgp_from_arrays([[V(0), 3, V(1)], [V(1), 5, V(2)]])
+        ref = BrTPFClient(BrTPFServer(store, page_size=40, max_mpr=10),
+                          max_mpr=10).execute(bgp)
+        got = BrTPFClient(BrTPFServer(store, page_size=40, max_mpr=10,
+                                      selector_backend="kernel"),
+                          max_mpr=10).execute(bgp)
+        np.testing.assert_array_equal(got.solutions, ref.solutions)
+        assert got.num_requests == ref.num_requests
+
+
+# ---------------------------------------------------------------------------
+# Sim: skipped-launch validation against the real front end
+# ---------------------------------------------------------------------------
+
+
+class TestSkipValidation:
+    def test_live_skips_agree_with_sim(self):
+        """Repeated request keys across clients: the sim's memo model
+        and the real server's fragment store must count the SAME
+        skipped launches."""
+        from repro.core.sim import (HttpRecord, QueryTrace, SimParams,
+                                    live_replay)
+        store = make_store(30, n=600)
+        tp_a = TriplePattern(V(0), 3, V(1))
+        tp_b = TriplePattern(V(0), 5, V(1))
+        shared_omega = rand_omega(np.random.default_rng(30), 4)
+
+        def rec(tp, om):
+            return HttpRecord(key=Request(tp, om, 0).key(), lookups=1,
+                              scanned=10, recv=5,
+                              pattern_key=tp.as_tuple(), cand=1024,
+                              pats=8)
+
+        # every client issues the SAME two requests: after the first
+        # wave computes them, every other arrival must skip
+        traces_per_client = [
+            [QueryTrace(f"q{ci}", [rec(tp_a, shared_omega),
+                                   rec(tp_b, shared_omega)],
+                        completed=True)]
+            for ci in range(8)]
+        server = BrTPFServer(store, selector_backend="kernel")
+        lv = live_replay(traces_per_client, server, SimParams(),
+                         batch_window_s=5e-3)
+        assert lv.observed_skipped > 0
+        assert lv.skip_within <= 0.10
+        assert lv.observed_launches + lv.observed_skipped <= lv.requests
+
+    def test_metrics_snapshot_reports_layers(self):
+        store = make_store(31, n=500)
+        cache = LRUCache(None)
+        server = BrTPFServer(store, cache=cache,
+                             selector_backend="kernel")
+        tp = TriplePattern(V(0), 3, V(1))
+        req = Request(tp, rand_omega(np.random.default_rng(31), 4), 0)
+        server.handle(req)
+        server.handle(req)
+        snap = server.metrics_snapshot()
+        assert snap["launches_skipped"] == 1
+        assert snap["http"]["hits"] == 1
+        assert snap["http"]["misses"] == 1
+        assert snap["selector_memo"]["misses"] >= 1
+        assert snap["range_memo"]["misses"] >= 1
+        assert snap["counters"]["launches_skipped"] == 1
