@@ -56,14 +56,24 @@ def workload(seed: int = 1):
     return tuple(generate_workload(dataset(), cfg.num_queries, seed=seed))
 
 
+# Small-work fast path for the accelerated benchmark servers: below
+# this many (post-pruning) candidate rows the selector routes to the
+# numpy block evaluation instead of a kernel/window launch
+# (BENCH_kernels.json shows the interpret-mode kernel losing to numpy
+# outright at small work; on TPU the dispatch overhead dominates there).
+FAST_PATH_ROWS = 256
+
+
 def make_server(page_size: int = 100, max_mpr: int = 30,
                 cache: Optional[LRUCache] = None,
                 selector_backend: str = "numpy",
-                shard_window: Optional[int] = None) -> BrTPFServer:
+                shard_window: Optional[int] = None,
+                fast_path_rows: int = FAST_PATH_ROWS) -> BrTPFServer:
     return BrTPFServer(dataset().store, page_size=page_size,
                        max_mpr=max_mpr, cache=cache,
                        selector_backend=selector_backend,
-                       shard_window=shard_window)
+                       shard_window=shard_window,
+                       fast_path_rows=fast_path_rows)
 
 
 def run_sequence(client_kind: str, page_size: int = 100,
@@ -113,19 +123,56 @@ def _jsonable(obj):
     return obj
 
 
-def persist(kind: str, results: Dict) -> str:
+def pr_id() -> str:
+    """Identifier for the current PR in the benchmark trajectory:
+    ``REPRO_PR`` if set, else the repo's commit count (each PR is one
+    commit in this repo's history), else 'unversioned'."""
+    env = os.environ.get("REPRO_PR")
+    if env:
+        return env
+    try:
+        import subprocess
+        count = subprocess.run(
+            ["git", "rev-list", "--count", "HEAD"], cwd=REPO_ROOT,
+            capture_output=True, text=True, timeout=10)
+        if count.returncode == 0 and count.stdout.strip():
+            return f"r{count.stdout.strip()}"
+    except Exception:
+        pass
+    return "unversioned"
+
+
+def persist(kind: str, results: Dict,
+            headline: Optional[Dict] = None) -> str:
     """Write results to ``BENCH_<kind>.json`` at the repo root.
 
-    The file is committed per PR, so the perf trajectory (req/s,
-    launches-per-request, candidates-streamed, ...) is diffable across
-    the PR history rather than lost in CI logs.
+    The file is committed per PR, so the current snapshot is diffable
+    across the PR history; ``headline`` additionally APPENDS one
+    trajectory entry (PR id + headline metrics) to the file's
+    ``trajectory`` list, so the perf history (req/s,
+    launches-per-request, candidates-streamed, ...) reads as a series
+    instead of a single overwritten snapshot.
     """
     path = os.path.join(REPO_ROOT, f"BENCH_{kind}.json")
+    trajectory = []
+    if os.path.exists(path):
+        try:
+            with open(path) as fh:
+                trajectory = json.load(fh).get("trajectory", [])
+        except Exception:
+            trajectory = []
+    if headline is not None:
+        entry = {"pr": pr_id(), **_jsonable(headline)}
+        # one entry per PR id: a re-run within a PR updates in place
+        trajectory = [e for e in trajectory if e.get("pr") != entry["pr"]]
+        trajectory.append(entry)
     payload = {
         "config": _jsonable(dataclasses.asdict(BenchConfig.default())),
         "full": FULL,
         "results": _jsonable(results),
     }
+    if trajectory:
+        payload["trajectory"] = trajectory
     with open(path, "w") as fh:
         json.dump(payload, fh, indent=1, sort_keys=True)
         fh.write("\n")

@@ -75,7 +75,7 @@ def run_selector_backends(full: bool = False) -> Dict:
     from jax.sharding import Mesh
     from repro.core.federation import FederatedStore, ShardedSelector
     from repro.core.kernel_selectors import KernelSelector
-    from repro.core.rdf import TriplePattern, encode_var
+    from repro.core.rdf import UNBOUND, TriplePattern, encode_var
     from repro.core.selectors import brtpf_select_with_cnt
     from repro.core.store import TripleStore
 
@@ -90,30 +90,67 @@ def run_selector_backends(full: bool = False) -> Dict:
     fed = FederatedStore.build(
         store.triples, Mesh(np.array(jax.devices()), ("data",)))
 
+    def full_stream_omega(m, width):
+        """Random mappings with one all-UNBOUND row: the base-shaped
+        instantiation defeats sub-range pruning, so these rows measure
+        the classic full-prefix-range stream (the pre-pruning geometry
+        the cost model projects)."""
+        om = rng.integers(0, 500, (m, width)).astype(np.int32)
+        om[0] = UNBOUND
+        return om
+
+    def pruned_omega(m, positions):
+        """Mappings sampled from real store rows (so sub-ranges are
+        non-empty) binding exactly ``positions`` -> the Omega-restricted
+        pruned stream."""
+        picks = store.triples[rng.integers(0, len(store), (m,))]
+        width = max(positions) + 1
+        om = np.full((m, width), UNBOUND, np.int32)
+        for var, pos in enumerate(positions):
+            om[:, var] = picks[:, pos]
+        return om
+
     cases = [
-        ("bound_p", TriplePattern(v(0), 7, v(1)), 30),
-        ("wildcard", TriplePattern(v(0), v(1), v(2)), 30),
-        ("bound_p_small_omega", TriplePattern(v(0), 7, v(1)), 5),
+        ("bound_p", TriplePattern(v(0), 7, v(1)),
+         full_stream_omega(30, 2)),
+        ("wildcard", TriplePattern(v(0), v(1), v(2)),
+         full_stream_omega(30, 3)),
+        ("bound_p_small_omega", TriplePattern(v(0), 7, v(1)),
+         full_stream_omega(5, 2)),
+        # Omega-restricted pruning rows (docs/pruning.md): identical
+        # patterns, mappings that instantiate more-bound shapes -- the
+        # candidate stream shrinks to the sub-range union
+        ("bound_p_pruned", TriplePattern(v(0), 7, v(1)),
+         pruned_omega(30, (0, 2))),
+        ("wildcard_pruned", TriplePattern(v(0), v(1), v(2)),
+         pruned_omega(30, (0, 1))),
     ]
-    for name, tp, m in cases:
-        omegas = [
-            np.stack([rng.integers(0, 500, (2,)).astype(np.int32)
-                      for _ in range(m)])
-            for _ in range(8)
+    for name, tp, omega in cases:
+        omegas = [omega] + [
+            np.stack([rng.integers(0, 500, (omega.shape[1],))
+                      .astype(np.int32)
+                      for _ in range(omega.shape[0])])
+            for _ in range(7)
         ]
         sel = KernelSelector(store)
 
-        dt_np = _time(lambda: brtpf_select_with_cnt(store, tp, omegas[0]))
-        dt_k = _time(lambda: sel.select_with_cnt(tp, omegas[0]))
+        dt_np = _time(lambda: brtpf_select_with_cnt(store, tp, omega))
+        dt_k = _time(lambda: sel.select_with_cnt(tp, omega))
         sel.launches.clear()
         dt_b = _time(lambda: sel.select_same_pattern(tp, omegas))
-        rec = sel.launches[-1]
-        solo_cells = rec.cand_streamed * (rec.pat_slots // rec.groups)
+        rec = sel.launches[-1] if sel.launches else None
         out[name] = (dt_np, dt_k, dt_b, rec)
         emit(f"kernels/selector_{name}_numpy", dt_np * 1e6,
              f"per_request")
+        if rec is None:
+            emit(f"kernels/selector_{name}_kernel_interp", dt_k * 1e6,
+                 "cand=0;pruned_to_empty")
+            continue
+        solo_cells = rec.cand_streamed * (rec.pat_slots
+                                          // max(rec.groups, 1))
         emit(f"kernels/selector_{name}_kernel_interp", dt_k * 1e6,
-             f"cand={rec.cand_streamed};cells={solo_cells}")
+             f"cand={rec.cand_streamed};cells={solo_cells};"
+             f"pruned={int(rec.pruned)};cand_full={rec.cand_full}")
         emit(f"kernels/selector_{name}_kernel_batch{len(omegas)}",
              dt_b * 1e6 / len(omegas),
              f"per_request;cand_shared={rec.cand_streamed};"
@@ -122,16 +159,17 @@ def run_selector_backends(full: bool = False) -> Dict:
         # sharded windowed backend: same selection, per-shard window
         # launches -- per-launch streaming is the window, not the range
         ssel = ShardedSelector(fed, window=2048)
-        dt_s = _time(lambda: ssel.select_with_cnt(tp, omegas[0]), reps=2)
+        dt_s = _time(lambda: ssel.select_with_cnt(tp, omega), reps=2)
         ssel.launches.clear()
-        ssel.select_with_cnt(tp, omegas[0])  # launch count of ONE select
-        per_launch = ssel.launches[-1]
+        ssel.select_with_cnt(tp, omega)  # launch count of ONE select
         n_launch = len(ssel.launches)
+        per_launch = ssel.launches[-1] if ssel.launches else None
         out[name + "_sharded"] = (dt_s, n_launch, per_launch)
+        window_rows = per_launch.cand_streamed if per_launch else 0
         emit(f"kernels/selector_{name}_sharded_interp", dt_s * 1e6,
-             f"window={per_launch.cand_streamed};"
+             f"window={window_rows};"
              f"launches={n_launch};shards={fed.shards};"
-             f"cand_total={per_launch.cand_streamed * n_launch}")
+             f"cand_total={window_rows * n_launch}")
     return out
 
 

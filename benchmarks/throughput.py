@@ -161,6 +161,9 @@ def _run_concurrent(backend: str, n: int, wl, request_budget: int,
         # sharded backend, padded range buckets on the kernel backend)
         "cand_streamed": c.kernel_cand_streamed,
         "cand_streamed_per_request": c.kernel_cand_streamed / reqs,
+        # Omega-restricted pruning + small-work fast path accounting
+        "cand_pruned_away": c.cand_pruned_away,
+        "fast_path_selects": c.fast_path_selects,
         "shard_window": shard_window if backend == "sharded" else 0,
         "shards": (server.federated.shards
                    if backend == "sharded" else 0),
@@ -206,6 +209,8 @@ def run_async(full: bool = False, smoke: bool = False) -> Dict:
             f"{r['launches_skipped_per_request']:.3f};"
             f"memo_hit_rate={r['memo_hit_rate']:.3f};"
             f"cand_per_request={r['cand_streamed_per_request']:.0f};"
+            f"pruned_away={r['cand_pruned_away']};"
+            f"fast_path_selects={r['fast_path_selects']};"
             f"batched={r['batched_requests']};"
             f"fast_path={r['fast_path']};"
             f"mean_batch={r['mean_batch']:.1f};"
@@ -374,6 +379,36 @@ def check_budgets(results: Dict, path: str = BUDGETS_PATH) -> int:
     return failures
 
 
+def headline_metrics(out: Dict) -> Dict:
+    """One flat dict of the run's headline numbers -- the per-PR
+    trajectory entry appended to ``BENCH_throughput.json`` (PR id is
+    attached by ``common.persist``), so the perf history is a diffable
+    series instead of a single overwritten snapshot."""
+    h: Dict = {}
+    k1 = out.get("async", {}).get(("kernel", 1))
+    if k1:
+        h.update({
+            "kernel_c1_req_per_s": k1["req_per_s"],
+            "kernel_c1_launches_per_request": k1["launches_per_request"],
+            "kernel_c1_cand_per_request":
+                k1["cand_streamed_per_request"],
+            "kernel_c1_fast_path_selects": k1["fast_path_selects"],
+            "kernel_c1_cand_pruned_away": k1["cand_pruned_away"],
+        })
+    sharded = out.get("sharded_axis", {}).get(("sharded", 8, SHARD_WINDOW))
+    if sharded:
+        h.update({
+            "sharded_c8_launches_per_request":
+                sharded["launches_per_request"],
+            "sharded_c8_cand_per_request":
+                sharded["cand_streamed_per_request"],
+        })
+    warm = out.get("warm_cache")
+    if warm:
+        h["warm_cache_hit_rate"] = warm["hit_rate"]
+    return h
+
+
 def main(argv=None) -> int:
     import argparse
     parser = argparse.ArgumentParser()
@@ -395,7 +430,7 @@ def main(argv=None) -> int:
     out["sharded_axis"] = run_sharded_axis(full=args.full)
     out["warm_cache"] = run_warm_cache()
     out["cache_axis"] = run_cache_axis(full=args.full)
-    path = persist("throughput", out)
+    path = persist("throughput", out, headline=headline_metrics(out))
     print(f"# persisted -> {path}")
     return 0
 

@@ -23,7 +23,8 @@ from .selectors import (Fragment, brtpf_cardinality, brtpf_select,
                         tpf_select)
 from .server import (BrTPFServer, MaxMprExceeded, Request,
                      DEFAULT_MAX_MPR, DEFAULT_PAGE_SIZE)
-from .store import CandidateRange, TripleStore, store_from_ntriples
+from .store import (CandidateRange, SpanGroup, SubRanges, TripleStore,
+                    merge_spans, store_from_ntriples)
 
 # KernelSelector/LaunchRecord are intentionally NOT imported here:
 # core stays importable without jax; server.py imports them lazily for
@@ -42,6 +43,8 @@ __all__ = [
     "bgp_from_arrays", "brtpf_cardinality", "brtpf_select", "brtpf_select_with_cnt", "compatible",
     "decode_var", "dedup_mappings", "encode_var", "evaluate_bgp_reference",
     "instantiate_patterns", "is_var", "mapping_from_triple", "merge",
-    "parse_bgp", "project_mappings", "request_key", "store_from_ntriples",
-    "tpf_select", "DEFAULT_MAX_MPR", "DEFAULT_PAGE_SIZE",
+    "merge_spans", "parse_bgp", "project_mappings", "request_key",
+    "store_from_ntriples", "tpf_select",
+    "SpanGroup", "SubRanges",
+    "DEFAULT_MAX_MPR", "DEFAULT_PAGE_SIZE",
 ]

@@ -39,7 +39,7 @@ from ..kernels import ops as kops
 from .fragments import FragmentStore
 from .kernel_selectors import (LaunchRecord, consult_fragments,
                                marshal_pattern_grid, record_fragments,
-                               stream_order)
+                               select_block_numpy, stream_order)
 from .rdf import TriplePattern, is_var
 from .selectors import instantiate_patterns
 
@@ -69,23 +69,70 @@ def _local_brtpf(cand: jnp.ndarray, patterns: jnp.ndarray,
 
 
 @dataclasses.dataclass
+class ShardIndex:
+    """One component order's per-shard sorted mirror of the partition.
+
+    ``host_keys`` keeps a host-side copy of the per-shard sorted keys:
+    the request planner (:meth:`FederatedStore.plan_windows`) uses it to
+    binary-search shard-local ranges and Omega sub-ranges *before*
+    launching, so windows provably disjoint from every sub-range are
+    never dispatched. (The device step re-derives the same bounds with
+    an on-device searchsorted -- the host copy only steers which pages
+    launch, it never feeds result data.)
+    """
+
+    name: str                # "spo" | "pos" | "osp"
+    triples: jax.Array       # int32 [shards * shard_n, 3], per-shard sorted
+    valid: jax.Array         # bool  [shards * shard_n]
+    keys: jax.Array          # int64 [shards * shard_n]
+    host_keys: np.ndarray    # int64 [shards, shard_n] (same values)
+
+
+@dataclasses.dataclass
+class WindowPlan:
+    """Host-side launch plan for one (grouped) windowed request.
+
+    ``pages`` lists the window indexes that can contain join-relevant
+    rows on at least one shard; everything else is skipped. Unpruned
+    plans list every page of the pattern's bound-prefix range under
+    ``order``; pruned plans keep only pages intersecting some
+    per-binding sub-range. ``candidate_rows`` is the total (cross-shard)
+    row count inside the relevant sub-ranges -- the small-work fast
+    path's decision quantity.
+    """
+
+    order: str
+    lo_key: int
+    hi_key: int
+    pages: List[int]
+    range_rows: int          # sum over shards of the base range length
+    candidate_rows: int      # rows inside relevant sub-ranges (<= above)
+    pruned: bool
+    pages_total: int         # pages an unpruned plan would launch
+
+
+@dataclasses.dataclass
 class FederatedStore:
     """Triple store sharded over one mesh axis (one shard = one server).
 
-    Each shard keeps its partition SPO-sorted with packed int64 keys
-    (every federation member is an HDT-style server), which enables the
-    *windowed* request path (the default since PR 3): a bound-prefix
-    pattern binary-searches the shard-local range and scans only a fixed
-    window of it, instead of streaming the whole shard through the
-    bind-join kernel.
+    Each shard keeps its partition sorted with packed int64 keys in all
+    three component orders -- SPO plus the POS/OSP mirrors (every
+    federation member is an HDT-style server with HDT's three indexes).
+    The mirrors are what let unbound-subject patterns (``(?s, p, ?o)``,
+    ``(?s, ?p, o)``) binary-search a narrow shard-local range instead of
+    scanning the whole shard, and the *windowed* request path (the
+    default since PR 3) streams only a fixed window of the chosen
+    order's range per launch.
     """
 
     mesh: Mesh
     axis: str
-    triples: jax.Array       # int32 [shards * shard_n, 3], shard-padded
-    valid: jax.Array         # bool  [shards * shard_n]
-    keys: jax.Array          # int64 [shards * shard_n], per-shard sorted
+    triples: jax.Array       # SPO mirror (compat alias of indexes["spo"])
+    valid: jax.Array
+    keys: jax.Array
     shard_n: int
+    indexes: Dict[str, ShardIndex] = dataclasses.field(
+        default_factory=dict, repr=False)
     # jit-cache for the windowed request steps, keyed on the static
     # launch geometry (window, groups, pattern slots, projection).
     _steps: Dict[tuple, object] = dataclasses.field(
@@ -98,36 +145,47 @@ class FederatedStore:
     @classmethod
     def build(cls, triples_np: np.ndarray, mesh: Mesh,
               axis: str = "data") -> "FederatedStore":
-        from .store import _pack
+        from .store import _ORDERS, _pack
         shards = mesh.shape[axis]
         n = triples_np.shape[0]
         shard_n = max(1, -(-n // shards))
         total = shard_n * shards
-        padded = np.full((total, 3), -1, dtype=np.int32)
-        padded[:n] = triples_np
-        valid = np.zeros((total,), dtype=bool)
-        valid[:n] = True
-        # per-shard SPO sort (padding rows key to +inf -> sort last).
-        # int64 keys need the x64 context (off by default in jax)
-        keys = np.where(
-            valid,
-            _pack(padded[:, 0], padded[:, 1], padded[:, 2]),
-            np.iinfo(np.int64).max)
-        for s in range(shards):
-            sl = slice(s * shard_n, (s + 1) * shard_n)
-            order = np.argsort(keys[sl], kind="stable")
-            padded[sl] = padded[sl][order]
-            valid[sl] = valid[sl][order]
-            keys[sl] = keys[sl][order]
+        base = np.full((total, 3), -1, dtype=np.int32)
+        base[:n] = triples_np
+        base_valid = np.zeros((total,), dtype=bool)
+        base_valid[:n] = True
         sharding = NamedSharding(mesh, P(axis, None))
         vsharding = NamedSharding(mesh, P(axis))
-        with enable_x64(True):
-            keys_dev = jax.device_put(keys, vsharding)
+        indexes: Dict[str, ShardIndex] = {}
+        for name, comp_order in _ORDERS.items():
+            padded = base.copy()
+            valid = base_valid.copy()
+            # per-shard sort under this order's packed key (padding rows
+            # key to +inf -> sort last). int64 keys need the x64 context
+            # (off by default in jax).
+            keys = np.where(
+                valid,
+                _pack(padded[:, comp_order[0]], padded[:, comp_order[1]],
+                      padded[:, comp_order[2]]),
+                np.iinfo(np.int64).max)
+            for s in range(shards):
+                sl = slice(s * shard_n, (s + 1) * shard_n)
+                order = np.argsort(keys[sl], kind="stable")
+                padded[sl] = padded[sl][order]
+                valid[sl] = valid[sl][order]
+                keys[sl] = keys[sl][order]
+            with enable_x64(True):
+                keys_dev = jax.device_put(keys, vsharding)
+            indexes[name] = ShardIndex(
+                name=name,
+                triples=jax.device_put(padded, sharding),
+                valid=jax.device_put(valid, vsharding),
+                keys=keys_dev,
+                host_keys=keys.reshape(shards, shard_n))
+        spo = indexes["spo"]
         return cls(mesh=mesh, axis=axis,
-                   triples=jax.device_put(padded, sharding),
-                   valid=jax.device_put(valid, vsharding),
-                   keys=keys_dev,
-                   shard_n=shard_n)
+                   triples=spo.triples, valid=spo.valid, keys=spo.keys,
+                   shard_n=shard_n, indexes=indexes)
 
     # -- host-side request marshalling ---------------------------------------
 
@@ -155,16 +213,21 @@ class FederatedStore:
         return pats, valid, base_vec
 
     @staticmethod
-    def prefix_keys(tp: TriplePattern) -> Tuple[int, int]:
-        """(lo_key, hi_key) of the pattern's bound SPO prefix -- the
-        host-computed range bounds every shard binary-searches (the
-        client computing a page URL, in mesh terms)."""
-        from .store import _MAX_ID, _pack
+    def prefix_keys(tp: TriplePattern,
+                    order_name: str = "spo") -> Tuple[int, int]:
+        """(lo_key, hi_key) of the pattern's bound prefix under the
+        given index order -- the host-computed range bounds every shard
+        binary-searches (the client computing a page URL, in mesh
+        terms). Defaults to the SPO mirror for compatibility with the
+        single-request windowed path."""
+        from .store import _MAX_ID, _ORDERS, _pack
+        comp_order = _ORDERS[order_name]
+        comps = tp.as_tuple()
         prefix = []
-        for c in tp.as_tuple():
-            if is_var(c):
+        for pos in comp_order:
+            if is_var(comps[pos]):
                 break
-            prefix.append(c)
+            prefix.append(comps[pos])
         lo_vals = prefix + [0] * (3 - len(prefix))
         hi_vals = prefix + [_MAX_ID] * (3 - len(prefix))
         lo = int(_pack(np.int64(lo_vals[0]), np.int64(lo_vals[1]),
@@ -172,6 +235,104 @@ class FederatedStore:
         hi = int(_pack(np.int64(hi_vals[0]), np.int64(hi_vals[1]),
                        np.int64(hi_vals[2])))
         return lo, hi
+
+    # -- host-side launch planning (Omega-restricted window skip) ------------
+
+    def plan_windows(self, tp: TriplePattern,
+                     insts: Sequence[TriplePattern],
+                     window: int) -> WindowPlan:
+        """Plan the window launches for one (grouped) request.
+
+        Index choice: when every instantiated pattern shares one shape
+        whose best index binds a longer prefix than the base pattern
+        does under that index, the launch streams THAT order and the
+        per-binding sub-ranges become host-computable window filters;
+        otherwise the base pattern's own best index is used (the
+        POS/OSP mirrors are what make this a real choice -- an
+        unbound-subject pattern no longer scans whole shards).
+
+        Window skip: the per-binding ``(lo, hi)`` key intervals are
+        batch-searchsorted against every shard's host key copy; a window
+        page whose owned span intersects no sub-range on any shard is
+        provably match-free (every triple matching instantiation ``p_j``
+        has its key inside ``p_j``'s interval) and is dropped from
+        ``pages``. Skipping whole pages never reorders or duplicates
+        anything, so parity is untouched.
+        """
+        from .store import (TripleStore, _ORDERS, merge_spans,
+                            prefix_interval_keys)
+        window = max(1, min(int(window), self.shard_n))
+
+        def base_plan(order_name: str) -> WindowPlan:
+            lo, hi = self.prefix_keys(tp, order_name)
+            hk = self.indexes[order_name].host_keys
+            starts = np.array([np.searchsorted(hk[s], lo, side="left")
+                               for s in range(hk.shape[0])])
+            ends = np.array([np.searchsorted(hk[s], hi, side="right")
+                             for s in range(hk.shape[0])])
+            range_rows = int((ends - starts).sum())
+            pages_total = int(max(
+                (-(-int(e - s) // window)
+                 for s, e in zip(starts, ends)), default=0))
+            return WindowPlan(order=order_name, lo_key=lo, hi_key=hi,
+                              pages=list(range(pages_total)),
+                              range_rows=range_rows,
+                              candidate_rows=range_rows, pruned=False,
+                              pages_total=pages_total)
+
+        bname, _ = TripleStore._choose_index(tp)
+        unpruned = base_plan(bname)
+        shapes = {tuple(is_var(c) for c in p.as_tuple()) for p in insts}
+        if len(shapes) != 1 or not insts:
+            return unpruned
+        iname, iplen = TripleStore._choose_index(insts[0])
+        # prefix the BASE pattern binds under the instantiations' best
+        # index: pruning pays only if instantiations bind more
+        comp_order = _ORDERS[iname]
+        base_plen = 0
+        for pos in comp_order:
+            if is_var(tp.as_tuple()[pos]):
+                break
+            base_plen += 1
+        if iplen <= base_plen:
+            return unpruned
+        comps = np.asarray([p.as_tuple() for p in insts], dtype=np.int64)
+        lo_keys, hi_keys = prefix_interval_keys(comps, comp_order, iplen)
+        # base range under the insts' index (already computed when the
+        # instantiations' best order is the base pattern's own)
+        shell = unpruned if iname == bname else base_plan(iname)
+        hk = self.indexes[iname].host_keys
+        pages: set = set()
+        candidate_rows = 0
+        for s in range(hk.shape[0]):
+            start = int(np.searchsorted(hk[s], shell.lo_key,
+                                        side="left"))
+            end = int(np.searchsorted(hk[s], shell.hi_key,
+                                      side="right"))
+            if end <= start:
+                continue
+            a = np.searchsorted(hk[s], lo_keys, side="left")
+            b = np.searchsorted(hk[s], hi_keys, side="right")
+            spans = merge_spans(np.stack([a, b], axis=1))
+            for slo, shi in spans:
+                # instantiation intervals are sub-intervals of the base
+                # range under the same order, but clip defensively
+                slo = max(int(slo), start)
+                shi = min(int(shi), end)
+                if shi <= slo:
+                    continue
+                candidate_rows += shi - slo
+                pages.update(range((slo - start) // window,
+                                   (shi - 1 - start) // window + 1))
+        pruned = WindowPlan(order=iname, lo_key=shell.lo_key,
+                            hi_key=shell.hi_key, pages=sorted(pages),
+                            range_rows=shell.range_rows,
+                            candidate_rows=candidate_rows, pruned=True,
+                            pages_total=shell.pages_total)
+        # the base pattern's own index may beat sub-range skipping under
+        # the instantiations' index (fewer actual window dispatches win)
+        return pruned if len(pruned.pages) <= len(unpruned.pages) \
+            else unpruned
 
     # -- the request path ----------------------------------------------------
 
@@ -434,14 +595,26 @@ class ShardedSelector:
     with ``cand_streamed = window`` -- the rows ONE device streams --
     so the accounting surface (and the budgets gated on it) is shared
     with the single-host kernel path.
+
+    Omega-restricted pruning (docs/pruning.md): every request is
+    launched from a host-side :class:`WindowPlan` -- the POS/OSP
+    mirrors let the plan pick the order with the longest bound prefix
+    (unbound-subject patterns stop scanning whole shards), and window
+    pages disjoint from every per-binding sub-range are skipped
+    outright. With ``store`` connected and ``fast_path_rows`` > 0,
+    plans whose relevant row count falls below the threshold are served
+    by the numpy block evaluation instead of launching windows.
     """
 
     def __init__(self, fed: FederatedStore,
                  window: int = DEFAULT_SHARD_WINDOW,
-                 fragments: Optional[FragmentStore] = None) -> None:
+                 fragments: Optional[FragmentStore] = None,
+                 store=None, fast_path_rows: int = 0) -> None:
         self.fed = fed
         self.window = max(1, min(int(window), fed.shard_n))
         self.fragments = fragments
+        self.store = store
+        self.fast_path_rows = int(fast_path_rows)
         self.launches: List[LaunchRecord] = []
 
     # -- public API (same contract as KernelSelector) ------------------------
@@ -485,6 +658,32 @@ class ShardedSelector:
         """Windowed sharded launches over the store-miss groups."""
         g = len(omegas)
         m = max(len(p) for p in patterns)
+        window = self.window
+        all_insts = [p for group in patterns for p in group]
+        plan = self.fed.plan_windows(tp, all_insts, window)
+        empty = np.empty((0, 3), dtype=np.int32)
+        if not plan.pages:
+            # no window can contain a match on any shard (empty range,
+            # or every sub-range empty): zero launches, cnt = 0
+            return [(empty, 0)] * g
+
+        # Small-work fast path: the plan's relevant rows cannot pay for
+        # window dispatches -- evaluate the groups over the pruned block
+        # gathered from the (host) oracle store instead.
+        if (self.store is not None
+                and 0 < plan.candidate_rows <= self.fast_path_rows):
+            sr = self.store.subranges(tp, insts=all_insts)
+            if sr is not None and sr.rows < len(
+                    self.store.candidate_range(tp)):
+                block = self.store.gather_subranges(sr)
+            else:
+                block = self.store.candidate_range(tp).triples
+            self.launches.append(LaunchRecord(
+                cand_streamed=int(block.shape[0]), pat_slots=0, groups=g,
+                pruned=plan.pruned, cand_full=plan.range_rows,
+                fast_path=True))
+            return select_block_numpy(block, tp, patterns)
+
         # pad the grid to bucketed static shapes (bounded jit cache):
         # groups to a power of two, pattern slots to the kernel m-tile.
         gpad = _pow2(g)
@@ -494,8 +693,7 @@ class ShardedSelector:
         comps = tp.as_tuple()
         wild = [i for i, c in enumerate(comps) if is_var(c)]
         wild_cols = tuple(wild) or (0,)  # dummy column when fully bound
-        lo, hi = self.fed.prefix_keys(tp)
-        window = self.window
+        idx = self.fed.indexes[plan.order]
         fn = self.fed.lowerable_windowed_grouped(window, gpad,
                                                  wild_cols=wild_cols)
 
@@ -503,15 +701,14 @@ class ShardedSelector:
         firsts: List[List[np.ndarray]] = [[] for _ in range(g)]
         cnt_total = np.zeros((g,), dtype=np.int64)
         with enable_x64(True):
-            lo_dev = jnp.asarray(lo, jnp.int64)
-            hi_dev = jnp.asarray(hi, jnp.int64)
+            lo_dev = jnp.asarray(plan.lo_key, jnp.int64)
+            hi_dev = jnp.asarray(plan.hi_key, jnp.int64)
             pats_dev = jnp.asarray(pats)
             valid_dev = jnp.asarray(valid)
             bv_dev = jnp.asarray(base_vec)
-            page_idx = 0
-            while True:
-                pages, first, counts, cnts, range_len = fn(
-                    self.fed.triples, self.fed.valid, self.fed.keys,
+            for page_idx in plan.pages:
+                pages, first, counts, cnts, _range_len = fn(
+                    idx.triples, idx.valid, idx.keys,
                     pats_dev, valid_dev, bv_dev, lo_dev, hi_dev,
                     jnp.asarray(page_idx, jnp.int32))
                 pages = np.asarray(pages)
@@ -519,16 +716,14 @@ class ShardedSelector:
                 counts = np.asarray(counts)
                 cnt_total += np.asarray(cnts)[:, :g].sum(axis=0)
                 self.launches.append(LaunchRecord(
-                    cand_streamed=window, pat_slots=gpad * mp, groups=g))
+                    cand_streamed=window, pat_slots=gpad * mp, groups=g,
+                    pruned=plan.pruned, cand_full=window))
                 for s in range(pages.shape[0]):
                     for gi in range(g):
                         n = int(counts[s, gi])
                         if n:
                             kept[gi].append(pages[s, gi, :n])
                             firsts[gi].append(first[s, gi, :n])
-                page_idx += 1
-                if page_idx * window >= int(np.asarray(range_len).max()):
-                    break
 
         out: List[Tuple[np.ndarray, int]] = []
         empty = np.empty((0, 3), dtype=np.int32)

@@ -117,12 +117,18 @@ class FragmentStore:
 
     # -- data layer (selector memo / range memo) -----------------------------
 
-    def get_data(self, key: Tuple):
+    def get_data(self, key: Tuple, count_miss: bool = True):
         """Counting data lookup: payload or None; bumps LRU, re-trims
-        the weight bound (payloads can grow lazily after insert)."""
+        the weight bound (payloads can grow lazily after insert).
+
+        ``count_miss=False`` is the probe variant: a present payload is
+        still a (counted) hit, but an absent one charges nothing --
+        probe traffic that will not populate the entry must not distort
+        the miss accounting of the layers that do."""
         entry = self._entries.get(key)
         if entry is None or entry.data is None:
-            self.misses += 1
+            if count_miss:
+                self.misses += 1
             return None
         self.hits += 1
         self._data_lru.move_to_end(key)

@@ -20,10 +20,21 @@ G requests instead of G passes. ``BrTPFServer.handle_batch`` feeds this
 path and the recorded per-launch geometry feeds the multi-client replay
 in ``sim.py``.
 
+Omega-restricted pruning (docs/pruning.md): when the attached mappings
+instantiate more-bound shapes, the launch streams the merged union of
+their per-binding index sub-ranges (``TripleStore.subranges``) instead
+of the full prefix range -- the rows outside the union are guaranteed
+join-irrelevant, so the response cannot change while the HBM stream
+shrinks to the join-relevant candidates. Below ``fast_path_rows``
+post-pruning rows the selection skips the kernel entirely
+(``select_block_numpy``).
+
 Why parity holds despite the kernel's flat wildcard grid:
 
 * every triple matching an instantiated pattern of ``tp`` also matches
-  ``tp``, so ``candidate_range(tp)`` covers all per-pattern streams;
+  ``tp``, so ``candidate_range(tp)`` covers all per-pattern streams --
+  and the pruned sub-range union covers them by construction (each
+  instantiation's matches lie inside its own sub-range);
 * repeated-variable constraints are shared by *all* instantiations
   (positions holding the same variable are either both replaced by the
   same constant or both left as that variable), so conjoining the base
@@ -56,6 +67,16 @@ from .store import _ORDERS, TripleStore, _pack
 # candidate tile so the jit cache stays bounded (log2(N) shapes) on a
 # server that sees arbitrary range sizes.
 _MIN_BUCKET = 1024
+
+# Small-work fast path default: below this many (post-pruning)
+# candidate rows a kernel launch cannot pay for its dispatch overhead
+# (BENCH_kernels.json's `wildcard` row shows the kernel losing to the
+# numpy backend outright at small work sizes) -- the selector routes to
+# the numpy oracle instead and records the decision in LaunchRecord.
+# 0 disables the fast path (the default for bare selectors, so launch
+# accounting in tests stays deterministic; servers/benchmarks opt in
+# via ``fast_path_rows``).
+DEFAULT_FAST_PATH_ROWS = 256
 
 
 def _bucket(n: int) -> int:
@@ -99,12 +120,24 @@ class LaunchRecord:
     store (``core/fragments.py``): no candidates were streamed, no
     pattern slots paid, and the server's launch budget must not charge
     it (``Counters.launches_skipped`` counts these instead).
+
+    ``pruned=True`` marks a launch whose candidate stream was the
+    Omega-restricted sub-range union instead of the full prefix range
+    (``cand_full`` records what the unpruned stream would have been).
+    ``fast_path=True`` records a small-work decision: the (post-pruning)
+    candidate row count fell below the selector's ``fast_path_rows``
+    threshold, so the groups were served by the numpy oracle with no
+    kernel launch at all -- the server charges it to
+    ``Counters.fast_path_selects``, never to the launch budget.
     """
 
     cand_streamed: int      # padded candidates streamed once (T)
     pat_slots: int          # padded pattern slots across groups (G * Mp)
     groups: int             # requests served by the launch
     skipped: bool = False   # avoided entirely: fragment-store residency
+    pruned: bool = False    # streamed the sub-range union, not the range
+    cand_full: int = 0      # unpruned stream size (pruning accounting)
+    fast_path: bool = False  # routed to the numpy oracle (small work)
 
     @property
     def cells(self) -> int:
@@ -209,6 +242,54 @@ def record_fragments(
         fragments.put_data(fragment_key(tp.as_tuple(), om), payload)
 
 
+def select_block_numpy(
+    block: np.ndarray, tp: TriplePattern,
+    patterns: Sequence[List[TriplePattern]],
+) -> List[Tuple[np.ndarray, int]]:
+    """Numpy evaluation of G grouped selections over one candidate block.
+
+    The small-work fast path: computes exactly what the grouped kernel +
+    epilogue compute -- per-row first-matching-pattern index, per-row
+    matching-pattern count, the base pattern's residual repeated-
+    variable/bound-component mask, then the shared ``stream_order``
+    epilogue -- so it is byte-identical to both the kernel path and the
+    numpy oracle by the same argument, without launching anything and
+    without touching the store's memo layers (``block`` is already in
+    hand). ``block`` must cover every instantiated pattern's matches and
+    contain no duplicate triples (the candidate-range / sub-range-union
+    contracts).
+    """
+    comps = tp.as_tuple()
+    base = np.ones(block.shape[0], dtype=bool)
+    for i, c in enumerate(comps):
+        if not is_var(c):
+            base &= block[:, i] == c
+    for i in range(3):
+        for j in range(i + 1, 3):
+            if is_var(comps[i]) and comps[i] == comps[j]:
+                base &= block[:, i] == block[:, j]
+    out: List[Tuple[np.ndarray, int]] = []
+    empty = np.empty((0, 3), dtype=np.int32)
+    for insts in patterns:
+        pats = np.asarray([[c if not is_var(c) else -1
+                            for c in p.as_tuple()] for p in insts],
+                          dtype=np.int32)                    # [M, 3]
+        comp = np.ones((block.shape[0], pats.shape[0]), dtype=bool)
+        for i in range(3):
+            comp &= (pats[None, :, i] < 0) | (
+                block[:, i, None] == pats[None, :, i])       # [T, M]
+        comp &= base[:, None]
+        keep = comp.any(axis=1)
+        cnt = int(comp.sum())
+        if not keep.any():
+            out.append((empty, cnt))
+            continue
+        kept = block[keep]
+        first = np.argmax(comp[keep], axis=1)    # first matching pattern
+        out.append((stream_order(kept, first, list(insts)), cnt))
+    return out
+
+
 class KernelSelector:
     """Bind-join-kernel selector over one :class:`TripleStore`.
 
@@ -216,12 +297,24 @@ class KernelSelector:
     fragment store: selections already resident there are returned
     without a kernel launch (recorded as skipped launches), and fresh
     selections are registered for every other layer to reuse.
+
+    Omega-restricted pruning (docs/pruning.md) is always on: when every
+    instantiated pattern binds a prefix of some index order, the launch
+    streams the gathered union of their ``(lo, hi)`` sub-ranges
+    (:meth:`TripleStore.subranges`) instead of the pattern's full prefix
+    range -- byte-identical output, candidate stream shrunk to the
+    join-relevant rows. ``fast_path_rows`` > 0 additionally routes
+    selections whose (post-pruning) candidate count falls below the
+    threshold to the numpy oracle (no launch; recorded in
+    :class:`LaunchRecord`).
     """
 
     def __init__(self, store: TripleStore,
-                 fragments: Optional[FragmentStore] = None) -> None:
+                 fragments: Optional[FragmentStore] = None,
+                 fast_path_rows: int = 0) -> None:
         self.store = store
         self.fragments = fragments
+        self.fast_path_rows = int(fast_path_rows)
         self.launches: List[LaunchRecord] = []
 
     # -- public API ----------------------------------------------------------
@@ -270,19 +363,52 @@ class KernelSelector:
     ) -> List[Tuple[np.ndarray, int]]:
         """One grouped kernel launch over the store-miss groups."""
         rng = self.store.candidate_range(tp)
-        t = len(rng)
+        full = len(rng)
         empty = np.empty((0, 3), dtype=np.int32)
-        if t == 0:
+        if full == 0:
             return [(empty, 0)] * len(omegas)
 
         g = len(omegas)
         m = max(len(p) for p in patterns)
+
+        # Omega-restricted pruning: the union of the groups' per-binding
+        # sub-ranges covers every triple that can match any instantiated
+        # pattern, so streaming only that union is exact. The flat
+        # (cross-group) instantiation list keeps the grouped geometry:
+        # one candidate block still serves all G requests.
+        all_insts = [p for group in patterns for p in group]
+        sr = self.store.subranges(tp, insts=all_insts)
+        pruned = sr is not None and sr.rows < full
+        if pruned:
+            block = self.store.gather_subranges(sr)
+            t = int(block.shape[0])
+            if t == 0:
+                # no binding has any candidates (e.g. Omega values
+                # absent from the store): nothing to stream, cnt = 0
+                return [(empty, 0)] * len(omegas)
+        else:
+            t = full
+
+        # Small-work fast path: below the threshold the kernel cannot
+        # pay its dispatch overhead -- serve the groups from the numpy
+        # oracle and record the decision (no kernel launch charged).
+        if 0 < t <= self.fast_path_rows:
+            self.launches.append(LaunchRecord(
+                cand_streamed=t, pat_slots=0, groups=g,
+                pruned=pruned, cand_full=full, fast_path=True))
+            if not pruned:
+                block = rng.triples
+            return select_block_numpy(block, tp, patterns)
+
+        if not pruned:
+            block = rng.triples
+
         pats, valid, base_vec = marshal_pattern_grid(tp, patterns, g, m)
 
         # Pad the candidate block to a shape bucket (bounded jit cache).
         tpad = _bucket(t)
         cand = np.zeros((tpad, 3), dtype=np.int32)
-        cand[:t] = rng.triples
+        cand[:t] = block
         row_valid = np.zeros((tpad,), dtype=bool)
         row_valid[:t] = True
 
@@ -295,7 +421,8 @@ class KernelSelector:
 
         mp = kops.padded_pattern_slots(m)
         self.launches.append(
-            LaunchRecord(cand_streamed=tpad, pat_slots=g * mp, groups=g))
+            LaunchRecord(cand_streamed=tpad, pat_slots=g * mp, groups=g,
+                         pruned=pruned, cand_full=_bucket(full)))
 
         rows = np.asarray(rows)
         counts = np.asarray(counts)

@@ -38,6 +38,11 @@ class Counters:
     kernel_pat_slots: int = 0       # padded pattern slots across groups
     kernel_batched_requests: int = 0  # requests served by shared launches
     launches_skipped: int = 0       # launches avoided by store residency
+    # Omega-restricted pruning / small-work fast path (docs/pruning.md):
+    cand_pruned_away: int = 0       # candidate rows NOT streamed thanks
+    #                                 to sub-range pruning (full - pruned)
+    fast_path_selects: int = 0      # requests served by the numpy block
+    #                                 evaluation instead of a launch
 
     def merge(self, other: "Counters") -> None:
         for f in dataclasses.fields(self):
@@ -61,6 +66,14 @@ def layer_metrics(server) -> dict:
     store's count of kernel/window launches avoided by residency.
     """
     f = server.fragments
+    # Range-memo accounting is reported as THIS server's delta (the
+    # store, and its counters, may be shared across servers -- e.g. the
+    # benchmarks' one dataset store); probe paths additionally never
+    # charge misses (store.candidate_range(memoize=False)), so the rate
+    # below describes real streaming reads only.
+    base_hits, base_misses = getattr(server, "_range_base", (0, 0))
+    r_hits = server.store.range_memo_hits - base_hits
+    r_misses = server.store.range_memo_misses - base_misses
     out = {
         "counters": dataclasses.asdict(server.counters),
         "launches_skipped": f.launches_skipped,
@@ -71,11 +84,9 @@ def layer_metrics(server) -> dict:
             "entries": f.data_entries,
         },
         "range_memo": {
-            "hits": server.store.range_memo_hits,
-            "misses": server.store.range_memo_misses,
-            "hit_rate": (server.store.range_memo_hits
-                         / max(server.store.range_memo_hits
-                               + server.store.range_memo_misses, 1)),
+            "hits": r_hits,
+            "misses": r_misses,
+            "hit_rate": r_hits / max(r_hits + r_misses, 1),
         },
     }
     if server.cache is not None:

@@ -109,6 +109,7 @@ class BrTPFServer:
         mesh=None,
         shard_window: Optional[int] = None,
         shard_axis: str = "data",
+        fast_path_rows: int = 0,
     ) -> None:
         if selector_backend not in ("numpy", "kernel", "sharded"):
             raise ValueError(f"unknown selector_backend {selector_backend!r}")
@@ -140,7 +141,8 @@ class BrTPFServer:
         if selector_backend == "kernel":
             from .kernel_selectors import KernelSelector
             self._selector = KernelSelector(store,
-                                            fragments=self.fragments)
+                                            fragments=self.fragments,
+                                            fast_path_rows=fast_path_rows)
         elif selector_backend == "sharded":
             from .federation import (DEFAULT_SHARD_WINDOW, FederatedStore,
                                      ShardedSelector)
@@ -153,11 +155,18 @@ class BrTPFServer:
             self._selector = ShardedSelector(
                 self.federated,
                 window=shard_window or DEFAULT_SHARD_WINDOW,
-                fragments=self.fragments)
+                fragments=self.fragments,
+                store=store, fast_path_rows=fast_path_rows)
         self.counters = Counters()
         # Memo keys prefilled by the *current* handle_batch call: their
         # subsequent handle() reads are batched work, not cache skips.
         self._prefilled: set = set()
+        # Honest per-server range-memo accounting: the store (and its
+        # memo counters) may be shared across servers (the benchmarks
+        # reuse one dataset store), so this server's metrics report
+        # DELTAS from the counts observed at construction/reset --
+        # another server's probe traffic must not show up here.
+        self._range_base = (store.range_memo_hits, store.range_memo_misses)
 
     # -- request handling ---------------------------------------------------
 
@@ -273,9 +282,20 @@ class BrTPFServer:
                 # (the selector already bumped fragments.launches_skipped)
                 self.counters.launches_skipped += 1
                 continue
+            if rec.fast_path:
+                # small-work decision: the groups were served by the
+                # numpy block evaluation -- no kernel ran, so the launch
+                # budget and the streamed-candidate totals must not be
+                # charged (cand_streamed on the record documents the
+                # decision quantity, not an HBM pass)
+                self.counters.fast_path_selects += rec.groups
+                continue
             self.counters.kernel_launches += 1
             self.counters.kernel_cand_streamed += rec.cand_streamed
             self.counters.kernel_pat_slots += rec.pat_slots
+            if rec.pruned:
+                self.counters.cand_pruned_away += max(
+                    rec.cand_full - rec.cand_streamed, 0)
         self.counters.kernel_batched_requests += batched_requests
 
     def _memoize(self, memo_key, data: np.ndarray, cnt: int) -> None:
@@ -376,6 +396,8 @@ class BrTPFServer:
     def reset_counters(self) -> None:
         self.counters.reset()
         self.fragments.reset_counters()
+        self._range_base = (self.store.range_memo_hits,
+                            self.store.range_memo_misses)
         if self.cache is not None:
             self.cache.hits = 0
             self.cache.misses = 0

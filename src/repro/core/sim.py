@@ -186,10 +186,21 @@ class SimResult:
     # the modeled unified store (memo or shared HTTP cache) -- the
     # third quantity live_replay validates.
     launches_skipped: int = 0
+    # candidate rows streamed by created launches (requests that join an
+    # open launch share its stream and add none; skipped requests stream
+    # nothing). Traces collected against a pruning server already carry
+    # the pruned per-request stream in ``HttpRecord.cand``, so this is
+    # the model's Omega-restricted streaming total -- the fourth
+    # quantity live_replay validates.
+    cand_streamed: int = 0
 
     @property
     def launches_per_request(self) -> float:
         return self.launches / max(self.kernel_requests, 1)
+
+    @property
+    def cand_per_request(self) -> float:
+        return self.cand_streamed / max(self.kernel_requests, 1)
 
     @property
     def skips_per_request(self) -> float:
@@ -308,7 +319,7 @@ def simulate(traces_per_client: Sequence[Sequence[QueryTrace]],
         isinstance(ev, HttpRecord) and ev.cand > 0
         for traces in traces_per_client
         for trace in traces for ev in trace.events)
-    sim_launches = kernel_requests = sim_skips = 0
+    sim_launches = kernel_requests = sim_skips = sim_cand = 0
     completed = timeouts = attempted = 0
     qet_sum = 0.0
     qets: List[float] = []
@@ -423,8 +434,10 @@ def simulate(traces_per_client: Sequence[Sequence[QueryTrace]],
                 kernel_requests += 1
                 # a created request stands for all of its window
                 # launches (1 on the single-host kernel path); a
-                # joining request rides them and creates none.
+                # joining request rides them and creates none -- and
+                # streams no candidates of its own either.
                 sim_launches += n_launch if created else 0
+                sim_cand += ev.cand if created else 0
                 # the launch leaves this fragment resident in the
                 # modeled unified store
                 memo[frag_key] = None
@@ -466,7 +479,8 @@ def simulate(traces_per_client: Sequence[Sequence[QueryTrace]],
                      simulated_s=max(simulated, 1e-9),
                      launches=sim_launches,
                      kernel_requests=kernel_requests,
-                     launches_skipped=sim_skips)
+                     launches_skipped=sim_skips,
+                     cand_streamed=sim_cand)
 
 
 def split_workload(workload, num_clients: int):
@@ -504,6 +518,15 @@ class LiveValidation:
     # memo model; observed: Counters.launches_skipped).
     simulated_skipped: int = 0
     observed_skipped: int = 0
+    # Omega-restricted pruning validation: candidate rows streamed by
+    # the launches each side created (sim: SimResult.cand_streamed over
+    # the pruned traces; observed: Counters.kernel_cand_streamed).
+    # Grouped live launches stream ONE (padded) block for the whole
+    # group while the sim charges the creating request's solo stream,
+    # so agreement is approximate under batching -- but both collapse
+    # together when pruning shrinks the streams.
+    simulated_cand: int = 0
+    observed_cand: int = 0
 
     @property
     def agreement(self) -> float:
@@ -521,6 +544,12 @@ class LiveValidation:
         """Relative skipped-launch disagreement |obs - sim| / max(sim, 1)."""
         return (abs(self.observed_skipped - self.simulated_skipped)
                 / max(self.simulated_skipped, 1))
+
+    @property
+    def cand_within(self) -> float:
+        """Relative streamed-candidate disagreement |obs - sim| / max(sim, 1)."""
+        return (abs(self.observed_cand - self.simulated_cand)
+                / max(self.simulated_cand, 1))
 
 
 def requests_from_trace(trace: QueryTrace) -> List["object"]:
@@ -575,6 +604,9 @@ def live_replay(traces_per_client: Sequence[Sequence[QueryTrace]],
         simulated_skipped=sim.launches_skipped,
         observed_skipped=(after.launches_skipped
                           - base.launches_skipped),
+        simulated_cand=sim.cand_streamed,
+        observed_cand=(after.kernel_cand_streamed
+                       - base.kernel_cand_streamed),
     )
 
 
@@ -620,7 +652,9 @@ def main(argv=None) -> int:
           f"completed={sim.completed} kernel_requests={sim.kernel_requests} "
           f"launches={sim.launches} "
           f"launches_per_request={sim.launches_per_request:.3f} "
-          f"launches_skipped={sim.launches_skipped}")
+          f"launches_skipped={sim.launches_skipped} "
+          f"cand_streamed={sim.cand_streamed} "
+          f"cand_per_request={sim.cand_per_request:.0f}")
     if not args.live:
         return 0
 
@@ -639,6 +673,9 @@ def main(argv=None) -> int:
     print(f"validation(skips): simulated={lv.simulated_skipped} "
           f"observed={lv.observed_skipped} "
           f"(|rel err|={lv.skip_within:.1%})")
+    print(f"validation(cand): simulated={lv.simulated_cand} "
+          f"observed={lv.observed_cand} "
+          f"(|rel err|={lv.cand_within:.1%})")
     return 0
 
 

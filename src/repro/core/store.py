@@ -20,7 +20,7 @@ POS, OSP) and packed-int64 binary search:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -131,6 +131,103 @@ class CandidateRange:
         """Structure-of-arrays view (s, p, o) -- the kernel input layout."""
         t = self.triples
         return t[:, 0], t[:, 1], t[:, 2]
+
+
+def prefix_interval_keys(comps: np.ndarray, order: Tuple[int, int, int],
+                         plen: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Packed ``(lo_keys, hi_keys)`` of the length-``plen`` bound prefix
+    of each pattern row in ``comps`` (int64 [K, 3]) under ``order``.
+
+    The single source of the sub-range key derivation -- shared by
+    :meth:`TripleStore.subranges` and the sharded planner
+    (:meth:`~repro.core.federation.FederatedStore.plan_windows`), so the
+    two backends cannot drift in how a binding maps to a key interval.
+    Unbound tail positions fill with 0 / ``_MAX_ID``; ``searchsorted``
+    left/right on the result gives the exact index interval.
+    """
+    lo_cols, hi_cols = [], []
+    for i in range(3):
+        if i < plen:
+            col = comps[:, order[i]]
+            lo_cols.append(col)
+            hi_cols.append(col)
+        else:
+            lo_cols.append(np.zeros(comps.shape[0], np.int64))
+            hi_cols.append(np.full(comps.shape[0], _MAX_ID, np.int64))
+    return (_pack(lo_cols[0], lo_cols[1], lo_cols[2]),
+            _pack(hi_cols[0], hi_cols[1], hi_cols[2]))
+
+
+def merge_spans(bounds: np.ndarray) -> np.ndarray:
+    """Merge per-binding ``(lo, hi)`` intervals into disjoint union spans.
+
+    The union-merge rule of the pruned read path (docs/pruning.md):
+    drop empty intervals, sort by ``lo``, and coalesce overlapping *or
+    adjacent* intervals -- the result is the minimal sorted sequence of
+    disjoint ``[lo, hi)`` spans covering exactly the union. Disjointness
+    is what makes the pruned candidate block duplicate-free within one
+    index (each row position appears in at most one span).
+    """
+    bounds = np.asarray(bounds, dtype=np.int64).reshape(-1, 2)
+    bounds = bounds[bounds[:, 1] > bounds[:, 0]]
+    if bounds.shape[0] == 0:
+        return np.empty((0, 2), dtype=np.int64)
+    bounds = bounds[np.argsort(bounds[:, 0], kind="stable")]
+    merged: List[List[int]] = [[int(bounds[0, 0]), int(bounds[0, 1])]]
+    for lo, hi in bounds[1:]:
+        if lo <= merged[-1][1]:                 # overlap or adjacency
+            merged[-1][1] = max(merged[-1][1], int(hi))
+        else:
+            merged.append([int(lo), int(hi)])
+    return np.asarray(merged, dtype=np.int64)
+
+
+@dataclasses.dataclass
+class SpanGroup:
+    """Sub-ranges of one index for one uniform instantiation shape."""
+
+    index: str                   # index name: "spo" | "pos" | "osp"
+    prefix_len: int              # bound prefix length of the shape
+    bounds: np.ndarray           # int64 [K, 2] per-binding (lo, hi)
+    spans: np.ndarray            # int64 [S, 2] merged disjoint union
+
+    @property
+    def rows(self) -> int:
+        if self.spans.shape[0] == 0:
+            return 0
+        return int((self.spans[:, 1] - self.spans[:, 0]).sum())
+
+
+@dataclasses.dataclass
+class SubRanges:
+    """Omega-restricted candidate sub-ranges for one request.
+
+    Each distinct binding attached to a brTPF request instantiates a
+    *more-bound* pattern whose matches occupy a contiguous key range of
+    some index order -- so the union of those per-binding ``(lo, hi)``
+    sub-ranges covers every triple that can join with the attached
+    intermediate result, and everything outside the union is provably
+    join-irrelevant. ``groups`` holds one :class:`SpanGroup` per uniform
+    instantiation shape (mappings with different bound-variable sets
+    instantiate differently-shaped patterns, each with its own best
+    index); ``rows`` is the pre-dedup union size, the quantity selector
+    backends compare against the full prefix range to decide whether
+    pruning pays.
+    """
+
+    pattern: Tuple[int, int, int]
+    groups: List[SpanGroup]
+
+    @property
+    def rows(self) -> int:
+        return sum(g.rows for g in self.groups)
+
+    def page_key(self) -> tuple:
+        """Stable page-layer key for the pruned row set: pruned
+        selections memoize independently of full-range reads (and of
+        each other -- distinct span unions get distinct keys)."""
+        return ("pruned",) + tuple(
+            (g.index, g.spans.tobytes()) for g in self.groups)
 
 
 class TripleStore:
@@ -262,7 +359,8 @@ class TripleStore:
 
     # -- public API (the HDT-backend contract) ------------------------------
 
-    def candidate_range(self, tp: TriplePattern) -> CandidateRange:
+    def candidate_range(self, tp: TriplePattern,
+                        memoize: bool = True) -> CandidateRange:
         """Lazy candidate range for ``tp`` (kernel / windowed input).
 
         The chosen index's bound-prefix range, in index order. Supersets
@@ -270,21 +368,31 @@ class TripleStore:
         repeated-variable constraints are *not* applied here -- the
         bind-join/tpf-match kernels resolve those on device). No rows
         are gathered until ``.window()`` or ``.triples`` is read.
+
+        ``memoize=False`` is the *probe* path (``cardinality`` fallback
+        scans and other one-shot estimates): a memoized range is still
+        reused -- and counted as a hit -- but an absent one is built
+        without inserting a memo entry and without charging a miss, so
+        probe traffic can neither churn the LRU nor distort the memo's
+        hit/miss accounting (the streaming read paths are what the
+        range-memo metrics describe).
         """
         # Rows are pinned lazily (a consumer may have materialized
         # since the last access), so the fragment store re-enforces the
         # row bound on hits too -- the just-hit entry is LRU-newest,
         # never popped.
         key = (tp.as_tuple(), None)
-        memo = self._ranges.get_data(key)
+        memo = self._ranges.get_data(key, count_miss=memoize)
         if memo is not None:
             return memo
         name, lo, hi, plen = self._prefix_range(tp)
         idx = self._indexes[name]
         rng = CandidateRange(index=name, lo=lo, hi=hi, prefix_len=plen,
                              _store_triples=self.triples, _perm=idx.perm,
-                             _fragments=self._ranges, _key=key)
-        self._ranges.put_data(key, rng)
+                             _fragments=self._ranges if memoize else None,
+                             _key=key if memoize else None)
+        if memoize:
+            self._ranges.put_data(key, rng)
         return rng
 
     def evict_candidate_range(self, pattern_tuple: Tuple[int, int, int]
@@ -293,6 +401,98 @@ class TripleStore:
         server's fragment store when a pattern's last live fragment is
         evicted). Returns True if present."""
         return self._ranges.evict((pattern_tuple, None))
+
+    # -- Omega-restricted candidate pruning (docs/pruning.md) ----------------
+
+    def subranges(self, tp: TriplePattern, omega: Optional[np.ndarray] = None,
+                  insts: Optional[List[TriplePattern]] = None,
+                  ) -> Optional[SubRanges]:
+        """Per-binding candidate sub-ranges for an Omega-restricted read.
+
+        Each distinct binding value instantiates a more-bound pattern;
+        when the instantiated shape has a longer bound prefix in some
+        index order, its matches occupy one contiguous key range there.
+        This batches the derivation: the packed ``(lo, hi)`` prefix keys
+        of ALL distinct bindings of a shape are searchsorted against the
+        index's int64 key array in one vectorized call each, and the
+        resulting intervals are union-merged into disjoint spans
+        (:func:`merge_spans`). Streaming only the merged union is exact:
+        every triple matching any instantiated pattern lies inside that
+        pattern's sub-range, so rows outside the union are guaranteed
+        join-irrelevant (the paper's "only triples that contribute to
+        the join" server promise, enforced on the read side).
+
+        ``insts`` may carry the already-instantiated (deduped) pattern
+        list -- the server computes it for lookup accounting. Returns
+        ``None`` when pruning cannot narrow anything: no instantiation
+        binds a prefix position (e.g. empty Omega, or mappings that
+        leave the pattern's shape unchanged).
+        """
+        if insts is None:
+            from .selectors import instantiate_patterns
+            insts = instantiate_patterns(tp, omega)
+        if not insts:
+            return None
+        shapes: "dict[tuple, List[TriplePattern]]" = {}
+        for p in insts:
+            mask = tuple(is_var(c) for c in p.as_tuple())
+            shapes.setdefault(mask, []).append(p)
+        groups: List[SpanGroup] = []
+        for pats in shapes.values():
+            name, plen = self._choose_index(pats[0])
+            if plen == 0:
+                # Some instantiation is fully unbound: its sub-range is
+                # the whole store, nothing can be pruned.
+                return None
+            order = self._indexes[name].order
+            comps = np.asarray([p.as_tuple() for p in pats],
+                               dtype=np.int64)               # [K, 3]
+            lo_keys, hi_keys = prefix_interval_keys(comps, order, plen)
+            keys = self._indexes[name].keys
+            los = np.searchsorted(keys, lo_keys, side="left")
+            his = np.searchsorted(keys, hi_keys, side="right")
+            bounds = np.stack([los, his], axis=1).astype(np.int64)
+            groups.append(SpanGroup(index=name, prefix_len=plen,
+                                    bounds=bounds,
+                                    spans=merge_spans(bounds)))
+        return SubRanges(pattern=tp.as_tuple(), groups=groups)
+
+    def gather_subranges(self, sr: SubRanges) -> np.ndarray:
+        """Materialize the pruned candidate row set, int32 [U, 3].
+
+        One gather per span group; span disjointness within an index
+        guarantees no duplicates per group, and a cross-group
+        ``np.unique`` dedups the (rare) multi-shape case where two
+        indexes surface the same physical triple -- the selector
+        epilogues require each candidate triple to appear exactly once.
+        Row order is arbitrary by contract (the selectors' stream-order
+        epilogue re-sorts kept rows), which is what lets the pruned and
+        full-range paths stay byte-identical.
+
+        Gathered row sets register as pages of the owning pattern's
+        range-memo entry (keyed by :meth:`SubRanges.page_key`), so a
+        repeated pruned read never re-gathers and is evicted coherently
+        with the pattern's other fragments.
+        """
+        key = (sr.pattern, None, sr.page_key())
+        got = self._ranges.http_get(key)
+        if got is not None:
+            return got
+        blocks = []
+        for g in sr.groups:
+            if g.spans.shape[0] == 0:
+                continue
+            perm = self._indexes[g.index].perm
+            idxs = np.concatenate([perm[lo:hi] for lo, hi in g.spans])
+            blocks.append(self.triples[idxs])
+        if not blocks:
+            rows = np.empty((0, 3), dtype=np.int32)
+        else:
+            rows = np.concatenate(blocks, axis=0)
+            if len(sr.groups) > 1:
+                rows = np.unique(rows, axis=0)
+        self._ranges.http_put(key, rows)
+        return rows
 
     def cardinality(self, tp: TriplePattern) -> int:
         """Cardinality estimate ``cnt`` (Definition 2).
@@ -313,9 +513,13 @@ class TripleStore:
                 return est
         # Fall back to an exact scan count (cheap at our scales; a real
         # HDT backend would return `est` here -- Definition 2 allows it).
-        return int(self.match(tp).shape[0])
+        # Probe path: reuse a memoized range (counted as a hit) but
+        # never insert/charge one -- cardinality estimates must not
+        # churn the streaming memo.
+        return int(self.match(tp, memoize=False).shape[0])
 
-    def match(self, tp: TriplePattern) -> np.ndarray:
+    def match(self, tp: TriplePattern,
+              memoize: bool = True) -> np.ndarray:
         """All matching triples for ``tp``, int32 [M, 3], sorted order
         of the chosen index (deterministic for paging).
 
@@ -324,7 +528,7 @@ class TripleStore:
         scan previously double-paid the gather) and the reuse is counted
         in ``range_memo_hits``.
         """
-        cand = self.candidate_range(tp).triples
+        cand = self.candidate_range(tp, memoize=memoize).triples
         if cand.shape[0] == 0:
             return cand
         mask = np.ones(cand.shape[0], dtype=bool)

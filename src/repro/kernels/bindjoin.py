@@ -33,6 +33,14 @@ mapping is static (tiles_per_group = M // BM), so outputs land in
 per-group (BT, 1) columns of (T, G) result arrays, and the per-row match
 *count* output gives each request its Definition-2 ``cnt`` estimate from
 the same launch.
+
+The kernel is agnostic to what the candidate block contains and in what
+order: since the Omega-restricted pruning PR (docs/pruning.md) callers
+stream the merged union of per-binding sub-ranges -- a subset of the
+prefix range in mixed physical order -- whenever the attached mappings
+allow it. Everything here only requires that each candidate triple
+appear exactly once (the hosts' span-merge/dedup contract); the
+first-match/ordering semantics are restored by the host epilogue.
 """
 from __future__ import annotations
 

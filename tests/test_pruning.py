@@ -1,0 +1,462 @@
+"""Omega-restricted candidate pruning (docs/pruning.md).
+
+Covers the tentpole contracts:
+
+* sub-range derivation: per-binding ``(lo, hi)`` bounds, the
+  union-merge rule (disjoint, sorted, covering), and coverage of every
+  instantiated pattern's matches;
+* byte parity of pruned vs. unpruned selection on the kernel and
+  sharded backends -- property-based over patterns x Omega shapes
+  (hypothesis where available, seed-parametrized sweeps always),
+  including repeated-variable patterns, empty Omega, Omega values
+  absent from the store, and mixed-shape mappings;
+* the sharded window-skip path: launches == planned pages, pages a
+  strict subset when sub-ranges allow skipping;
+* the small-work fast path: numpy block evaluation below the row
+  threshold, decision recorded in ``LaunchRecord`` and charged to
+  ``Counters.fast_path_selects`` -- never to the launch budget;
+* honest range-memo accounting: probe paths neither charge misses nor
+  churn entries, and a warm workload's per-server hit rate clears 50%
+  even on a store polluted by another consumer.
+"""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import (BrTPFServer, Request, TriplePattern, TripleStore,
+                        UNBOUND, brtpf_select_with_cnt, encode_var)
+from repro.core.federation import FederatedStore, ShardedSelector
+from repro.core.kernel_selectors import KernelSelector
+from repro.core.selectors import instantiate_patterns
+from repro.core.store import merge_spans
+
+V = encode_var
+
+pytestmark = pytest.mark.tier1
+
+
+def make_store(seed=0, n=500, terms=15):
+    rng = np.random.default_rng(seed)
+    return TripleStore(np.unique(
+        rng.integers(0, terms, size=(n, 3)).astype(np.int32), axis=0))
+
+
+def make_fed(store):
+    return FederatedStore.build(
+        store.triples, Mesh(np.array(jax.devices()[:1]), ("data",)))
+
+
+def rand_omega(rng, m, v=2, terms=15, unbound_frac=0.3):
+    om = rng.integers(0, terms, size=(m, v)).astype(np.int32)
+    om[rng.random((m, v)) < unbound_frac] = UNBOUND
+    return om
+
+
+def rand_pattern(rng, terms=15, max_vars=3):
+    comps = []
+    for _ in range(3):
+        if rng.random() < 0.5:
+            comps.append(V(int(rng.integers(0, max_vars))))
+        else:
+            comps.append(int(rng.integers(0, terms)))
+    return TriplePattern(*comps)
+
+
+# ---------------------------------------------------------------------------
+# Sub-range derivation
+# ---------------------------------------------------------------------------
+
+
+class TestSubranges:
+    def test_merge_spans_rule(self):
+        # overlap, adjacency, and gaps; empties dropped; sorted output
+        bounds = np.array([[5, 9], [0, 3], [8, 12], [3, 4], [20, 20],
+                           [15, 16]], np.int64)
+        got = merge_spans(bounds)
+        np.testing.assert_array_equal(
+            got, np.array([[0, 4], [5, 12], [15, 16]], np.int64))
+        assert merge_spans(np.empty((0, 2), np.int64)).shape == (0, 2)
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+    def test_union_covers_every_instantiation(self, seed):
+        """Every triple matching any instantiated pattern must lie in
+        the gathered union, and the union must hold no duplicates --
+        the two properties the pruned-path parity argument needs."""
+        rng = np.random.default_rng(seed)
+        store = make_store(seed)
+        for _ in range(6):
+            tp = rand_pattern(rng)
+            om = rand_omega(rng, int(rng.integers(1, 8)),
+                            v=3, unbound_frac=0.4)
+            insts = instantiate_patterns(tp, om)
+            sr = store.subranges(tp, insts=insts)
+            if sr is None:
+                continue
+            rows = store.gather_subranges(sr)
+            got = set(map(tuple, rows.tolist()))
+            assert len(got) == rows.shape[0]        # no duplicates
+            for p in insts:
+                for t in store.match(p):
+                    assert tuple(t.tolist()) in got
+            assert sr.rows >= rows.shape[0]         # pre-dedup bound
+
+    def test_empty_and_base_shaped_omega_prune_nothing(self):
+        store = make_store(1)
+        tp = TriplePattern(V(0), 3, V(1))
+        assert store.subranges(tp, omega=None) is None or \
+            store.subranges(tp, omega=None).rows >= \
+            len(store.candidate_range(tp))
+        # all-UNBOUND mappings instantiate the base pattern itself: the
+        # sub-range union degenerates to the full prefix range, so the
+        # selectors' ``rows < full`` check keeps the unpruned path
+        om = np.full((3, 2), UNBOUND, np.int32)
+        sr = store.subranges(tp, omega=om)
+        assert sr is not None
+        assert sr.rows >= len(store.candidate_range(tp))
+
+    def test_wildcard_base_fully_unbound_instantiation(self):
+        store = make_store(2)
+        tp = TriplePattern(V(0), V(1), V(2))
+        om = np.array([[UNBOUND, UNBOUND, UNBOUND]], np.int32)
+        assert store.subranges(tp, omega=om) is None
+
+    def test_absent_values_yield_empty_spans(self):
+        store = make_store(3)
+        tp = TriplePattern(V(0), 3, V(1))
+        om = np.array([[9999, UNBOUND]], np.int32)
+        sr = store.subranges(tp, omega=om)
+        assert sr is not None and sr.rows == 0
+        assert store.gather_subranges(sr).shape == (0, 3)
+
+    def test_pruned_gather_memoizes_in_page_layer(self):
+        """Pruned selections memoize independently of full-range reads:
+        a repeated gather of the same span union is a page hit, and the
+        pattern's full-range memo entry is untouched by it."""
+        store = make_store(4)
+        tp = TriplePattern(V(0), 3, V(1))
+        om = np.array([[5, UNBOUND], [7, UNBOUND]], np.int32)
+        sr = store.subranges(tp, omega=om)
+        assert sr is not None
+        h0 = store._ranges.page_hits
+        a = store.gather_subranges(sr)
+        b = store.gather_subranges(sr)
+        np.testing.assert_array_equal(a, b)
+        assert store._ranges.page_hits == h0 + 1
+
+
+# ---------------------------------------------------------------------------
+# Pruned selection parity (kernel + sharded backends)
+# ---------------------------------------------------------------------------
+
+
+def assert_kernel_identical(store, tp, omega, **kw):
+    sel = KernelSelector(store, **kw)
+    got, gcnt = sel.select_with_cnt(tp, omega)
+    want, wcnt = brtpf_select_with_cnt(store, tp, omega)
+    assert got.dtype == want.dtype and got.shape == want.shape
+    np.testing.assert_array_equal(got, want)
+    assert gcnt == wcnt
+    return sel
+
+
+class TestPrunedKernelParity:
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3, 4, 5])
+    def test_random_patterns_and_omegas(self, seed):
+        """Seed-parametrized property sweep: parity for random
+        pattern x Omega shapes, pruning decided organically."""
+        rng = np.random.default_rng(seed)
+        store = make_store(seed, n=600)
+        for _ in range(4):
+            tp = rand_pattern(rng)
+            m = int(rng.integers(0, 8))
+            om = None if m == 0 else rand_omega(rng, m, v=3,
+                                               unbound_frac=0.4)
+            assert_kernel_identical(store, tp, om)
+
+    def test_uniform_bound_omega_prunes_and_matches(self):
+        """Fully-uniform mappings force the pruned path; the launch
+        record documents it."""
+        store = make_store(6, n=700)
+        tp = TriplePattern(V(0), 3, V(1))
+        om = np.array([[5, UNBOUND], [7, UNBOUND], [2, UNBOUND]],
+                      np.int32)
+        sel = assert_kernel_identical(store, tp, om)
+        assert sel.launches[-1].pruned
+
+    def test_repeated_variable_patterns(self):
+        rng = np.random.default_rng(7)
+        store = make_store(7)
+        assert_kernel_identical(store, TriplePattern(V(0), 2, V(0)),
+                                rand_omega(rng, 5, v=1))
+        assert_kernel_identical(store, TriplePattern(V(0), V(0), V(1)),
+                                rand_omega(rng, 5))
+        assert_kernel_identical(store, TriplePattern(V(0), V(0), V(0)),
+                                rand_omega(rng, 5, v=1))
+
+    def test_omega_values_absent_from_store(self):
+        store = make_store(8)
+        tp = TriplePattern(V(0), 3, V(1))
+        om = np.array([[9999, UNBOUND], [8888, UNBOUND]], np.int32)
+        sel = assert_kernel_identical(store, tp, om)
+        assert sel.launches == []     # nothing to stream, no launch
+
+    def test_mixed_shape_omega(self):
+        """Mappings binding different variable subsets (multi-shape
+        union, cross-index dedup)."""
+        store = make_store(9, n=700)
+        tp = TriplePattern(V(0), 3, V(1))
+        om = np.array([[5, UNBOUND], [UNBOUND, 4], [2, 9]], np.int32)
+        assert_kernel_identical(store, tp, om)
+
+    def test_grouped_batch_mixed_tpf_and_pruned(self):
+        rng = np.random.default_rng(10)
+        store = make_store(10, n=700)
+        tp = TriplePattern(V(0), 3, V(1))
+        omegas = [None,
+                  np.array([[5, UNBOUND], [2, UNBOUND]], np.int32),
+                  rand_omega(rng, 6)]
+        sel = KernelSelector(store)
+        results = sel.select_same_pattern(tp, omegas)
+        assert len(sel.launches) == 1      # still one grouped launch
+        for (data, cnt), om in zip(results, omegas):
+            want, wcnt = brtpf_select_with_cnt(store, tp, om)
+            np.testing.assert_array_equal(data, want)
+            assert cnt == wcnt
+
+
+class TestShardedWindowSkip:
+    def test_skip_plan_and_parity(self):
+        store = make_store(11, n=900, terms=30)
+        fed = make_fed(store)
+        tp = TriplePattern(V(0), V(1), V(2))   # base range = whole shard
+        om = np.array([[5, 3, UNBOUND], [9, 2, UNBOUND]], np.int32)
+        insts = instantiate_patterns(tp, om)
+        plan = fed.plan_windows(tp, insts, 64)
+        assert plan.pruned
+        assert len(plan.pages) < plan.pages_total    # windows skipped
+        sel = ShardedSelector(fed, window=64)
+        got, gcnt = sel.select_with_cnt(tp, om)
+        want, wcnt = brtpf_select_with_cnt(store, tp, om)
+        np.testing.assert_array_equal(got, want)
+        assert gcnt == wcnt
+        assert len(sel.launches) == len(plan.pages)
+        assert all(rec.pruned for rec in sel.launches)
+
+    def test_pos_osp_mirrors_bound_ranges(self):
+        """Unbound-subject patterns binary-search the POS/OSP mirror
+        instead of scanning whole shards."""
+        store = make_store(12, n=900, terms=30)
+        fed = make_fed(store)
+        whole_shard_pages = -(-fed.shard_n // 64)
+        for tp in [TriplePattern(V(0), 3, V(1)),     # POS
+                   TriplePattern(V(0), V(1), 7)]:    # OSP
+            sel = ShardedSelector(fed, window=64)
+            got, gcnt = sel.select_with_cnt(tp, None)
+            want, wcnt = brtpf_select_with_cnt(store, tp, None)
+            np.testing.assert_array_equal(got, want)
+            assert gcnt == wcnt
+            expect = -(-len(store.candidate_range(tp)) // 64)
+            assert len(sel.launches) == expect
+            assert len(sel.launches) < whole_shard_pages
+
+    def test_hand_computed_page_counts(self):
+        """Launch counts against hand-derived constants (independent of
+        plan_windows, so a planning regression cannot re-derive its own
+        expectation): a 16-triple single-shard store, window 4.
+
+        Triples (i, 1, i) for i in 0..15 sort to SPO positions 0..15,
+        so the shard has exactly 4 window pages. A TPF request for
+        (?s, 1, ?o) has POS range 16 -> all 4 pages. Omega binding
+        s in {0, 15} instantiates (0, 1, ?o) and (15, 1, ?o) -- SPO
+        positions 0 and 15, i.e. pages 0 and 3 only.
+        """
+        triples = np.array([[i, 1, i] for i in range(16)], np.int32)
+        store = TripleStore(triples)
+        fed = make_fed(store)
+        assert fed.shard_n == 16
+        tp = TriplePattern(V(0), 1, V(1))
+        sel = ShardedSelector(fed, window=4)
+        got, gcnt = sel.select_with_cnt(tp, None)
+        want, wcnt = brtpf_select_with_cnt(store, tp, None)
+        np.testing.assert_array_equal(got, want)
+        assert gcnt == wcnt
+        assert len(sel.launches) == 4          # ceil(16 / 4), by hand
+        om = np.array([[0, UNBOUND], [15, UNBOUND]], np.int32)
+        sel = ShardedSelector(fed, window=4)
+        got, gcnt = sel.select_with_cnt(tp, om)
+        want, wcnt = brtpf_select_with_cnt(store, tp, om)
+        np.testing.assert_array_equal(got, want)
+        assert gcnt == wcnt
+        assert len(sel.launches) == 2          # pages {0, 3}, by hand
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_random_parity_through_plans(self, seed):
+        rng = np.random.default_rng(seed)
+        store = make_store(seed + 20, n=700, terms=20)
+        fed = make_fed(store)
+        for _ in range(3):
+            tp = rand_pattern(rng, terms=20)
+            m = int(rng.integers(0, 6))
+            om = None if m == 0 else rand_omega(rng, m, v=3, terms=20,
+                                               unbound_frac=0.4)
+            sel = ShardedSelector(fed, window=64)
+            got, gcnt = sel.select_with_cnt(tp, om)
+            want, wcnt = brtpf_select_with_cnt(store, tp, om)
+            np.testing.assert_array_equal(got, want)
+            assert gcnt == wcnt
+
+
+# ---------------------------------------------------------------------------
+# Small-work fast path
+# ---------------------------------------------------------------------------
+
+
+class TestFastPath:
+    def test_kernel_fast_path_records_decision(self):
+        store = make_store(13, n=700)
+        tp = TriplePattern(V(0), 3, V(1))
+        om = np.array([[5, UNBOUND], [7, UNBOUND]], np.int32)
+        sel = assert_kernel_identical(store, tp, om,
+                                      fast_path_rows=10**9)
+        rec = sel.launches[-1]
+        assert rec.fast_path and rec.pat_slots == 0
+        assert rec.cand_streamed <= 10**9
+
+    def test_threshold_zero_disables(self):
+        store = make_store(13, n=700)
+        tp = TriplePattern(V(0), 3, V(1))
+        sel = assert_kernel_identical(store, tp, None)
+        assert not sel.launches[-1].fast_path
+
+    @pytest.mark.parametrize("backend", ["kernel", "sharded"])
+    def test_server_charges_fast_path_not_launch_budget(self, backend):
+        store = make_store(14, n=700)
+        server = BrTPFServer(store, selector_backend=backend,
+                             shard_window=128, fast_path_rows=10**9)
+        oracle = BrTPFServer(store, selector_backend="numpy")
+        rng = np.random.default_rng(14)
+        reqs = [Request(TriplePattern(V(0), 3, V(1)),
+                        rand_omega(rng, 4), 0),
+                Request(TriplePattern(V(0), 5, V(1)), None, 0)]
+        for r in reqs:
+            f_k = server.handle(r)
+            f_np = oracle.handle(r)
+            np.testing.assert_array_equal(f_k.data, f_np.data)
+            assert f_k.cnt == f_np.cnt
+        assert server.counters.kernel_launches == 0
+        assert server.counters.kernel_cand_streamed == 0
+        assert server.counters.fast_path_selects == len(reqs)
+
+
+# ---------------------------------------------------------------------------
+# Honest range-memo accounting
+# ---------------------------------------------------------------------------
+
+
+class TestRangeMemoAccounting:
+    def test_probe_paths_charge_nothing(self):
+        """cardinality probes neither charge misses nor create memo
+        entries -- and still reuse (and count) a hit when one exists."""
+        store = make_store(15, n=400)
+        tp = TriplePattern(V(0), 5, V(0))    # repeated var -> scan fallback
+        m0, h0 = store.range_memo_misses, store.range_memo_hits
+        store.cardinality(tp)
+        assert store.range_memo_misses == m0      # no miss charged
+        assert tp.as_tuple() not in store._range_memo   # no entry made
+        store.match(tp)                           # streaming read: memoizes
+        m1, h1 = store.range_memo_misses, store.range_memo_hits
+        store.cardinality(tp)
+        assert store.range_memo_misses == m1
+        assert store.range_memo_hits > h1         # probe reused the entry
+
+    def test_warm_workload_hit_rate_over_50pct(self):
+        """Per-server delta accounting: a warm kernel-backend workload
+        reports > 50% range-memo hits even when the shared store was
+        polluted by another consumer's traffic beforehand."""
+        store = make_store(16, n=900, terms=40)
+        # pollute: another consumer churns the range memo (the
+        # benchmarks' shared dataset store sees exactly this)
+        for s in range(200):
+            store.match(TriplePattern(s % 40, V(0), V(1)))
+        server = BrTPFServer(store, selector_backend="kernel")
+        rng = np.random.default_rng(16)
+        pats = [TriplePattern(V(0), p, V(1)) for p in (3, 5, 7)]
+        for _pass in range(2):
+            for tp in pats:
+                for _ in range(3):
+                    server.handle(Request(tp, rand_omega(rng, 4,
+                                                         terms=40), 0))
+        snap = server.metrics_snapshot()
+        assert snap["range_memo"]["hit_rate"] > 0.5
+        # the polluted global counters would fail this without deltas
+        global_rate = store.range_memo_hits / max(
+            store.range_memo_hits + store.range_memo_misses, 1)
+        assert global_rate < snap["range_memo"]["hit_rate"]
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property suite (runs where hypothesis is installed)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # optional dep: the sweeps above still run
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+    MAX_TERMS = 9
+
+    @st.composite
+    def graphs(draw, max_triples=60):
+        n = draw(st.integers(0, max_triples))
+        rows = draw(st.lists(
+            st.tuples(*[st.integers(0, MAX_TERMS - 1)] * 3),
+            min_size=n, max_size=n))
+        return np.asarray(rows, dtype=np.int32).reshape(-1, 3)
+
+    @st.composite
+    def patterns(draw, max_vars=3):
+        comps = []
+        for _ in range(3):
+            if draw(st.booleans()):
+                comps.append(V(draw(st.integers(0, max_vars - 1))))
+            else:
+                comps.append(draw(st.integers(0, MAX_TERMS - 1)))
+        return TriplePattern(*comps)
+
+    @st.composite
+    def omegas(draw, num_vars=3, max_rows=6):
+        n = draw(st.integers(0, max_rows))
+        rows = draw(st.lists(
+            st.tuples(*[st.integers(-1, MAX_TERMS + 2)] * num_vars),
+            min_size=n, max_size=n))
+        om = np.asarray(rows, dtype=np.int32).reshape(-1, num_vars)
+        om[om < 0] = UNBOUND
+        return om
+
+    class TestHypothesisPrunedParity:
+        @settings(max_examples=25, deadline=None)
+        @given(g=graphs(), tp=patterns(), om=omegas())
+        def test_kernel_pruned_parity(self, g, tp, om):
+            store = TripleStore(g)
+            omega = om if om.shape[0] else None
+            assert_kernel_identical(store, tp, omega)
+
+        @settings(max_examples=25, deadline=None)
+        @given(g=graphs(), tp=patterns(), om=omegas())
+        def test_subrange_union_coverage(self, g, tp, om):
+            store = TripleStore(g)
+            insts = instantiate_patterns(tp,
+                                         om if om.shape[0] else None)
+            sr = store.subranges(tp, insts=insts)
+            if sr is None:
+                return
+            rows = store.gather_subranges(sr)
+            got = set(map(tuple, rows.tolist()))
+            assert len(got) == rows.shape[0]
+            for p in insts:
+                for t in store.match(p):
+                    assert tuple(t.tolist()) in got

@@ -108,10 +108,15 @@ class TestShardedSelectorParity:
                   np.array([[5, UNBOUND]], np.int32)]
         sel = ShardedSelector(fed, window=128)
         results = sel.select_same_pattern(tp, omegas)
-        # launches = window pages of the shard-local range (the subject
-        # is unbound, so the SPO range is the whole shard), NOT
-        # pages * groups
-        assert len(sel.launches) == -(-fed.shard_n // 128)
+        # launches = window pages of the shard-local range under the
+        # plan's chosen order (the POS mirror: an unbound subject no
+        # longer forces a whole-shard SPO scan), NOT pages * groups
+        all_insts = [p for om in omegas
+                     for p in ([tp] if om is None else
+                               [tp.instantiate(r) for r in om])]
+        plan = fed.plan_windows(tp, all_insts, 128)
+        assert len(sel.launches) == len(plan.pages)
+        assert len(plan.pages) < -(-fed.shard_n // 128)  # mirror win
         for rec in sel.launches:
             assert rec.groups == len(omegas)
             assert rec.cand_streamed == 128     # bounded by the window
@@ -198,12 +203,28 @@ class TestServerShardedBackendParity:
             assert f_w.cnt == f_s.cnt == f_g.cnt
             assert f_w.has_next == f_g.has_next
 
-        # the three tp_a selections shared one grouped launch sequence;
-        # solo pays it three times (both patterns have an unbound
-        # subject -> the shard-local SPO range is the whole shard)
-        pages = -(-batched.federated.shard_n // 128)
-        assert solo.counters.kernel_launches == 4 * pages
-        assert batched.counters.kernel_launches == 2 * pages
+        # the three tp_a selections shared one grouped launch sequence
+        # (the plan's window pages for the union of their
+        # instantiations); solo pays per request. Both patterns have an
+        # unbound subject, but the POS mirror bounds every plan by the
+        # p-bound range -- far below the pre-mirror whole-shard scan.
+        from repro.core.selectors import instantiate_patterns
+        fed = batched.federated
+
+        def pages_for(tp, reqs_of_tp):
+            insts = [p for r in reqs_of_tp
+                     for p in instantiate_patterns(tp, r.omega)]
+            return len(fed.plan_windows(tp, insts, 128).pages)
+
+        solo_expect = sum(pages_for(r.pattern, [r]) for r in reqs)
+        batched_expect = (pages_for(tp_a, [reqs[0], reqs[1], reqs[3]])
+                          + pages_for(tp_b, [reqs[2]]))
+        assert solo.counters.kernel_launches == solo_expect
+        assert batched.counters.kernel_launches == batched_expect
+        assert batched.counters.kernel_launches \
+            <= solo.counters.kernel_launches
+        whole_shard_pages = -(-fed.shard_n // 128)
+        assert solo.counters.kernel_launches < 4 * whole_shard_pages
         assert batched.counters.kernel_batched_requests == 3
         # identical transfer/request accounting either way
         assert (batched.counters.num_requests
