@@ -134,10 +134,13 @@ def run_selector_backends(full: bool = False) -> Dict:
         ]
         sel = KernelSelector(store)
 
-        dt_np = _time(lambda: brtpf_select_with_cnt(store, tp, omega))
-        dt_k = _time(lambda: sel.select_with_cnt(tp, omega))
+        dt_np = _time(lambda tp=tp, omega=omega:
+                      brtpf_select_with_cnt(store, tp, omega))
+        dt_k = _time(lambda tp=tp, omega=omega:
+                     sel.select_with_cnt(tp, omega))
         sel.launches.clear()
-        dt_b = _time(lambda: sel.select_same_pattern(tp, omegas))
+        dt_b = _time(lambda tp=tp, omegas=omegas:
+                     sel.select_same_pattern(tp, omegas))
         rec = sel.launches[-1] if sel.launches else None
         out[name] = (dt_np, dt_k, dt_b, rec)
         emit(f"kernels/selector_{name}_numpy", dt_np * 1e6,
@@ -159,7 +162,8 @@ def run_selector_backends(full: bool = False) -> Dict:
         # sharded windowed backend: same selection, per-shard window
         # launches -- per-launch streaming is the window, not the range
         ssel = ShardedSelector(fed, window=2048)
-        dt_s = _time(lambda: ssel.select_with_cnt(tp, omega), reps=2)
+        dt_s = _time(lambda tp=tp, omega=omega:
+                     ssel.select_with_cnt(tp, omega), reps=2)
         ssel.launches.clear()
         ssel.select_with_cnt(tp, omega)  # launch count of ONE select
         n_launch = len(ssel.launches)

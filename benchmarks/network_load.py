@@ -52,7 +52,8 @@ def run(full: bool = False) -> Dict:
     for mpr, row in out["brtpf"].items():
         better_req = worse_req = better_recv = worse_recv = 0
         for (tq, tr, _), (bq, br_, _) in zip(tpf["per_query"],
-                                             row["per_query"]):
+                                             row["per_query"],
+                                             strict=True):
             better_req += bq < tq
             worse_req += bq > tq
             better_recv += br_ < tr
@@ -66,8 +67,9 @@ def run(full: bool = False) -> Dict:
     mpr30 = out["brtpf"].get(30)
     if mpr30:
         buckets = {}
-        for (tq, tr, _), (bq, br_, _) in zip(tpf["per_query"],
-                                             mpr30["per_query"]):
+        for (tq, _tr, _), (bq, _br, _) in zip(tpf["per_query"],
+                                              mpr30["per_query"],
+                                              strict=True):
             diff = tq - bq
             mag = 0
             while abs(diff) >= 10 ** (mag + 1):

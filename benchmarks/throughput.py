@@ -142,7 +142,7 @@ def _run_concurrent(backend: str, n: int, wl, request_budget: int,
         try:
             return await asyncio.gather(
                 *[c.run_workload(w)
-                  for c, w in zip(clients, per_client)])
+                  for c, w in zip(clients, per_client, strict=True)])
         finally:
             await front.aclose()
 

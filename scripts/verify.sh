@@ -9,6 +9,10 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# repro-lint first (docs/analysis.md): the static pass is cheap and
+# catches invariant violations before the suite spends minutes on jax.
+python -m repro.analysis
+
 if [[ "${1:-}" == "--fast" ]]; then
     exec python -m pytest -x -q -m tier1
 fi

@@ -1,0 +1,48 @@
+"""repro-lint: repo-specific static analysis for the brTPF codebase.
+
+Five PRs of growth established correctness invariants that, until this
+package, existed only as prose in docs/ and as individual parity tests:
+byte-identical selector backends, coherent cache invalidation through
+the unified :class:`~repro.core.fragments.FragmentStore`, honest
+``Counters`` accounting for every launch disposition, and launch-budget
+gates keyed by metric names. The paper's whole argument rests on
+measured request/transfer counts, so a new code path that silently
+violates one of these invariants corrupts the evaluation itself -- this
+analyzer fails CI the moment that happens instead of waiting for a
+parity test to cover the new path.
+
+Four rule groups over ``ast`` walks plus a lightweight intra-package
+call graph (docs/analysis.md describes each rule and the invariant it
+protects):
+
+* **kernel-launch safety** (KL...): every ``pl.pallas_call`` site has
+  static block shapes, power-of-two capacities and no traced Python
+  scalar captures;
+* **cache coherence** (CC...): mutations of ``TripleStore``/pattern
+  data must reach a ``FragmentStore`` invalidation in the call graph,
+  and nothing outside ``fragments.py`` touches the store's internals;
+* **accounting integrity** (AC...): every ``LaunchRecord`` lands on a
+  ``launches`` accounting surface, every disposition path increments
+  exactly one launch counter, and every ``benchmarks/budgets.json`` key
+  resolves to a metric ``core/metrics.py`` emits;
+* **async safety** (AS...): no blocking calls inside ``async def``
+  bodies.
+
+Run it: ``python -m repro.analysis`` (text) or ``--format json``
+(machine-readable); exits nonzero on any error-severity finding.
+"""
+from .engine import AnalysisContext, Module, load_context, run_analysis
+from .findings import SEVERITY_ERROR, SEVERITY_WARNING, Finding
+from .rules import ALL_RULES, Rule
+
+__all__ = [
+    "ALL_RULES",
+    "AnalysisContext",
+    "Finding",
+    "Module",
+    "Rule",
+    "SEVERITY_ERROR",
+    "SEVERITY_WARNING",
+    "load_context",
+    "run_analysis",
+]

@@ -204,7 +204,7 @@ class AsyncBrTPFServer:
                     if not fut.done():
                         fut.set_exception(exc)
                 return
-            for (_, fut), frag in zip(batch, frags):
+            for (_, fut), frag in zip(batch, frags, strict=True):
                 if not fut.done():
                     fut.set_result(frag)
 

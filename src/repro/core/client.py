@@ -415,7 +415,8 @@ class AsyncBrTPFClient:
             datas = await self._gather(
                 [self._fetch_all_pages(tp, chunk) for chunk in chunks])
             next_rounds = [joined
-                           for chunk, data in zip(chunks, datas)
+                           for chunk, data in zip(chunks, datas,
+                                                  strict=True)
                            for joined in [_bind_join(tp, data, chunk, nv)]
                            if joined.shape[0]]
             solutions = (np.concatenate(next_rounds, axis=0)

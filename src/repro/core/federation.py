@@ -273,7 +273,7 @@ class FederatedStore:
             range_rows = int((ends - starts).sum())
             pages_total = int(max(
                 (-(-int(e - s) // window)
-                 for s, e in zip(starts, ends)), default=0))
+                 for s, e in zip(starts, ends, strict=True)), default=0))
             return WindowPlan(order=order_name, lo_key=lo, hi_key=hi,
                               pages=list(range(pages_total)),
                               range_rows=range_rows,
@@ -647,7 +647,7 @@ class ShardedSelector:
             fresh = self._launch_groups(tp, live_omegas,
                                         [patterns[i] for i in live])
             record_fragments(self.fragments, tp, live_omegas, fresh)
-            for i, res in zip(live, fresh):
+            for i, res in zip(live, fresh, strict=True):
                 results[i] = res
         return results
 
@@ -726,7 +726,6 @@ class ShardedSelector:
                             firsts[gi].append(first[s, gi, :n])
 
         out: List[Tuple[np.ndarray, int]] = []
-        empty = np.empty((0, 3), dtype=np.int32)
         for gi in range(g):
             if not kept[gi]:
                 out.append((empty, int(cnt_total[gi])))

@@ -238,7 +238,7 @@ def record_fragments(
     request -- through any layer -- skips its launch."""
     if fragments is None:
         return
-    for om, payload in zip(omegas, results):
+    for om, payload in zip(omegas, results, strict=True):
         fragments.put_data(fragment_key(tp.as_tuple(), om), payload)
 
 
@@ -353,7 +353,7 @@ class KernelSelector:
             fresh = self._launch_groups(tp, live_omegas,
                                         [patterns[i] for i in live])
             record_fragments(self.fragments, tp, live_omegas, fresh)
-            for i, res in zip(live, fresh):
+            for i, res in zip(live, fresh, strict=True):
                 results[i] = res
         return results
 

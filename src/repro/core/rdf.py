@@ -113,7 +113,7 @@ class TriplePattern:
     def matches_triple(self, t: Sequence[int]) -> bool:
         """Exact per-definition match check (used by test oracles)."""
         binding: Dict[int, int] = {}
-        for c, x in zip(self.as_tuple(), t):
+        for c, x in zip(self.as_tuple(), t, strict=True):
             if is_var(c):
                 v = decode_var(c)
                 if v in binding and binding[v] != x:
@@ -151,7 +151,7 @@ def mapping_from_triple(tp: TriplePattern, triple: Sequence[int],
                         num_vars: int) -> Optional[np.ndarray]:
     """The mapping mu with mu(tp) == triple, or None if no match."""
     mu = np.full((num_vars,), UNBOUND, dtype=np.int32)
-    for c, x in zip(tp.as_tuple(), triple):
+    for c, x in zip(tp.as_tuple(), triple, strict=True):
         if is_var(c):
             v = decode_var(c)
             if mu[v] != UNBOUND and mu[v] != x:

@@ -380,7 +380,7 @@ class BrTPFServer:
             self._charge_launches(self._selector.launches[n0:],
                                   batched_requests=len(member_reqs))
             for req, patterns, (data, cnt) in zip(member_reqs, insts,
-                                                  results):
+                                                  results, strict=True):
                 self.counters.server_lookups += len(patterns)
                 memo_key = req.key()[:2]
                 self._memoize(memo_key, data, cnt)

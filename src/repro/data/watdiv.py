@@ -18,7 +18,7 @@ driven by intermediate-result sizes, which the zipfian skew preserves).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -58,7 +58,10 @@ def _zipf_choice(rng, n, size, a):
     return np.minimum(ranks - 1, n - 1).astype(np.int64)
 
 
-def generate(scale: WatDivScale = WatDivScale(), seed: int = 0) -> WatDivData:
+def generate(scale: Optional[WatDivScale] = None,
+             seed: int = 0) -> WatDivData:
+    if scale is None:
+        scale = WatDivScale()
     rng = np.random.default_rng(seed)
     d = TermDictionary()
     rows: List[Tuple[int, int, int]] = []

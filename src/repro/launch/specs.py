@@ -30,7 +30,7 @@ def _sds(shape, dtype, mesh, rules, axes) -> jax.ShapeDtypeStruct:
     spec = spec_for(axes, rules)
     parts = list(spec) + [None] * (len(shape) - len(spec))
     fixed = []
-    for dim, part in zip(shape, parts):
+    for dim, part in zip(shape, parts, strict=True):
         if part is not None:
             names = (part,) if isinstance(part, str) else tuple(part)
             size = 1

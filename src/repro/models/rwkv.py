@@ -168,10 +168,10 @@ def _mix_inputs(params, x, xx):
 def _decay(params, w_in):
     lora = jnp.einsum("...d,dl->...l", jnp.tanh(w_in), params["w_lora_a"])
     lora = jnp.einsum("...l,ld->...d", lora, params["w_lora_b"])
-    logw = -jnp.exp(
+    return -jnp.exp(
         jnp.clip(params["w0"].astype(jnp.float32)
-                 + lora.astype(jnp.float32), -8.0, 4.0))
-    return logw  # (..., d), strictly negative
+                 + lora.astype(jnp.float32), -8.0, 4.0)
+    )  # (..., d), strictly negative
 
 
 def _group_norm(x, scale, eps):

@@ -220,7 +220,7 @@ def init_stack(key, cfg: ArchConfig, dtype):
     pos_kinds, pos_moe, num_periods = _period_info(cfg)
     params: Params = {}
     axes: Dict = {}
-    for pos, (kind, is_moe) in enumerate(zip(pos_kinds, pos_moe)):
+    for pos, (kind, is_moe) in enumerate(zip(pos_kinds, pos_moe, strict=True)):
         keys = jax.random.split(jax.random.fold_in(key, pos), num_periods)
         init_one = functools.partial(init_block, cfg=cfg, kind=kind,
                                      is_moe=is_moe, dtype=dtype)
@@ -249,7 +249,7 @@ def apply_stack(params: Params, x: jnp.ndarray, cfg: ArchConfig,
 
     def period_fn(x, period_params):
         aux_total = jnp.zeros((), jnp.float32)
-        for pos, (kind, is_moe) in enumerate(zip(pos_kinds, pos_moe)):
+        for pos, (kind, is_moe) in enumerate(zip(pos_kinds, pos_moe, strict=True)):
             x, aux = apply_block(period_params[f"pos{pos}"], x, cfg,
                                  kind, is_moe, positions)
             aux_total = aux_total + aux
@@ -291,7 +291,7 @@ def apply_stack_prefill(params: Params, x: jnp.ndarray, cfg: ArchConfig,
 
     def body(x, period_params):
         caches = {}
-        for pos, (kind, is_moe) in enumerate(zip(pos_kinds, pos_moe)):
+        for pos, (kind, is_moe) in enumerate(zip(pos_kinds, pos_moe, strict=True)):
             x, c = apply_block_prefill(period_params[f"pos{pos}"], x,
                                        cfg, kind, is_moe, positions,
                                        max_seq)
@@ -310,7 +310,7 @@ def apply_stack_decode(params: Params, x: jnp.ndarray, cfg: ArchConfig,
     def body(x, inp):
         period_params, period_cache = inp
         new_cache = {}
-        for pos, (kind, is_moe) in enumerate(zip(pos_kinds, pos_moe)):
+        for pos, (kind, is_moe) in enumerate(zip(pos_kinds, pos_moe, strict=True)):
             x, nc = apply_block_decode(
                 period_params[f"pos{pos}"], x, cfg, kind, is_moe,
                 period_cache[f"pos{pos}"], cache_pos)

@@ -110,7 +110,7 @@ def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
     spec = spec_for(axes, rules)
     parts = list(spec) + [None] * (x.ndim - len(spec))
     fixed = []
-    for dim, part in zip(x.shape, parts):
+    for dim, part in zip(x.shape, parts, strict=True):
         if part is not None:
             names = (part,) if isinstance(part, str) else tuple(part)
             size = 1
@@ -140,7 +140,7 @@ def param_shardings(axes_tree, mesh: Mesh, rules: Dict[str, MeshAxes],
         if shape is not None:
             parts = list(spec) + [None] * (len(shape.shape) - len(spec))
             fixed = []
-            for dim, part in zip(shape.shape, parts):
+            for dim, part in zip(shape.shape, parts, strict=True):
                 if part is not None:
                     names = ((part,) if isinstance(part, str)
                              else tuple(part))

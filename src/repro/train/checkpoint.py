@@ -106,7 +106,8 @@ def _restore_one(directory: str, step: int, tree_like: Any,
     shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
                     if shardings is not None else [None] * len(leaves))
     out = []
-    for meta, like, sh in zip(manifest["leaves"], leaves, shard_leaves):
+    for meta, _like, sh in zip(manifest["leaves"], leaves, shard_leaves,
+                               strict=True):
         fpath = os.path.join(path, meta["file"])
         if (not os.path.exists(fpath)
                 or os.path.getsize(fpath) < meta["nbytes"]):

@@ -81,7 +81,7 @@ def compressed_psum_tree(grads: Params, error_state: Params,
     flat_g, treedef = jax.tree.flatten(grads)
     flat_e = jax.tree.leaves(error_state)
     out_g, out_e = [], []
-    for g, e in zip(flat_g, flat_e):
+    for g, e in zip(flat_g, flat_e, strict=True):
         rg, ne = one(g, e)
         out_g.append(rg)
         out_e.append(ne)

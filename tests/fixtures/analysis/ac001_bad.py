@@ -1,0 +1,14 @@
+"""AC001 bad: a LaunchRecord that never reaches the accounting list."""
+from dataclasses import dataclass
+
+
+@dataclass
+class LaunchRecord:
+    cand_streamed: int
+    pat_slots: int
+    groups: int
+
+
+def run_launch(launches, rows, slots):
+    rec = LaunchRecord(cand_streamed=rows, pat_slots=slots, groups=1)  # BAD
+    return rec

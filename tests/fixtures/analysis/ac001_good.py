@@ -1,0 +1,15 @@
+"""AC001 good: the LaunchRecord lands on the accounting surface."""
+from dataclasses import dataclass
+
+
+@dataclass
+class LaunchRecord:
+    cand_streamed: int
+    pat_slots: int
+    groups: int
+
+
+def run_launch(launches, rows, slots):
+    launches.append(
+        LaunchRecord(cand_streamed=rows, pat_slots=slots, groups=1))
+    return launches[-1]

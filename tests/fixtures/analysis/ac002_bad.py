@@ -1,0 +1,10 @@
+"""AC002 bad: one disposition path charges two launch counters."""
+
+
+def charge(counters, launches):
+    for rec in launches:
+        if rec.skipped:
+            counters.launches_skipped += 1
+            continue
+        counters.kernel_launches += 1  # BAD: path charges two counters
+        counters.fast_path_selects += 1

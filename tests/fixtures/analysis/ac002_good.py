@@ -1,0 +1,12 @@
+"""AC002 good: every disposition path charges exactly one counter."""
+
+
+def charge(counters, launches):
+    for rec in launches:
+        if rec.skipped:
+            counters.launches_skipped += 1
+            continue
+        if rec.fast_path:
+            counters.fast_path_selects += rec.groups
+            continue
+        counters.kernel_launches += 1

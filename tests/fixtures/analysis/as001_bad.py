@@ -1,0 +1,7 @@
+"""AS001 bad: blocking sleep inside a coroutine."""
+import time
+
+
+async def collect(queue):
+    time.sleep(0.01)  # BAD: blocks the event loop
+    return await queue.get()

@@ -1,0 +1,9 @@
+"""AS001 good: async sleep and executor dispatch only."""
+import asyncio
+
+
+async def collect(queue, executor, work):
+    await asyncio.sleep(0.01)
+    loop = asyncio.get_running_loop()
+    await loop.run_in_executor(executor, work)
+    return await queue.get()

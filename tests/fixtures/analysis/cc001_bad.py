@@ -1,0 +1,5 @@
+"""CC001 bad: reaching into FragmentStore internals from outside."""
+
+
+def page_count(fragments):
+    return len(fragments._page_lru)  # BAD: FragmentStore internal

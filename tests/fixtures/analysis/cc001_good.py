@@ -1,0 +1,5 @@
+"""CC001 good: going through the public FragmentStore API."""
+
+
+def page_count(fragments):
+    return fragments.stats()["http"]["entries"]

@@ -1,0 +1,12 @@
+"""CC002 bad: mutating triple data with no reachable invalidation."""
+import numpy as np
+
+
+class Store:
+    def __init__(self, triples):
+        self.triples = triples  # construction is exempt
+
+
+def append_triples(store, new_rows):
+    store.triples = np.concatenate([store.triples, new_rows])  # BAD
+    return store.triples

@@ -1,0 +1,13 @@
+"""CC002 good: the mutation path releases the cached ranges."""
+import numpy as np
+
+
+class Store:
+    def __init__(self, triples):
+        self.triples = triples
+
+
+def append_triples(store, fragments, pattern, new_rows):
+    store.triples = np.concatenate([store.triples, new_rows])
+    fragments.on_release(pattern)
+    return store.triples

@@ -1,0 +1,9 @@
+"""DC001 bad: code after an unconditional return."""
+
+
+def drain(items):
+    out = []
+    for item in items:
+        out.append(item)
+    return out
+    out.clear()  # BAD: unreachable

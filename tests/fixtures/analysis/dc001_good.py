@@ -1,0 +1,8 @@
+"""DC001 good: no unreachable statements."""
+
+
+def drain(items):
+    out = []
+    for item in items:
+        out.append(item)
+    return out

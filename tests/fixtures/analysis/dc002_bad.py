@@ -1,0 +1,11 @@
+"""DC002 bad: the same pure value stored twice, unconditionally."""
+import numpy as np
+
+
+def gather(groups):
+    empty = np.empty((0, 3), dtype=np.int32)
+    out = []
+    for g in groups:
+        out.append(g)
+    empty = np.empty((0, 3), dtype=np.int32)  # BAD: duplicate store
+    return out, empty

@@ -1,0 +1,24 @@
+"""KL001 bad: pallas_call without the full launch-geometry kwargs."""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BT = 8
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def double(x, *, bt: int = BT, interpret: bool = False):
+    t = x.shape[0]
+    return pl.pallas_call(  # BAD: no interpret kwarg
+        _kernel,
+        grid=(t // bt,),
+        in_specs=[pl.BlockSpec((bt,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((bt,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((t,), jnp.int32),
+    )(x)

@@ -1,0 +1,23 @@
+"""KL002 bad: BlockSpec shape uses a traced (non-static) parameter."""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def double(x, bt, *, interpret: bool = False):
+    t = x.shape[0]
+    return pl.pallas_call(
+        _kernel,
+        grid=(t // 8,),
+        in_specs=[pl.BlockSpec((bt,), lambda i: (i,))],  # BAD: bt traced
+        out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((t,), jnp.int32),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,23 @@
+"""KL002 good: block-shape parameter is listed in static_argnames."""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def double(x, bt, *, interpret: bool = False):
+    t = x.shape[0]
+    return pl.pallas_call(
+        _kernel,
+        grid=(t // 8,),
+        in_specs=[pl.BlockSpec((bt,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((t,), jnp.int32),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,22 @@
+"""KL003 bad: the launch grid captures a traced Python scalar."""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def double(x, n_tiles, *, interpret: bool = False):
+    return pl.pallas_call(
+        _kernel,
+        grid=(n_tiles,),  # BAD: n_tiles is traced
+        in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0],), jnp.int32),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,3 @@
+"""KL004 bad: a tile-capacity constant that is not a power of two."""
+DEFAULT_BT = 1000  # BAD: not a power of two
+DEFAULT_FILL = -1  # not a capacity token: ignored

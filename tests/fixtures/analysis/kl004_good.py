@@ -1,0 +1,5 @@
+"""KL004 good: power-of-two tile/window capacities."""
+DEFAULT_BT = 1024
+DEFAULT_BM = 128
+DEFAULT_SHARD_WINDOW = 1024
+DEFAULT_FILL = -1  # not a capacity token: ignored

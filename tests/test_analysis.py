@@ -1,0 +1,121 @@
+"""Self-tests for the repro-lint static analyzer (docs/analysis.md).
+
+Each rule has a bad/good fixture pair under tests/fixtures/analysis/:
+the bad snippet must yield exactly one finding with the right rule id
+on the line marked ``# BAD``, the good twin must come back clean. The
+final test is the live gate: the repo's own tree must be finding-free,
+which is what CI's static-analysis job enforces.
+"""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (ALL_RULES, SEVERITY_ERROR, load_context,
+                            run_analysis)
+from repro.analysis.__main__ import main as analysis_main
+
+pytestmark = pytest.mark.tier1
+
+FIXTURES = Path(__file__).parent / "fixtures" / "analysis"
+
+# (fixture stem, expected rule id) -- covers all four rule groups:
+# kernel-launch safety, cache coherence, accounting, async safety,
+# plus the dead-code rules.
+CASES = [
+    ("kl001", "KL001"),
+    ("kl002", "KL002"),
+    ("kl003", "KL003"),
+    ("kl004", "KL004"),
+    ("cc001", "CC001"),
+    ("cc002", "CC002"),
+    ("ac001", "AC001"),
+    ("ac002", "AC002"),
+    ("as001", "AS001"),
+    ("dc001", "DC001"),
+    ("dc002", "DC002"),
+]
+
+
+def _findings(*paths):
+    return run_analysis(load_context([str(p) for p in paths]))
+
+
+def _marked_line(path: Path) -> int:
+    for lineno, line in enumerate(path.read_text().splitlines(), start=1):
+        if "# BAD" in line:
+            return lineno
+    raise AssertionError(f"{path} has no '# BAD' marker")
+
+
+@pytest.mark.parametrize("stem,rule", CASES)
+def test_bad_fixture_yields_one_finding(stem, rule):
+    path = FIXTURES / f"{stem}_bad.py"
+    findings = _findings(path)
+    assert len(findings) == 1, findings
+    f = findings[0]
+    assert f.rule == rule
+    assert f.severity == SEVERITY_ERROR
+    assert f.line == _marked_line(path)
+    assert f.file == path.name
+
+
+@pytest.mark.parametrize("stem,rule", CASES)
+def test_good_fixture_is_clean(stem, rule):
+    assert _findings(FIXTURES / f"{stem}_good.py") == []
+
+
+def test_ac003_bad_budget_key_flagged():
+    findings = _findings(FIXTURES / "ac003_bad")
+    assert [f.rule for f in findings] == ["AC003"]
+    f = findings[0]
+    assert f.severity == SEVERITY_ERROR
+    assert "bogus_metric" in f.message
+    budgets = FIXTURES / "ac003_bad" / "budgets.json"
+    lines = budgets.read_text().splitlines()
+    assert "bogus_metric" in lines[f.line - 1]
+
+
+def test_ac003_good_budgets_resolve():
+    assert _findings(FIXTURES / "ac003_good") == []
+
+
+def test_cli_exit_codes():
+    assert analysis_main([str(FIXTURES / "kl001_bad.py")]) == 1
+    assert analysis_main([str(FIXTURES / "kl001_good.py")]) == 0
+
+
+def test_cli_json_format(capsys):
+    rc = analysis_main([str(FIXTURES / "kl001_bad.py"),
+                        "--format", "json"])
+    assert rc == 1
+    report = json.loads(capsys.readouterr().out)
+    assert report["counts"]["error"] == 1
+    (finding,) = report["findings"]
+    assert finding["rule"] == "KL001"
+    assert set(finding) == {"rule", "severity", "file", "line", "col",
+                            "message"}
+
+
+def test_cli_select_filters_rules():
+    # The KL001 fixture is clean under every other rule, so selecting
+    # an unrelated rule must exit 0.
+    bad = str(FIXTURES / "kl001_bad.py")
+    assert analysis_main([bad, "--select", "AS001"]) == 0
+    assert analysis_main([bad, "--select", "KL001"]) == 1
+
+
+def test_rule_ids_unique():
+    ids = [rule.rule_id for rule in ALL_RULES]
+    assert len(ids) == len(set(ids))
+
+
+def test_live_repo_is_finding_free():
+    """The regression gate: the repo's own src/ + benchmarks/ trees
+    (and benchmarks/budgets.json) carry no error-severity findings."""
+    ctx = load_context([])
+    assert (ctx.root / "src" / "repro").is_dir()
+    assert ctx.budgets_path is not None
+    findings = run_analysis(ctx)
+    errors = [f for f in findings if f.severity == SEVERITY_ERROR]
+    assert errors == [], "\n".join(f.format() for f in errors)

@@ -81,7 +81,7 @@ class TestConcurrentCoalescing:
         assert front.stats.coalesced_requests == 16
 
         nserver = BrTPFServer(store, selector_backend="numpy")
-        for (frag,), req in zip(responses, reqs):
+        for (frag,), req in zip(responses, reqs, strict=True):
             want = nserver.handle(req)
             assert frag.data.dtype == want.data.dtype
             np.testing.assert_array_equal(frag.data, want.data)
@@ -142,7 +142,7 @@ class TestFlushSemantics:
             == [r.key() for r in reqs]
         assert done_order == list(range(5))
         solo = BrTPFServer(store, selector_backend="kernel")
-        for req, frag in zip(reqs, frags):
+        for req, frag in zip(reqs, frags, strict=True):
             want = solo.handle(req)
             np.testing.assert_array_equal(frag.data, want.data)
 
@@ -232,7 +232,7 @@ class TestFlushSemantics:
             == [r.key() for r in early]
         assert [r.key() for r in server.batches[1]] == [late.key()]
         solo = BrTPFServer(store, selector_backend="kernel")
-        for req, frag in zip(early + [late], frags):
+        for req, frag in zip(early + [late], frags, strict=True):
             want = solo.handle(req)
             np.testing.assert_array_equal(frag.data, want.data)
 
@@ -291,7 +291,7 @@ class TestMaxMprUnderCoalescing:
         assert [r.key() for r in server.batches[0]] \
             == [r.key() for r in good]
         solo = BrTPFServer(store, max_mpr=5, selector_backend="kernel")
-        for req, frag in zip(good, results[:3]):
+        for req, frag in zip(good, results[:3], strict=True):
             want = solo.handle(req)
             np.testing.assert_array_equal(frag.data, want.data)
 

@@ -122,7 +122,7 @@ class TestBatchedSelector:
         results = sel.select_same_pattern(tp, omegas)
         assert len(sel.launches) == 1
         assert sel.launches[0].groups == len(omegas)
-        for (data, cnt), om in zip(results, omegas):
+        for (data, cnt), om in zip(results, omegas, strict=True):
             want, wcnt = brtpf_select_with_cnt(store, tp, om)
             np.testing.assert_array_equal(data, want)
             assert cnt == wcnt
@@ -179,7 +179,7 @@ class TestServerBackendParity:
 
         batched = BrTPFServer(store, selector_backend="kernel")
         got = batched.handle_batch(reqs)
-        for f_w, f_g in zip(want, got):
+        for f_w, f_g in zip(want, got, strict=True):
             np.testing.assert_array_equal(f_w.data, f_g.data)
             assert f_w.cnt == f_g.cnt
             assert f_w.has_next == f_g.has_next
@@ -205,7 +205,7 @@ class TestServerBackendParity:
         reqs = [Request(tp, rand_omega(rng, 4), 0),
                 Request(tp, rand_omega(rng, 4), 0)]
         frags = server.handle_batch(reqs)
-        for r, f in zip(reqs, frags):
+        for r, f in zip(reqs, frags, strict=True):
             want, wcnt = brtpf_select_with_cnt(store, tp, r.omega)
             np.testing.assert_array_equal(
                 f.data, want[:server.page_size])

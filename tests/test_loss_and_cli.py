@@ -72,7 +72,7 @@ class TestGradAccum:
                                    rtol=1e-5)
         flat1 = jax.tree.leaves(p1)
         flat2 = jax.tree.leaves(p2)
-        for a, b_ in zip(flat1, flat2):
+        for a, b_ in zip(flat1, flat2, strict=True):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
                                        rtol=2e-3, atol=2e-5)
 

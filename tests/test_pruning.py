@@ -219,7 +219,7 @@ class TestPrunedKernelParity:
         sel = KernelSelector(store)
         results = sel.select_same_pattern(tp, omegas)
         assert len(sel.launches) == 1      # still one grouped launch
-        for (data, cnt), om in zip(results, omegas):
+        for (data, cnt), om in zip(results, omegas, strict=True):
             want, wcnt = brtpf_select_with_cnt(store, tp, om)
             np.testing.assert_array_equal(data, want)
             assert cnt == wcnt

@@ -120,7 +120,7 @@ class TestShardedSelectorParity:
         for rec in sel.launches:
             assert rec.groups == len(omegas)
             assert rec.cand_streamed == 128     # bounded by the window
-        for (data, cnt), om in zip(results, omegas):
+        for (data, cnt), om in zip(results, omegas, strict=True):
             want, wcnt = brtpf_select_with_cnt(store, tp, om)
             np.testing.assert_array_equal(data, want)
             assert cnt == wcnt
@@ -197,7 +197,7 @@ class TestServerShardedBackendParity:
         batched = BrTPFServer(store, selector_backend="sharded",
                               shard_window=128)
         got = batched.handle_batch(reqs)
-        for f_w, f_s, f_g in zip(want, solo_frags, got):
+        for f_w, f_s, f_g in zip(want, solo_frags, got, strict=True):
             np.testing.assert_array_equal(f_w.data, f_g.data)
             np.testing.assert_array_equal(f_s.data, f_g.data)
             assert f_w.cnt == f_s.cnt == f_g.cnt
