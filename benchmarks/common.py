@@ -14,7 +14,8 @@ import time
 from typing import Dict, Optional
 
 
-from repro.core import BrTPFClient, BrTPFServer, LRUCache, TPFClient
+from repro.core import (BrTPFClient, BrTPFServer, LRUCache, ServerConfig,
+                        TPFClient)
 from repro.data.watdiv import (WatDivData, WatDivScale, generate,
                                generate_workload)
 
@@ -69,11 +70,11 @@ def make_server(page_size: int = 100, max_mpr: int = 30,
                 selector_backend: str = "numpy",
                 shard_window: Optional[int] = None,
                 fast_path_rows: int = FAST_PATH_ROWS) -> BrTPFServer:
-    return BrTPFServer(dataset().store, page_size=page_size,
-                       max_mpr=max_mpr, cache=cache,
-                       selector_backend=selector_backend,
-                       shard_window=shard_window,
-                       fast_path_rows=fast_path_rows)
+    config = ServerConfig(page_size=page_size, max_mpr=max_mpr,
+                          selector_backend=selector_backend,
+                          shard_window=shard_window,
+                          fast_path_rows=fast_path_rows)
+    return BrTPFServer(dataset().store, config, cache=cache)
 
 
 def run_sequence(client_kind: str, page_size: int = 100,
@@ -143,7 +144,8 @@ def pr_id() -> str:
 
 
 def persist(kind: str, results: Dict,
-            headline: Optional[Dict] = None) -> str:
+            headline: Optional[Dict] = None,
+            section: Optional[str] = None) -> str:
     """Write results to ``BENCH_<kind>.json`` at the repo root.
 
     The file is committed per PR, so the current snapshot is diffable
@@ -151,25 +153,47 @@ def persist(kind: str, results: Dict,
     trajectory entry (PR id + headline metrics) to the file's
     ``trajectory`` list, so the perf history (req/s,
     launches-per-request, candidates-streamed, ...) reads as a series
-    instead of a single overwritten snapshot.
+    instead of a single overwritten snapshot. Multiple benchmarks share
+    one trajectory file (throughput + the latency load generator): a
+    same-PR entry is MERGED key-wise, never replaced, so whichever runs
+    second adds its metrics alongside the first's.
+
+    ``section`` scopes the results write: instead of replacing the whole
+    ``results`` payload, only ``results[section]`` is replaced (the
+    latency run must not wipe the throughput snapshot it shares a file
+    with).
     """
     path = os.path.join(REPO_ROOT, f"BENCH_{kind}.json")
     trajectory = []
+    existing_results: Dict = {}
     if os.path.exists(path):
         try:
             with open(path) as fh:
-                trajectory = json.load(fh).get("trajectory", [])
+                existing = json.load(fh)
+            trajectory = existing.get("trajectory", [])
+            existing_results = existing.get("results", {})
         except Exception:
             trajectory = []
     if headline is not None:
         entry = {"pr": pr_id(), **_jsonable(headline)}
-        # one entry per PR id: a re-run within a PR updates in place
+        # one merged entry per PR id: a re-run within a PR updates its
+        # own keys in place and keeps sibling benchmarks' keys
+        for prev in trajectory:
+            if prev.get("pr") == entry["pr"]:
+                entry = {**prev, **entry}
         trajectory = [e for e in trajectory if e.get("pr") != entry["pr"]]
         trajectory.append(entry)
+    if section is not None:
+        if not isinstance(existing_results, dict):
+            existing_results = {}
+        existing_results[section] = _jsonable(results)
+        results_payload = existing_results
+    else:
+        results_payload = _jsonable(results)
     payload = {
         "config": _jsonable(dataclasses.asdict(BenchConfig.default())),
         "full": FULL,
-        "results": _jsonable(results),
+        "results": results_payload,
     }
     if trajectory:
         payload["trajectory"] = trajectory

@@ -8,7 +8,7 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import (BrTPFClient, BrTPFServer, TPFClient,
+from repro.core import (BrTPFClient, BrTPFServer, ServerConfig, TPFClient,
                         TermDictionary, evaluate_bgp_reference, parse_bgp,
                         store_from_ntriples)
 
@@ -42,7 +42,7 @@ def main() -> None:
         ("TPF", lambda srv: TPFClient(srv)),
         ("brTPF", lambda srv: BrTPFClient(srv, max_mpr=30)),
     ]:
-        server = BrTPFServer(store, page_size=100, max_mpr=30)
+        server = BrTPFServer(store, ServerConfig(page_size=100, max_mpr=30))
         res = make(server).execute(bgp)
         assert np.array_equal(np.unique(res.solutions, axis=0), expected)
         print(f"{name:8s} {res.num_requests:6d} {res.data_received:9d} "

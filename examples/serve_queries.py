@@ -1,62 +1,152 @@
-"""End-to-end driver (the paper's kind): serve a query workload to many
-concurrent clients through the brTPF server and report throughput.
+"""End-to-end drivers for the serving edge, as a small click CLI.
 
-This is paper section 6 in miniature: a WatDiv-like dataset, concurrent
-clients split across distinct query sets, a 4-worker origin server with
-calibrated service costs, a 5-minute timeout, with/without the shared
-HTTP cache -- comparing the TPF and brTPF interfaces end to end.
+Three subcommands over one WatDiv-like dataset:
 
-Run:  PYTHONPATH=src python examples/serve_queries.py [--clients 16]
+* ``sim``   -- the original driver (the paper's kind): serve a query
+  workload to many concurrent clients through the simulated origin and
+  report throughput (paper section 6 in miniature).
+* ``serve`` -- stand up the real HTTP edge: the brtpf/v1 ASGI app over
+  an async front end (or a replica fleet with ``--replicas``), served
+  by uvicorn (``pip install 'repro[serving]'``).
+* ``query`` -- one-shot wire demo: POST a (br)TPF page request through
+  the in-process ASGI app and print the brtpf/v1 fragment envelope.
+
+Run:  PYTHONPATH=src python examples/serve_queries.py sim --clients 16
+      PYTHONPATH=src python examples/serve_queries.py serve --replicas 2
+      PYTHONPATH=src python examples/serve_queries.py query -s -1 -p 3053
 """
-import argparse
+import json
+import sys
 
+try:
+    import click
+except ImportError:  # pragma: no cover - click ships with the dev env
+    sys.exit("this example needs click (pip install click)")
+
+from repro.core import BrTPFServer, Request, ServerConfig, TriplePattern
 from repro.core.sim import (calibrate, collect_traces, simulate,
                             split_workload)
-from repro.core import BrTPFServer
 from repro.data.watdiv import WatDivScale, generate, generate_workload
+from repro.serving.http import TestClient, app_from_config, run_app
+
+BACKENDS = click.Choice(["numpy", "kernel", "sharded"])
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--clients", type=int, default=16)
-    ap.add_argument("--queries", type=int, default=48)
-    ap.add_argument("--cache", action="store_true")
-    ap.add_argument("--selector-backend",
-                    choices=["numpy", "kernel", "sharded"],
-                    default="numpy",
-                    help="origin-server selector: numpy per-pattern loop,"
-                         " the Pallas bind-join kernel path, or the"
-                         " mesh-sharded windowed path")
-    args = ap.parse_args()
-
+def make_dataset(queries: int = 48):
     data = generate(WatDivScale(users=1000, products=400, reviews=1500),
                     seed=0)
-    wl = generate_workload(data, num_queries=args.queries, seed=1)
-    print(f"dataset: {data.num_triples} triples; "
-          f"workload: {len(wl)} queries; clients: {args.clients}")
+    wl = generate_workload(data, num_queries=queries, seed=1)
+    return data, wl
+
+
+@click.group()
+def cli():
+    """brTPF serving-edge drivers (sim / serve / query)."""
+
+
+@cli.command("sim")
+@click.option("--clients", default=16, show_default=True)
+@click.option("--queries", default=48, show_default=True)
+@click.option("--cache", is_flag=True,
+              help="also simulate with the shared HTTP cache")
+@click.option("--selector-backend", type=BACKENDS, default="numpy",
+              show_default=True,
+              help="origin-server selector: numpy per-pattern loop, the"
+                   " Pallas bind-join kernel path, or the mesh-sharded"
+                   " windowed path")
+def sim(clients, queries, cache, selector_backend):
+    """Simulated concurrent-client throughput, TPF vs brTPF."""
+    data, wl = make_dataset(queries)
+    click.echo(f"dataset: {data.num_triples} triples; "
+               f"workload: {len(wl)} queries; clients: {clients}")
 
     params = calibrate(BrTPFServer(data.store), wl)
     rows = []
     for kind, mpr in [("tpf", None), ("brtpf", 30)]:
-        server = BrTPFServer(data.store, max_mpr=mpr or 30,
-                             selector_backend=args.selector_backend)
+        config = ServerConfig(max_mpr=mpr or 30,
+                              selector_backend=selector_backend)
+        server = BrTPFServer(data.store, config)
         traces = collect_traces(server, wl, kind, max_mpr=mpr,
                                 request_budget=20_000)
-        per_client = split_workload(traces, args.clients)
-        for use_cache in ([False, True] if args.cache else [False]):
+        per_client = split_workload(traces, clients)
+        for use_cache in ([False, True] if cache else [False]):
             res = simulate(per_client, params, use_cache=use_cache,
                            wrap=True)
             rows.append((kind, use_cache, res))
 
-    print(f"\n{'client':8s} {'cache':6s} {'completed/hr':>12s} "
-          f"{'timeouts':>8s} {'avg QET':>8s}")
+    click.echo(f"\n{'client':8s} {'cache':6s} {'completed/hr':>12s} "
+               f"{'timeouts':>8s} {'avg QET':>8s}")
     for kind, cached, res in rows:
-        print(f"{kind:8s} {str(cached):6s} {res.completed:12d} "
-              f"{res.timeouts:8d} {res.avg_qet:7.1f}s")
-    print("\nbrTPF sustains more completed queries under the same load"
-          " (paper section 6); the cache helps both but does not let"
-          " TPF overtake (section 7).")
+        click.echo(f"{kind:8s} {str(cached):6s} {res.completed:12d} "
+                   f"{res.timeouts:8d} {res.avg_qet:7.1f}s")
+    click.echo("\nbrTPF sustains more completed queries under the same"
+               " load (paper section 6); the cache helps both but does"
+               " not let TPF overtake (section 7).")
+
+
+@cli.command("serve")
+@click.option("--host", default="127.0.0.1", show_default=True)
+@click.option("--port", default=8000, show_default=True)
+@click.option("--replicas", default=1, show_default=True,
+              help="origin replicas behind the front-end router")
+@click.option("--policy", type=click.Choice(["pattern", "round_robin"]),
+              default="pattern", show_default=True)
+@click.option("--page-size", default=100, show_default=True)
+@click.option("--max-mpr", default=30, show_default=True)
+@click.option("--selector-backend", type=BACKENDS, default="numpy",
+              show_default=True)
+def serve(host, port, replicas, policy, page_size, max_mpr,
+          selector_backend):
+    """Serve the brtpf/v1 HTTP API over a real socket (uvicorn)."""
+    data, _ = make_dataset()
+    config = ServerConfig(page_size=page_size, max_mpr=max_mpr,
+                          selector_backend=selector_backend)
+    app = app_from_config(data.store, config, replicas=replicas,
+                          policy=policy)
+    click.echo(f"dataset: {data.num_triples} triples; replicas="
+               f"{replicas} policy={policy} maxMpR={max_mpr}")
+    click.echo(f"GET http://{host}:{port}/fragment?s=-1&p=3053&o=-2")
+    try:
+        run_app(app, host=host, port=port)
+    except RuntimeError as exc:  # uvicorn not installed
+        raise click.ClickException(str(exc)) from exc
+
+
+@cli.command("query")
+@click.option("-s", default=-1, show_default=True,
+              help="subject term id (negative = variable)")
+@click.option("-p", default=3053, show_default=True)
+@click.option("-o", default=-2, show_default=True)
+@click.option("--page", default=0, show_default=True)
+@click.option("--omega", default=None,
+              help="solution mappings as a JSON list of int lists")
+@click.option("--max-mpr", default=30, show_default=True)
+def query(s, p, o, page, omega, max_mpr):
+    """POST one page request through the in-process ASGI app."""
+    import numpy as np
+    data, _ = make_dataset(queries=1)
+    config = ServerConfig(max_mpr=max_mpr)
+    req = Request(
+        pattern=TriplePattern(s, p, o),
+        omega=(None if omega is None
+               else np.asarray(json.loads(omega), dtype=np.int32)),
+        page=page)
+    with TestClient(app_from_config(data.store, config)) as tc:
+        resp = tc.post("/fragment", json_body=req.to_wire())
+        click.echo(f"HTTP {resp.status_code}")
+        env = resp.json()
+        if resp.status_code == 200:
+            click.echo(f"cnt={env['cnt']} page={env['page']} "
+                       f"has_next={env['has_next']} "
+                       f"triples={len(env['data'])} "
+                       f"meta_triples={env['meta_triples']}")
+            for row in env["data"][:10]:
+                click.echo(f"  {row}")
+            if len(env["data"]) > 10:
+                click.echo(f"  ... {len(env['data']) - 10} more")
+        else:
+            click.echo(json.dumps(env, indent=1))
 
 
 if __name__ == "__main__":
-    main()
+    cli()

@@ -17,12 +17,24 @@ from ..findings import SEVERITY_ERROR, Finding
 from . import Rule
 
 # Fully-dotted call names (and dotted prefixes) that block the loop.
+# The serving edge (PR 7) runs every route handler as a coroutine on
+# the shared loop, so loop-breaking calls (asyncio.run / uvicorn.run
+# re-enter or replace the running loop) and sync HTTP clients are
+# flagged alongside the classic sleep/subprocess offenders. Note the
+# httpx entries are exact call names, not a prefix: the
+# ``httpx.AsyncClient(...)`` constructor is loop-safe and must not
+# false-positive.
 _BLOCKING_DOTTED = {
     "time.sleep",
     "os.system",
     "os.popen",
     "socket.create_connection",
     "loop.run_until_complete",
+    "asyncio.run",
+    "uvicorn.run",
+    "httpx.get",
+    "httpx.post",
+    "httpx.request",
 }
 _BLOCKING_PREFIXES = ("subprocess.", "urllib.request.", "requests.")
 _BLOCKING_BARE = {"open", "input"}

@@ -13,8 +13,12 @@ from .bgp import BGP, bgp_from_arrays, evaluate_bgp_reference, parse_bgp
 from .cache import LRUCache, request_key
 from .client import (AsyncBrTPFClient, BrTPFClient, ExecutionResult,
                      TPFClient, plan_join_order)
+from .config import ServerConfig
 from .fragments import (ClientFragmentCache, FragmentStore, fragment_key)
-from .metrics import Counters, layer_metrics
+from .metrics import (Counters, latency_summary, layer_metrics,
+                      metrics_snapshot)
+from .wire import (WIRE_VERSION, WireError, fragment_from_wire,
+                   fragment_to_wire, request_from_wire, request_to_wire)
 from .rdf import (TermDictionary, TriplePattern, UNBOUND, compatible,
                   decode_var, dedup_mappings, encode_var, is_var,
                   mapping_from_triple, merge, project_mappings)
@@ -37,7 +41,10 @@ __all__ = [
     "ExecutionResult",
     "Fragment", "FragmentStore", "LRUCache",
     "MaxMprExceeded", "Request", "TPFClient",
-    "fragment_key", "layer_metrics",
+    "fragment_key", "layer_metrics", "metrics_snapshot",
+    "latency_summary", "ServerConfig",
+    "WIRE_VERSION", "WireError", "fragment_from_wire", "fragment_to_wire",
+    "request_from_wire", "request_to_wire",
     "drive_streams", "plan_join_order", "serve_concurrent",
     "TermDictionary", "TriplePattern", "TripleStore", "UNBOUND",
     "bgp_from_arrays", "brtpf_cardinality", "brtpf_select", "brtpf_select_with_cnt", "compatible",

@@ -304,9 +304,17 @@ class AsyncBrTPFClient:
     def __init__(self, front, max_mpr: Optional[int] = None,
                  request_budget: Optional[int] = None,
                  client_cache: bool = True) -> None:
+        # ``front`` is anything with ``async handle(Request) -> Fragment``
+        # and a ``max_mpr`` bound: an AsyncBrTPFServer (in-process) or a
+        # Transport (repro.serving.transport -- loopback or HTTP). Only
+        # the in-process path exposes the origin server itself.
         self.front = front
-        self.server: BrTPFServer = front.server
-        self.max_mpr = max_mpr if max_mpr is not None else self.server.max_mpr
+        self.server: Optional[BrTPFServer] = getattr(front, "server", None)
+        if max_mpr is None:
+            max_mpr = getattr(front, "max_mpr", None)
+        if max_mpr is None:
+            raise ValueError("front exposes no max_mpr; pass max_mpr=")
+        self.max_mpr = max_mpr
         self.request_budget = request_budget
         self._requests_used = 0
         self._received = 0
@@ -324,7 +332,9 @@ class AsyncBrTPFClient:
                 and self._requests_used >= self.request_budget):
             raise RequestBudgetExceeded()
         self._requests_used += 1
-        if omega is not None:
+        # In-process accounting only: over a transport the wire boundary
+        # charges mappings_sent itself (Transport/ASGI note_mappings).
+        if omega is not None and self.server is not None:
             self.server.counters.mappings_sent += int(omega.shape[0])
         frag = await self.front.handle(req)
         self._received += frag.triples_received

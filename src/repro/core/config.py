@@ -1,0 +1,89 @@
+"""Server configuration: one frozen value object for every construction
+path.
+
+``BrTPFServer.__init__`` had grown a 10-kwarg sprawl that every layer
+above it (the async front end, the benchmarks' ``make_server``, the sim
+CLI, and now the ASGI app factory and the replica router) re-declared
+by hand -- and a config that only exists as a kwarg list cannot cross a
+process boundary or be shared verbatim between N replicas.
+:class:`ServerConfig` is the transport-neutral replacement: a frozen
+dataclass carrying every origin-server knob, shared by
+:class:`~repro.core.server.BrTPFServer`,
+:class:`~repro.core.batching.AsyncBrTPFServer` (``from_config``), the
+ASGI app factory (:func:`repro.serving.http.app_from_config`) and the
+replica router (:class:`repro.serving.router.ReplicaRouter`), so every
+replica of a fleet is provably built from the same value.
+
+The legacy per-kwarg constructor surface is kept for one release as a
+deprecated passthrough (``tests/test_transport.py`` asserts
+equivalence); new code should construct a ``ServerConfig`` and hand the
+same object everywhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+# Number of metadata + hypermedia-control triples per fragment page. A
+# real TPF page carries void:triples counts, next/prev page links and the
+# interface's hypermedia controls; the reference server emits ~8-30 such
+# triples per page. The *value* only scales the constant page overhead --
+# the paper's findings are about how the number of pages differs between
+# TPF and brTPF -- so it is configurable.
+DEFAULT_META_TRIPLES_PER_PAGE = 8
+DEFAULT_PAGE_SIZE = 100
+DEFAULT_MAX_MPR = 30
+
+SELECTOR_BACKENDS = ("numpy", "kernel", "sharded")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerConfig:
+    """Origin-server configuration (paper section 4.1 + the accelerated
+    backends of PRs 1/3/5).
+
+    * ``page_size`` / ``max_mpr`` / ``meta_triples_per_page`` -- the
+      paper's interface parameters (section 5.1).
+    * ``selector_backend`` -- ``"numpy"`` (paper-faithful oracle),
+      ``"kernel"`` (Pallas bind-join) or ``"sharded"`` (mesh-partitioned
+      windowed launches).
+    * ``mesh`` / ``shard_window`` / ``shard_axis`` -- sharded-backend
+      geometry (``mesh=None`` builds one over all local devices).
+    * ``fast_path_rows`` -- small-work threshold below which the
+      accelerated backends route to the numpy block evaluation
+      (docs/pruning.md); 0 disables the fast path.
+    """
+
+    page_size: int = DEFAULT_PAGE_SIZE
+    max_mpr: int = DEFAULT_MAX_MPR
+    meta_triples_per_page: int = DEFAULT_META_TRIPLES_PER_PAGE
+    selector_backend: str = "numpy"
+    mesh: Any = None
+    shard_window: Optional[int] = None
+    shard_axis: str = "data"
+    fast_path_rows: int = 0
+
+    def __post_init__(self) -> None:
+        if self.selector_backend not in SELECTOR_BACKENDS:
+            raise ValueError(
+                f"unknown selector_backend {self.selector_backend!r}")
+        if self.page_size < 1:
+            raise ValueError("page_size must be >= 1")
+        if self.max_mpr < 1:
+            raise ValueError("max_mpr must be >= 1")
+
+    def replace(self, **changes: Any) -> "ServerConfig":
+        return dataclasses.replace(self, **changes)
+
+    def to_wire(self) -> dict:
+        """JSON-safe view (``mesh`` is host-local and not serialized;
+        a remote replica rebuilds its own over its devices)."""
+        out = {f.name: getattr(self, f.name)
+               for f in dataclasses.fields(self) if f.name != "mesh"}
+        out["mesh"] = None
+        return out
+
+    @classmethod
+    def from_wire(cls, obj: dict) -> "ServerConfig":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in obj.items() if k in fields})

@@ -11,15 +11,27 @@
   accelerated selector -- kernel/window launches avoided by residency.
 * server/client work counters feed the throughput simulation (section 6).
 
-:func:`layer_metrics` is the per-layer observability surface over the
-unified store: one snapshot with the HTTP cache's section-7 hit rate,
-the selector-memo (data-layer) hit rate, the candidate-range memo hit
-rate and the skipped-launch count -- each layer accounted separately,
-so memo traffic can never masquerade as HTTP hits.
+:func:`metrics_snapshot` is the ONE observability schema (brtpf/v1):
+counters plus the per-layer surface over the unified store -- the HTTP
+cache's section-7 hit rate, the selector-memo (data-layer) hit rate,
+the candidate-range memo hit rate and the skipped-launch count -- each
+layer accounted separately, so memo traffic can never masquerade as
+HTTP hits. ``BrTPFServer.metrics_snapshot()``, the async front end's
+``AsyncBrTPFServer.metrics_snapshot()``, the replica router's merged
+snapshot and the ASGI app's ``GET /metrics`` all emit THIS schema, so
+the sim ``--live`` loop and the closed-loop load generator read the
+same keys over the wire as in-process. (:func:`layer_metrics` is the
+pre-PR-7 name, kept as an alias.)
+
+:func:`latency_summary` is the shared latency-quantile schema of the
+closed-loop load generator (``benchmarks/latency.py``): p50/p95/p99
+latency in milliseconds plus ``req_per_s`` -- the SLO quantities the
+``loopback:*`` budget gates bound.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional, Sequence
 
 
 @dataclasses.dataclass
@@ -57,13 +69,23 @@ class Counters:
             setattr(self, f.name, 0)
 
 
-def layer_metrics(server) -> dict:
-    """Per-layer cache accounting snapshot for a ``BrTPFServer``.
+METRICS_VERSION = "brtpf/v1"
+
+
+def metrics_snapshot(server, batch=None) -> dict:
+    """Canonical per-server metrics envelope (brtpf/v1 schema).
 
     Duck-typed on the server (``fragments``, ``store``, optional
     ``cache``) so this module stays import-light. Each layer reports
     its own hits/misses/hit_rate; ``launches_skipped`` is the unified
     store's count of kernel/window launches avoided by residency.
+    ``batch`` optionally attaches an async front end's
+    :class:`~repro.core.batching.BatchStats` under ``"batch"`` (the
+    flush/coalescing accounting the wire exposes at ``GET /metrics``).
+
+    Every value is a plain int/float/dict: the snapshot is JSON-safe by
+    construction, so the in-process dict and the ``GET /metrics`` body
+    are the same object modulo serialization.
     """
     f = server.fragments
     # Range-memo accounting is reported as THIS server's delta (the
@@ -75,6 +97,7 @@ def layer_metrics(server) -> dict:
     r_hits = server.store.range_memo_hits - base_hits
     r_misses = server.store.range_memo_misses - base_misses
     out = {
+        "v": METRICS_VERSION,
         "counters": dataclasses.asdict(server.counters),
         "launches_skipped": f.launches_skipped,
         "selector_memo": {
@@ -96,4 +119,53 @@ def layer_metrics(server) -> dict:
             "hit_rate": server.cache.hit_rate,
             "entries": len(server.cache),
         }
+    if batch is not None:
+        out["batch"] = {
+            "requests": batch.requests,
+            "rejected": batch.rejected,
+            "fast_path": batch.fast_path,
+            "flushes": batch.flushes,
+            "timer_flushes": batch.timer_flushes,
+            "full_flushes": batch.full_flushes,
+            "coalesced_requests": batch.coalesced_requests,
+            "max_batch_seen": batch.max_batch_seen,
+            "mean_batch": batch.mean_batch,
+        }
     return out
+
+
+# Pre-PR-7 name for the same snapshot; callers should migrate to
+# metrics_snapshot (one schema, shared with GET /metrics).
+layer_metrics = metrics_snapshot
+
+
+def latency_summary(samples_s: Sequence[float],
+                    wall_s: Optional[float] = None) -> dict:
+    """Latency-quantile schema shared by the closed-loop load generator
+    and the ``loopback:*`` budget gates: per-request latencies (seconds)
+    -> p50/p95/p99/mean milliseconds + closed-loop ``req_per_s``.
+
+    Quantiles use the nearest-rank method on the sorted samples -- no
+    numpy dependency, deterministic, and exact for the small sample
+    counts a smoke run produces.
+    """
+    n = len(samples_s)
+    if n == 0:
+        return {"requests": 0, "p50_latency_ms": 0.0,
+                "p95_latency_ms": 0.0, "p99_latency_ms": 0.0,
+                "mean_latency_ms": 0.0, "req_per_s": 0.0}
+    ordered = sorted(samples_s)
+
+    def rank_ms(q: float) -> float:
+        idx = min(n - 1, max(0, int(q * n + 0.5) - 1))
+        return ordered[idx] * 1e3
+
+    wall = wall_s if wall_s is not None else sum(ordered)
+    return {
+        "requests": n,
+        "p50_latency_ms": rank_ms(0.50),
+        "p95_latency_ms": rank_ms(0.95),
+        "p99_latency_ms": rank_ms(0.99),
+        "mean_latency_ms": sum(ordered) / n * 1e3,
+        "req_per_s": n / max(wall, 1e-9),
+    }

@@ -44,28 +44,29 @@ is already resident, regardless of which path populated it
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import OrderedDict
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .cache import LRUCache, request_key
+from .config import (DEFAULT_MAX_MPR, DEFAULT_META_TRIPLES_PER_PAGE,
+                     DEFAULT_PAGE_SIZE, ServerConfig)
 from .fragments import FragmentStore
-from .metrics import Counters, layer_metrics
+from .metrics import Counters, metrics_snapshot
 from .rdf import TriplePattern
 from .selectors import (Fragment, brtpf_select_with_cnt,
                         instantiate_patterns, tpf_select)
 from .store import TripleStore
 
-# Number of metadata + hypermedia-control triples per fragment page. A
-# real TPF page carries void:triples counts, next/prev page links and the
-# interface's hypermedia controls; the reference server emits ~8-30 such
-# triples per page. The *value* only scales the constant page overhead --
-# the paper's findings are about how the number of pages differs between
-# TPF and brTPF -- so it is configurable.
-DEFAULT_META_TRIPLES_PER_PAGE = 8
-DEFAULT_PAGE_SIZE = 100
-DEFAULT_MAX_MPR = 30
+__all__ = ["BrTPFServer", "MaxMprExceeded", "Request", "ServerConfig",
+           "DEFAULT_MAX_MPR", "DEFAULT_META_TRIPLES_PER_PAGE",
+           "DEFAULT_PAGE_SIZE"]
+
+# Sentinel distinguishing "kwarg not passed" from an explicit value in
+# the deprecated per-kwarg constructor surface (see ServerConfig).
+_UNSET = object()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,6 +91,20 @@ class Request:
     def is_brtpf(self) -> bool:
         return self.omega is not None and self.omega.shape[0] > 0
 
+    # -- wire schema (brtpf/v1; core/wire.py) -------------------------------
+
+    def to_wire(self) -> dict:
+        """brtpf/v1 request envelope (JSON-safe; omega as int lists)."""
+        from .wire import request_to_wire
+        return request_to_wire(self)
+
+    @staticmethod
+    def from_wire(obj: dict) -> "Request":
+        """Decode a brtpf/v1 request envelope (strict; raises
+        :class:`~repro.core.wire.WireError` on malformed input)."""
+        from .wire import request_from_wire
+        return request_from_wire(obj)
+
 
 class MaxMprExceeded(ValueError):
     """HTTP 414 equivalent: too many mappings attached to one request."""
@@ -101,24 +116,46 @@ class BrTPFServer:
     def __init__(
         self,
         store: TripleStore,
-        page_size: int = DEFAULT_PAGE_SIZE,
-        max_mpr: int = DEFAULT_MAX_MPR,
-        meta_triples_per_page: int = DEFAULT_META_TRIPLES_PER_PAGE,
+        config: Optional[ServerConfig] = None,
+        *,
         cache: Optional[LRUCache] = None,
-        selector_backend: str = "numpy",
-        mesh=None,
-        shard_window: Optional[int] = None,
-        shard_axis: str = "data",
-        fast_path_rows: int = 0,
+        page_size=_UNSET,
+        max_mpr=_UNSET,
+        meta_triples_per_page=_UNSET,
+        selector_backend=_UNSET,
+        mesh=_UNSET,
+        shard_window=_UNSET,
+        shard_axis=_UNSET,
+        fast_path_rows=_UNSET,
     ) -> None:
-        if selector_backend not in ("numpy", "kernel", "sharded"):
-            raise ValueError(f"unknown selector_backend {selector_backend!r}")
+        # Deprecated per-kwarg surface: any explicit legacy kwarg is
+        # folded into a ServerConfig (tests/test_transport.py asserts
+        # the two construction paths are equivalent). One release of
+        # passthrough, then the kwargs go away.
+        legacy = {name: value for name, value in [
+            ("page_size", page_size), ("max_mpr", max_mpr),
+            ("meta_triples_per_page", meta_triples_per_page),
+            ("selector_backend", selector_backend), ("mesh", mesh),
+            ("shard_window", shard_window), ("shard_axis", shard_axis),
+            ("fast_path_rows", fast_path_rows)] if value is not _UNSET}
+        if legacy:
+            if config is not None:
+                raise TypeError(
+                    "pass either a ServerConfig or legacy kwargs, not both: "
+                    + ", ".join(sorted(legacy)))
+            warnings.warn(
+                "BrTPFServer(**kwargs) is deprecated; pass "
+                "BrTPFServer(store, ServerConfig(...)) instead",
+                DeprecationWarning, stacklevel=2)
+            config = ServerConfig(**legacy)
+        config = config or ServerConfig()
+        self.config = config
         self.store = store
-        self.page_size = int(page_size)
-        self.max_mpr = int(max_mpr)
-        self.meta_triples_per_page = int(meta_triples_per_page)
+        self.page_size = int(config.page_size)
+        self.max_mpr = int(config.max_mpr)
+        self.meta_triples_per_page = int(config.meta_triples_per_page)
         self.cache = cache
-        self.selector_backend = selector_backend
+        self.selector_backend = config.selector_backend
         # Unified fragment store (core/fragments.py): ONE page-granular
         # layer under the HTTP cache, the selector memo and the store's
         # candidate-range memo. The data layer is the selector memo (a
@@ -138,25 +175,26 @@ class BrTPFServer:
         # select_with_cnt / select_same_pattern / launches interface,
         # and both consult the unified store before launching.
         self._selector = None
-        if selector_backend == "kernel":
+        if config.selector_backend == "kernel":
             from .kernel_selectors import KernelSelector
-            self._selector = KernelSelector(store,
-                                            fragments=self.fragments,
-                                            fast_path_rows=fast_path_rows)
-        elif selector_backend == "sharded":
+            self._selector = KernelSelector(
+                store, fragments=self.fragments,
+                fast_path_rows=config.fast_path_rows)
+        elif config.selector_backend == "sharded":
             from .federation import (DEFAULT_SHARD_WINDOW, FederatedStore,
                                      ShardedSelector)
+            mesh = config.mesh
             if mesh is None:
                 import jax
                 from jax.sharding import Mesh
-                mesh = Mesh(np.array(jax.devices()), (shard_axis,))
+                mesh = Mesh(np.array(jax.devices()), (config.shard_axis,))
             self.federated = FederatedStore.build(store.triples, mesh,
-                                                  axis=shard_axis)
+                                                  axis=config.shard_axis)
             self._selector = ShardedSelector(
                 self.federated,
-                window=shard_window or DEFAULT_SHARD_WINDOW,
+                window=config.shard_window or DEFAULT_SHARD_WINDOW,
                 fragments=self.fragments,
-                store=store, fast_path_rows=fast_path_rows)
+                store=store, fast_path_rows=config.fast_path_rows)
         self.counters = Counters()
         # Memo keys prefilled by the *current* handle_batch call: their
         # subsequent handle() reads are batched work, not cache skips.
@@ -389,9 +427,12 @@ class BrTPFServer:
     # -- convenience ---------------------------------------------------------
 
     def metrics_snapshot(self) -> dict:
-        """Counters + per-layer cache accounting (one observability
-        surface over the unified fragment store; see metrics.py)."""
-        return layer_metrics(self)
+        """Canonical metrics envelope: counters + per-layer cache
+        accounting over the unified fragment store (metrics.py). The
+        same schema is served at ``GET /metrics`` by the ASGI app, so
+        the sim ``--live`` loop and the load generator read identical
+        keys over the wire and in-process."""
+        return metrics_snapshot(self)
 
     def reset_counters(self) -> None:
         self.counters.reset()

@@ -30,6 +30,7 @@ import numpy as np
 from .bgp import BGP
 from .cache import LRUCache
 from .client import BrTPFClient, TPFClient
+from .config import ServerConfig
 from .server import BrTPFServer
 
 
@@ -639,8 +640,8 @@ def main(argv=None) -> int:
     data = generate(scale, seed=args.seed)
     workload = generate_workload(data, args.queries, seed=args.seed + 1)
 
-    server = BrTPFServer(data.store, max_mpr=args.max_mpr,
-                         selector_backend="kernel")
+    config = ServerConfig(max_mpr=args.max_mpr, selector_backend="kernel")
+    server = BrTPFServer(data.store, config)
     traces = collect_traces(server, workload, "brtpf",
                             max_mpr=args.max_mpr)
     params = calibrate(server, workload)
@@ -658,8 +659,7 @@ def main(argv=None) -> int:
     if not args.live:
         return 0
 
-    live_server = BrTPFServer(data.store, max_mpr=args.max_mpr,
-                              selector_backend="kernel")
+    live_server = BrTPFServer(data.store, config)
     lv = live_replay(per_client, live_server, params,
                      batch_window_s=args.window, max_batch=args.max_batch)
     print(f"live: requests={lv.requests} flushes={lv.flushes} "
@@ -676,6 +676,18 @@ def main(argv=None) -> int:
     print(f"validation(cand): simulated={lv.simulated_cand} "
           f"observed={lv.observed_cand} "
           f"(|rel err|={lv.cand_within:.1%})")
+    # The live loop reports through the SAME canonical snapshot schema
+    # the serving edge exposes at GET /metrics (core/metrics.py), so a
+    # number printed here is directly comparable to what the load
+    # generator (benchmarks/latency.py) reads over the wire.
+    snap = live_server.metrics_snapshot()
+    c = snap["counters"]
+    print(f"metrics[{snap['v']}]: num_requests={c['num_requests']} "
+          f"kernel_launches={c['kernel_launches']} "
+          f"kernel_batched_requests={c['kernel_batched_requests']} "
+          f"launches_skipped={snap['launches_skipped']} "
+          f"selector_memo_hit_rate="
+          f"{snap['selector_memo']['hit_rate']:.3f}")
     return 0
 
 

@@ -17,8 +17,8 @@ from typing import Dict, Iterator, List
 
 import numpy as np
 
-from ..core import (BGP, BrTPFClient, BrTPFServer, TermDictionary,
-                    TripleStore, parse_bgp)
+from ..core import (BGP, BrTPFClient, BrTPFServer, ServerConfig,
+                    TermDictionary, TripleStore, parse_bgp)
 
 
 @dataclasses.dataclass
@@ -85,7 +85,8 @@ class BrTPFDataPipeline:
         self.batch_size = batch_size
         self.seq_len = seq_len
         self.seed = seed
-        self.server = BrTPFServer(corpus.store, max_mpr=max_mpr)
+        self.server = BrTPFServer(corpus.store,
+                                  ServerConfig(max_mpr=max_mpr))
         self.bgp = parse_bgp(selection_query, corpus.dictionary)
         self.stats = PipelineStats()
         self._selected = self._select()

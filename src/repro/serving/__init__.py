@@ -1,4 +1,26 @@
-"""Serving: KV-cache engine with batched prefill/decode."""
-from .engine import GenerationResult, ServingEngine
+"""Serving: the brTPF HTTP edge + the KV-cache LM engine.
+
+* ``repro.serving.http`` -- ASGI app over the async brTPF front end
+  (GET/POST /fragment, GET /metrics), ``TestClient``, ``run_app``.
+* ``repro.serving.transport`` -- client-side transports speaking the
+  brtpf/v1 wire schema (in-process loopback and ASGI/HTTP).
+* ``repro.serving.router`` -- front-end router fanning requests across
+  N server replicas.
+* ``repro.serving.engine`` -- the LM serving engine (jax; imported
+  lazily so the brTPF edge stays usable without an accelerator stack).
+"""
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .engine import GenerationResult, ServingEngine
 
 __all__ = ["GenerationResult", "ServingEngine"]
+
+
+def __getattr__(name: str):
+    # Lazy: engine.py imports jax at module scope; the HTTP edge and its
+    # tests must not pay (or require) that import.
+    if name in __all__:
+        from . import engine
+        return getattr(engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,162 @@
+"""Front-end replica router: one edge, N origin-server replicas.
+
+The ROADMAP's "millions of users" item needs more than one origin
+process behind the wire. :class:`ReplicaRouter` owns N replicas -- each
+a :class:`~repro.core.server.BrTPFServer` built from the SAME
+:class:`~repro.core.config.ServerConfig`, wrapped in its own
+:class:`~repro.core.batching.AsyncBrTPFServer` batching window -- over
+one shared :class:`~repro.core.store.TripleStore` (the dataset is one
+HDT image; what a replica owns privately is its unified
+:class:`~repro.core.fragments.FragmentStore` and its batching queue).
+
+Routing policies:
+
+* ``"pattern"`` (default) -- **fragment affinity**: a stable hash of
+  the triple pattern pins every request for a pattern to one replica,
+  the same way :meth:`~repro.core.federation.FederatedStore.plan_windows`
+  pins window pages to the shard that owns their key range. Affinity is
+  what makes a replica's fragment store *converge*: repeat requests for
+  a pattern always land where its fragments are resident, so the
+  launches-skipped rate of a fleet matches a single server's instead of
+  dividing by N.
+* ``"round_robin"`` -- pure load spreading; each replica sees 1/N of
+  every pattern, which maximizes batching-window mixing but fragments
+  residency. Kept as the baseline the affinity policy is measured
+  against.
+
+The router presents the same async backend surface as a single front
+end (``handle`` / ``metrics_snapshot`` / ``note_mappings`` / ``max_mpr``
+/ ``aclose``), so :class:`~repro.serving.http.BrTPFApp` and both
+transports work unchanged over a fleet; ``metrics_snapshot`` merges the
+replicas' counters into the canonical schema with per-replica detail
+under ``"replicas"``.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+from typing import List, Optional, Tuple
+
+from ..core.batching import (DEFAULT_BATCH_WINDOW_S, DEFAULT_MAX_BATCH,
+                             AsyncBrTPFServer)
+from ..core.config import ServerConfig
+from ..core.metrics import METRICS_VERSION, Counters
+from ..core.selectors import Fragment
+from ..core.server import Request
+
+POLICIES = ("pattern", "round_robin")
+
+
+def stable_replica_index(pattern_tuple: Tuple[int, int, int],
+                         n: int) -> int:
+    """Deterministic pattern -> replica assignment (process-independent,
+    unlike ``hash()``): an FNV-1a mix over the three components."""
+    acc = 0x811C9DC5
+    for c in pattern_tuple:
+        acc = ((acc ^ (c & 0xFFFFFFFF)) * 0x01000193) & 0xFFFFFFFF
+    return acc % n
+
+
+@dataclasses.dataclass
+class RouterStats:
+    requests: int = 0
+    per_replica: List[int] = dataclasses.field(default_factory=list)
+
+
+class ReplicaRouter:
+    """Fan requests across N async server replicas (shared store)."""
+
+    def __init__(self, store, config: Optional[ServerConfig] = None, *,
+                 replicas: int = 2, policy: str = "pattern",
+                 batch_window_s: float = DEFAULT_BATCH_WINDOW_S,
+                 max_batch: int = DEFAULT_MAX_BATCH) -> None:
+        if replicas < 1:
+            raise ValueError("replicas must be >= 1")
+        if policy not in POLICIES:
+            raise ValueError(f"unknown routing policy {policy!r}")
+        self.config = config or ServerConfig()
+        self.policy = policy
+        self.replicas = [
+            AsyncBrTPFServer.from_config(store, self.config,
+                                         batch_window_s=batch_window_s,
+                                         max_batch=max_batch)
+            for _ in range(replicas)]
+        self.stats = RouterStats(per_replica=[0] * replicas)
+        self._rr = 0
+
+    @property
+    def max_mpr(self) -> int:
+        return self.config.max_mpr
+
+    # -- routing -------------------------------------------------------------
+
+    def route(self, req: Request) -> int:
+        """Replica index for a request (non-advancing for affinity;
+        advances the round-robin pointer)."""
+        if self.policy == "pattern":
+            return stable_replica_index(req.pattern.as_tuple(),
+                                        len(self.replicas))
+        idx = self._rr
+        self._rr = (self._rr + 1) % len(self.replicas)
+        return idx
+
+    def note_mappings(self, req: Request) -> None:
+        """Wire-boundary mappings accounting; attributed to the replica
+        the pattern is pinned to (round-robin attribution lands on the
+        current pointer -- the merged counters are exact either way)."""
+        if self.policy == "pattern":
+            idx = stable_replica_index(req.pattern.as_tuple(),
+                                       len(self.replicas))
+        else:
+            idx = self._rr
+        self.replicas[idx].note_mappings(req)
+
+    async def handle(self, req: Request) -> Fragment:
+        idx = self.route(req)
+        self.stats.requests += 1
+        self.stats.per_replica[idx] += 1
+        return await self.replicas[idx].handle(req)
+
+    async def aclose(self) -> None:
+        await asyncio.gather(*[front.aclose() for front in self.replicas])
+
+    # -- observability -------------------------------------------------------
+
+    def metrics_snapshot(self) -> dict:
+        """Merged canonical snapshot: fleet-total counters and layer
+        sums at the top level (same keys as a single server's
+        ``metrics_snapshot``), per-replica envelopes under
+        ``"replicas"``."""
+        merged = Counters()
+        snaps = [front.metrics_snapshot() for front in self.replicas]
+        for front in self.replicas:
+            merged.merge(front.server.counters)
+        out = {
+            "v": METRICS_VERSION,
+            "counters": dataclasses.asdict(merged),
+            "launches_skipped": sum(
+                s["launches_skipped"] for s in snaps),
+            "selector_memo": _sum_layer(snaps, "selector_memo"),
+            "range_memo": _sum_layer(snaps, "range_memo"),
+            "router": {
+                "policy": self.policy,
+                "replicas": len(self.replicas),
+                "requests": self.stats.requests,
+                "requests_per_replica": list(self.stats.per_replica),
+            },
+            "replicas": snaps,
+        }
+        if any("http" in s for s in snaps):
+            out["http"] = _sum_layer([s for s in snaps if "http" in s],
+                                     "http")
+        return out
+
+
+def _sum_layer(snaps: List[dict], layer: str) -> dict:
+    hits = sum(s[layer]["hits"] for s in snaps)
+    misses = sum(s[layer]["misses"] for s in snaps)
+    out = {"hits": hits, "misses": misses,
+           "hit_rate": hits / max(hits + misses, 1)}
+    if all("entries" in s[layer] for s in snaps):
+        out["entries"] = sum(s[layer]["entries"] for s in snaps)
+    return out

@@ -1,0 +1,108 @@
+"""Client-side transports speaking the brtpf/v1 wire schema.
+
+A transport is what :class:`~repro.core.client.AsyncBrTPFClient` plugs
+into instead of a raw ``AsyncBrTPFServer``: anything with
+``async handle(Request) -> Fragment``, ``async metrics() -> dict``,
+``max_mpr`` and ``async aclose()``. Two implementations:
+
+* :class:`LoopbackTransport` -- in-process, but every request and
+  response round-trips through the SAME brtpf/v1 envelope serialization
+  the HTTP path uses (``core/wire.py``: ``to_wire -> bytes ->
+  from_wire`` both ways). It is the parity anchor: if the HTTP path and
+  the loopback path disagree, the bug is in the transport, not the
+  schema -- and it is what the CI-gated ``loopback:*`` latency budgets
+  measure, because it prices the serialization boundary without socket
+  noise.
+* :class:`AsgiTransport` -- drives a :class:`~repro.serving.http.BrTPFApp`
+  through real ASGI messages (``POST /fragment``), fully in-process but
+  through the complete HTTP layer: status codes (414 ->
+  :class:`~repro.core.server.MaxMprExceeded`), headers, body framing.
+  Point :func:`repro.serving.http.run_app` at the same app and the
+  identical bytes go over a socket.
+
+Both charge ``mappings_sent`` at the wire boundary via the backend's
+``note_mappings`` -- the in-process client path charges it client-side,
+so the two never double-count.
+"""
+from __future__ import annotations
+
+from ..core.server import MaxMprExceeded, Request
+from ..core.selectors import Fragment
+from ..core.wire import (WireError, dumps, fragment_from_wire,
+                         fragment_to_wire, loads, request_from_wire,
+                         request_to_wire)
+from .http import BrTPFApp, request_asgi
+
+
+class TransportError(RuntimeError):
+    """Non-414 HTTP failure surfaced by a transport."""
+
+    def __init__(self, status: int, message: str) -> None:
+        super().__init__(f"HTTP {status}: {message}")
+        self.status = status
+
+
+class LoopbackTransport:
+    """In-process transport over an ``AsyncBrTPFServer`` (or a
+    ``ReplicaRouter``) with full wire-envelope round-trips."""
+
+    def __init__(self, front) -> None:
+        self.front = front
+
+    @property
+    def max_mpr(self) -> int:
+        return self.front.max_mpr
+
+    async def handle(self, req: Request) -> Fragment:
+        # serialize -> bytes -> parse: the request the origin sees is
+        # exactly what an HTTP server would have decoded
+        wire_req = request_from_wire(loads(dumps(request_to_wire(req))))
+        self.front.note_mappings(wire_req)
+        frag = await self.front.handle(wire_req)   # MaxMprExceeded raises
+        return fragment_from_wire(loads(dumps(fragment_to_wire(frag))))
+
+    async def metrics(self) -> dict:
+        return loads(dumps(self.front.metrics_snapshot()))
+
+    async def aclose(self) -> None:
+        await self.front.aclose()
+
+
+class AsgiTransport:
+    """Transport over a :class:`~repro.serving.http.BrTPFApp` via real
+    ASGI request/response messages (the HTTP path minus the socket)."""
+
+    def __init__(self, app: BrTPFApp) -> None:
+        self.app = app
+
+    @property
+    def max_mpr(self) -> int:
+        return self.app.max_mpr
+
+    async def handle(self, req: Request) -> Fragment:
+        resp = await request_asgi(self.app, "POST", "/fragment",
+                                  body=dumps(request_to_wire(req)))
+        if resp.status_code == 200:
+            return fragment_from_wire(loads(resp.content))
+        message = _error_message(resp)
+        if resp.status_code == 414:
+            raise MaxMprExceeded(message)
+        if resp.status_code == 400:
+            raise WireError(message)
+        raise TransportError(resp.status_code, message)
+
+    async def metrics(self) -> dict:
+        resp = await request_asgi(self.app, "GET", "/metrics")
+        if resp.status_code != 200:
+            raise TransportError(resp.status_code, _error_message(resp))
+        return loads(resp.content)
+
+    async def aclose(self) -> None:
+        await self.app.aclose()
+
+
+def _error_message(resp) -> str:
+    try:
+        return loads(resp.content).get("error", "")
+    except WireError:
+        return resp.content.decode("utf-8", "replace")

@@ -1,0 +1,11 @@
+"""AS001 bad (ASGI handler): nested asyncio.run inside a route."""
+import asyncio
+
+
+async def app(scope, receive, send):
+    body = asyncio.run(fetch_fragment(scope))  # BAD: re-enters the loop
+    await send({"type": "http.response.body", "body": body})
+
+
+async def fetch_fragment(scope):
+    return b"{}"

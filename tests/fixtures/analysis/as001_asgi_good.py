@@ -1,0 +1,13 @@
+"""AS001 good (ASGI handler): fully async route, async HTTP client.
+
+``httpx.AsyncClient(...)`` is a constructor, not a blocking request --
+the rule matches the sync module-level verbs (httpx.get/post/request)
+exactly and must leave the async client alone.
+"""
+import httpx
+
+
+async def app(scope, receive, send):
+    async with httpx.AsyncClient() as client:
+        resp = await client.get("http://origin/fragment")
+    await send({"type": "http.response.body", "body": resp.content})

@@ -32,6 +32,7 @@ CASES = [
     ("ac001", "AC001"),
     ("ac002", "AC002"),
     ("as001", "AS001"),
+    ("as001_asgi", "AS001"),
     ("dc001", "DC001"),
     ("dc002", "DC002"),
 ]
