@@ -69,11 +69,13 @@ def make_server(page_size: int = 100, max_mpr: int = 30,
                 cache: Optional[LRUCache] = None,
                 selector_backend: str = "numpy",
                 shard_window: Optional[int] = None,
-                fast_path_rows: int = FAST_PATH_ROWS) -> BrTPFServer:
+                fast_path_rows: int = FAST_PATH_ROWS,
+                fuse_patterns: bool = True) -> BrTPFServer:
     config = ServerConfig(page_size=page_size, max_mpr=max_mpr,
                           selector_backend=selector_backend,
                           shard_window=shard_window,
-                          fast_path_rows=fast_path_rows)
+                          fast_path_rows=fast_path_rows,
+                          fuse_patterns=fuse_patterns)
     return BrTPFServer(dataset().store, config, cache=cache)
 
 

@@ -17,7 +17,10 @@ store, fixed per-shard window launches) and replayed under the TPU
 launch cost model, with and without cross-request batching
 (``SimParams.batch_window_s``), so the server-side speedup of the
 accelerated paths is a measured comparison on the same request streams,
-not an assertion. ``run_sharded_axis`` sweeps the sharded geometry
+not an assertion. ``run_hetero_mix`` A/Bs cross-pattern kernel fusion
+(docs/fusion.md) on identical heterogeneous request streams -- fused vs
+unfused launches-per-request, CI-gated via ``hetero_c16:*``;
+``run_sharded_axis`` sweeps the sharded geometry
 (per-shard window); ``run_warm_cache`` measures the unified fragment
 store (a warm pass must skip every launch -- CI-gated via
 ``budgets.json`` ``warm_cache:*``); ``run_cache_axis`` reproduces the
@@ -127,14 +130,21 @@ def run(full: bool = False) -> Dict:
 def _run_concurrent(backend: str, n: int, wl, request_budget: int,
                     batch_window_s: float = 2e-3,
                     max_batch: int = 64,
-                    shard_window: int = SHARD_WINDOW) -> Dict:
+                    shard_window: int = SHARD_WINDOW,
+                    fuse: bool = True,
+                    per_client=None) -> Dict:
     """Run ``n`` concurrent AsyncBrTPFClients over one front end;
-    returns wall-clock + launch accounting."""
+    returns wall-clock + launch accounting. ``per_client`` overrides
+    the default round-robin partition with an explicit per-client
+    workload assignment (the hetero-mix axis rotates overlapping
+    subsets so every client stays busy with a different query)."""
     server = make_server(selector_backend=backend,
-                         shard_window=shard_window)
+                         shard_window=shard_window,
+                         fuse_patterns=fuse)
     front = AsyncBrTPFServer(server, batch_window_s=batch_window_s,
                              max_batch=max_batch)
-    per_client = split_workload(wl, n)
+    if per_client is None:
+        per_client = split_workload(wl, n)
 
     async def main():
         clients = [AsyncBrTPFClient(front, request_budget=request_budget)
@@ -168,6 +178,15 @@ def _run_concurrent(backend: str, n: int, wl, request_budget: int,
         "shards": (server.federated.shards
                    if backend == "sharded" else 0),
         "batched_requests": c.kernel_batched_requests,
+        # cross-pattern fusion accounting (docs/fusion.md): launches
+        # that carried >= 2 pattern segments, and how many segments
+        # each such launch amortised
+        "fused_launches": c.fused_launches,
+        "fused_launches_per_request": c.fused_launches / reqs,
+        "fused_segments": c.fused_segments,
+        "fused_segments_per_launch": (
+            c.fused_segments / c.fused_launches
+            if c.fused_launches else 0.0),
         # unified fragment store: launches avoided by residency + the
         # per-layer hit rates of the server's metrics snapshot
         "launches_skipped": c.launches_skipped,
@@ -214,6 +233,70 @@ def run_async(full: bool = False, smoke: bool = False) -> Dict:
             f"batched={r['batched_requests']};"
             f"fast_path={r['fast_path']};"
             f"mean_batch={r['mean_batch']:.1f};"
+            f"completed={r['completed']};"
+            f"wall={r['wall_s']:.1f}s")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous-mix axis: cross-pattern fusion under concurrent load
+# ---------------------------------------------------------------------------
+
+
+def run_hetero_mix(full: bool = False, smoke: bool = False) -> Dict:
+    """Cross-pattern fusion axis (docs/fusion.md): N concurrent clients
+    each working a *different* query subset, so every batching window
+    holds a heterogeneous pattern mix (>= 4 distinct patterns in flight
+    at N >= 4). Each client count runs twice on the kernel backend --
+    fused and unfused -- on identical request streams, so the
+    launches-per-request drop is a same-stream A/B, not a model
+    estimate. ``launch_drop`` is the unfused/fused ratio; the CI gate
+    (``budgets.json`` ``hetero_c16:*`` + ``hetero_unfused_c16:*``)
+    bounds the fused side from above and the unfused side from below,
+    which pins the drop at smoke scale.
+
+    Client i works queries ``wl[i], wl[i+1], ... (mod len)`` -- rotated
+    *overlapping* subsets rather than a disjoint partition, so no
+    client finishes early and drains the mix into homogeneous
+    single-pattern windows (a disjoint split at 16 clients leaves the
+    straggler flushing alone, which is exactly the unfused regime)."""
+    cfg = BenchConfig.default()
+    wl = list(workload())
+    if smoke:
+        wl = wl[:8]
+        counts = [16]
+    else:
+        if not full:
+            wl = wl[:12]
+        counts = [1, 4, 16, 64]
+    per = min(4, len(wl))
+    out: Dict = {}
+    for n in counts:
+        per_client = [[wl[(i + j) % len(wl)] for j in range(per)]
+                      for i in range(n)]
+        fused = _run_concurrent("kernel", n, wl, cfg.request_budget,
+                                fuse=True, per_client=per_client)
+        unfused = _run_concurrent("kernel", n, wl, cfg.request_budget,
+                                  fuse=False, per_client=per_client)
+        r = dict(fused)
+        r["launches_unfused"] = unfused["launches"]
+        r["launches_per_request_unfused"] = \
+            unfused["launches_per_request"]
+        r["launch_drop"] = (
+            unfused["launches_per_request"]
+            / max(fused["launches_per_request"], 1e-12))
+        out[("hetero", n)] = r
+        out[("hetero_unfused", n)] = unfused
+        emit(
+            f"throughput/hetero_c{n}", 0.0,
+            f"launches_per_request={r['launches_per_request']:.3f};"
+            f"unfused={r['launches_per_request_unfused']:.3f};"
+            f"launch_drop={r['launch_drop']:.2f}x;"
+            f"fused_launches_per_request="
+            f"{r['fused_launches_per_request']:.3f};"
+            f"fused_segments_per_launch="
+            f"{r['fused_segments_per_launch']:.2f};"
+            f"cand_per_request={r['cand_streamed_per_request']:.0f};"
             f"completed={r['completed']};"
             f"wall={r['wall_s']:.1f}s")
     return out
@@ -403,6 +486,19 @@ def headline_metrics(out: Dict) -> Dict:
             "sharded_c8_cand_per_request":
                 sharded["cand_streamed_per_request"],
         })
+    hetero = out.get("hetero", {}).get(("hetero", 16))
+    if hetero:
+        h.update({
+            "hetero_c16_launches_per_request":
+                hetero["launches_per_request"],
+            "hetero_c16_launches_per_request_unfused":
+                hetero["launches_per_request_unfused"],
+            "hetero_c16_launch_drop": hetero["launch_drop"],
+            "hetero_c16_fused_launches_per_request":
+                hetero["fused_launches_per_request"],
+            "hetero_c16_fused_segments_per_launch":
+                hetero["fused_segments_per_launch"],
+        })
     warm = out.get("warm_cache")
     if warm:
         h["warm_cache_hit_rate"] = warm["hit_rate"]
@@ -420,6 +516,7 @@ def main(argv=None) -> int:
     args = parser.parse_args(argv)
     if args.smoke:
         results = run_async(smoke=True)
+        results.update(run_hetero_mix(smoke=True))
         results["warm_cache"] = run_warm_cache(smoke=True)
         failures = check_budgets(results)
         return 1 if failures else 0
@@ -427,6 +524,7 @@ def main(argv=None) -> int:
     if not args.async_only:
         out["replay"] = run(full=args.full)
     out["async"] = run_async(full=args.full)
+    out["hetero"] = run_hetero_mix(full=args.full)
     out["sharded_axis"] = run_sharded_axis(full=args.full)
     out["warm_cache"] = run_warm_cache()
     out["cache_axis"] = run_cache_axis(full=args.full)

@@ -22,8 +22,13 @@ from . import Rule
 REQUIRED_KWARGS = ("grid", "in_specs", "out_specs", "out_shape",
                    "interpret")
 
-# Capacity-constant name tokens that must be powers of two.
-_POW2_TOKENS = {"BT", "BM", "BR", "LANES", "WINDOW", "BUCKET"}
+# Capacity-constant name tokens that must be powers of two. SLOTS /
+# STREAM / SEGMENTS are the fused-launch table capacities (docs/
+# fusion.md): the fused stream is tiled and padded to pow2 tile counts,
+# and the slot/segment tables are sized from these caps, so a non-pow2
+# cap silently breaks the padding arithmetic.
+_POW2_TOKENS = {"BT", "BM", "BR", "LANES", "WINDOW", "BUCKET",
+                "SLOTS", "STREAM", "SEGMENTS"}
 
 
 def _dotted_tail(node: ast.expr) -> str:
@@ -183,6 +188,55 @@ def check_pow2_capacities(ctx: AnalysisContext) -> List[Finding]:
     return findings
 
 
+def _records_segments(mod: Module) -> bool:
+    """Does this module append a ``LaunchRecord(...)`` carrying a
+    ``segments=`` kwarg to a ``launches`` sink anywhere?"""
+    for node in ast.walk(mod.tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "append"
+                and _dotted_tail(node.func.value) == "launches"):
+            continue
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            if (isinstance(arg, ast.Call)
+                    and _dotted_tail(arg.func) == "LaunchRecord"
+                    and any(kw.arg == "segments" for kw in arg.keywords)):
+                return True
+    return False
+
+
+def check_fused_launch_accounting(ctx: AnalysisContext) -> List[Finding]:
+    """KL005: every module that launches the fused bind-join records
+    its segment count into a LaunchRecord sink.
+
+    ``fused_segments_per_launch`` (the headline metric of docs/
+    fusion.md) and the simulator's fused cost model both read segment
+    counts off ``LaunchRecord.segments`` -- a fused call site that does
+    not append ``launches.append(LaunchRecord(..., segments=...))``
+    silently drops its launches from that accounting. The match is on
+    the exact call name ``bindjoin_fused`` (the marshaling op), not its
+    ``*_pallas`` / ``*_ref`` internals, which are below the accounting
+    boundary.
+    """
+    findings: List[Finding] = []
+    for mod in ctx.modules:
+        calls = [node for node in ast.walk(mod.tree)
+                 if isinstance(node, ast.Call)
+                 and _dotted_tail(node.func) == "bindjoin_fused"]
+        if not calls or _records_segments(mod):
+            continue
+        call = calls[0]
+        findings.append(Finding(
+            file=mod.rel, line=call.lineno, col=call.col_offset,
+            rule="KL005", severity=SEVERITY_ERROR,
+            message=("module calls bindjoin_fused but never records a "
+                     "segment count -- add launches.append("
+                     "LaunchRecord(..., segments=...)) so fused "
+                     "launches stay visible to "
+                     "fused_segments_per_launch accounting")))
+    return findings
+
+
 RULES = [
     Rule("KL001", "pallas_call declares full launch geometry",
          check_pallas_kwargs),
@@ -192,4 +246,6 @@ RULES = [
          check_traced_grid),
     Rule("KL004", "capacity constants are powers of two",
          check_pow2_capacities),
+    Rule("KL005", "fused launches record segment counts",
+         check_fused_launch_accounting),
 ]

@@ -74,8 +74,9 @@ class _ClientBase:
     # -- HTTP boundary -------------------------------------------------------
 
     def _fetch(self, pattern: TriplePattern,
-               omega: Optional[np.ndarray], page: int):
-        req = Request(pattern, omega, page)
+               omega: Optional[np.ndarray], page: int,
+               count_only: bool = False):
+        req = Request(pattern, omega, page, count_only)
         cached = self.client_cache.get(req.key())
         if cached is not None:
             return cached  # local hit: nothing on the wire
@@ -102,6 +103,10 @@ class _ClientBase:
             "pattern_key": pattern.as_tuple(),
             "cand": (after.kernel_cand_streamed
                      - before.kernel_cand_streamed),
+            "cand_rows": (after.kernel_cand_rows
+                          - before.kernel_cand_rows),
+            "cand_full_rows": (after.kernel_cand_full_rows
+                               - before.kernel_cand_full_rows),
             "pats": after.kernel_pat_slots - before.kernel_pat_slots,
             "launches": (after.kernel_launches
                          - before.kernel_launches),
@@ -214,11 +219,19 @@ def plan_join_order(bgp: BGP, cnts: Sequence[int]) -> List[int]:
 
 
 class BrTPFClient(_ClientBase):
+    """``count_probes=True`` issues the upfront cardinality probes as
+    count-only requests (docs/fusion.md): the server answers with the
+    Definition-2 ``cnt`` and an empty data page, never materializing
+    (or shipping) rows the planner only needed an estimate from. The
+    most selective pattern's first data page is then fetched normally
+    (the classic probe doubles as page 0; a count probe cannot)."""
+
     def __init__(self, server: BrTPFServer, max_mpr: Optional[int] = None,
                  request_budget: Optional[int] = None,
-                 tick=None) -> None:
+                 tick=None, count_probes: bool = False) -> None:
         super().__init__(server, request_budget, tick)
         self.max_mpr = max_mpr if max_mpr is not None else server.max_mpr
+        self.count_probes = bool(count_probes)
 
     def execute(self, bgp: BGP) -> ExecutionResult:
         self._requests_used = 0
@@ -249,15 +262,18 @@ class BrTPFClient(_ClientBase):
         # the cheapest pattern *connected* to the already-bound variables
         # (avoiding cartesian products -- a bind join against a pattern
         # sharing no variable restricts nothing).
-        probes = [self._fetch(tp, None, 0) for tp in bgp.patterns]
+        probes = [self._fetch(tp, None, 0, count_only=self.count_probes)
+                  for tp in bgp.patterns]
         if min(p.cnt for p in probes) == 0:
             return np.empty((0, nv), dtype=np.int32)
         order = plan_join_order(bgp, [p.cnt for p in probes])
 
-        # Iterator 1: plain TPF over the most selective pattern.
+        # Iterator 1: plain TPF over the most selective pattern. A count
+        # probe carries no data page to reuse as page 0.
         first_idx = order[0]
         first_tp = bgp.patterns[first_idx]
-        triples = self._fetch_all_pages(first_tp, None, probes[first_idx])
+        first_frag = None if self.count_probes else probes[first_idx]
+        triples = self._fetch_all_pages(first_tp, None, first_frag)
         solutions = _mappings_from_matches(first_tp, triples, nv)
         self._tick("join", int(triples.shape[0]))
 
@@ -303,7 +319,8 @@ class AsyncBrTPFClient:
 
     def __init__(self, front, max_mpr: Optional[int] = None,
                  request_budget: Optional[int] = None,
-                 client_cache: bool = True) -> None:
+                 client_cache: bool = True,
+                 count_probes: bool = False) -> None:
         # ``front`` is anything with ``async handle(Request) -> Fragment``
         # and a ``max_mpr`` bound: an AsyncBrTPFServer (in-process) or a
         # Transport (repro.serving.transport -- loopback or HTTP). Only
@@ -319,12 +336,17 @@ class AsyncBrTPFClient:
         self._requests_used = 0
         self._received = 0
         self.client_cache = ClientFragmentCache(client_cache)
+        # count-only cardinality probes (docs/fusion.md): with a
+        # heterogeneous BGP the concurrent probes land in one batching
+        # window and fuse into cnt-only segments of one launch.
+        self.count_probes = bool(count_probes)
 
     # -- HTTP boundary (async) ----------------------------------------------
 
     async def _fetch(self, pattern: TriplePattern,
-                     omega: Optional[np.ndarray], page: int):
-        req = Request(pattern, omega, page)
+                     omega: Optional[np.ndarray], page: int,
+                     count_only: bool = False):
+        req = Request(pattern, omega, page, count_only)
         cached = self.client_cache.get(req.key())
         if cached is not None:
             return cached
@@ -403,15 +425,16 @@ class AsyncBrTPFClient:
     async def _run_pipeline(self, bgp: BGP) -> np.ndarray:
         nv = bgp.num_vars
         probes = await self._gather(
-            [self._fetch(tp, None, 0) for tp in bgp.patterns])
+            [self._fetch(tp, None, 0, count_only=self.count_probes)
+             for tp in bgp.patterns])
         if min(p.cnt for p in probes) == 0:
             return np.empty((0, nv), dtype=np.int32)
         order = plan_join_order(bgp, [p.cnt for p in probes])
 
         first_idx = order[0]
         first_tp = bgp.patterns[first_idx]
-        triples = await self._fetch_all_pages(first_tp, None,
-                                              probes[first_idx])
+        first_frag = None if self.count_probes else probes[first_idx]
+        triples = await self._fetch_all_pages(first_tp, None, first_frag)
         solutions = _mappings_from_matches(first_tp, triples, nv)
 
         for idx in order[1:]:

@@ -52,6 +52,12 @@ class ServerConfig:
     * ``fast_path_rows`` -- small-work threshold below which the
       accelerated backends route to the numpy block evaluation
       (docs/pruning.md); 0 disables the fast path.
+    * ``fuse_patterns`` -- cross-pattern kernel fusion (docs/fusion.md):
+      when a batch carries requests for >= 2 distinct triple patterns,
+      the accelerated backends serve the whole heterogeneous batch with
+      fused launches (one candidate stream, per-segment slot tables)
+      instead of one grouped launch sequence per pattern. Fragments are
+      byte-identical either way; the toggle exists for A/B accounting.
     """
 
     page_size: int = DEFAULT_PAGE_SIZE
@@ -62,6 +68,7 @@ class ServerConfig:
     shard_window: Optional[int] = None
     shard_axis: str = "data"
     fast_path_rows: int = 0
+    fuse_patterns: bool = True
 
     def __post_init__(self) -> None:
         if self.selector_backend not in SELECTOR_BACKENDS:

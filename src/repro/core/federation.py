@@ -36,8 +36,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import enable_x64, shard_map
 from ..kernels import ops as kops
-from .fragments import FragmentStore
-from .kernel_selectors import (LaunchRecord, consult_fragments,
+from .fragments import FragmentStore, fragment_key
+from .kernel_selectors import (_EMPTY, FUSED_BT, FusedSegment,
+                               LaunchRecord, _fused_base_mask,
+                               consult_fragments, consult_segment,
+                               finish_segment, fusion_legality,
                                marshal_pattern_grid, record_fragments,
                                select_block_numpy, stream_order)
 from .rdf import TriplePattern, is_var
@@ -109,6 +112,11 @@ class WindowPlan:
     candidate_rows: int      # rows inside relevant sub-ranges (<= above)
     pruned: bool
     pages_total: int         # pages an unpruned plan would launch
+    # Pruned plans carry the shard-local geometry that sub-window
+    # compaction needs: per shard the base range bounds and the merged
+    # live spans (absolute shard-local positions). None when unpruned.
+    shard_bounds: Optional[List[Tuple[int, int]]] = None
+    shard_spans: Optional[List[np.ndarray]] = None
 
 
 @dataclasses.dataclass
@@ -304,16 +312,21 @@ class FederatedStore:
         hk = self.indexes[iname].host_keys
         pages: set = set()
         candidate_rows = 0
+        shard_bounds: List[Tuple[int, int]] = []
+        shard_spans: List[np.ndarray] = []
         for s in range(hk.shape[0]):
             start = int(np.searchsorted(hk[s], shell.lo_key,
                                         side="left"))
             end = int(np.searchsorted(hk[s], shell.hi_key,
                                       side="right"))
+            shard_bounds.append((start, end))
             if end <= start:
+                shard_spans.append(np.empty((0, 2), dtype=np.int64))
                 continue
             a = np.searchsorted(hk[s], lo_keys, side="left")
             b = np.searchsorted(hk[s], hi_keys, side="right")
             spans = merge_spans(np.stack([a, b], axis=1))
+            clipped: List[Tuple[int, int]] = []
             for slo, shi in spans:
                 # instantiation intervals are sub-intervals of the base
                 # range under the same order, but clip defensively
@@ -322,13 +335,18 @@ class FederatedStore:
                 if shi <= slo:
                     continue
                 candidate_rows += shi - slo
+                clipped.append((slo, shi))
                 pages.update(range((slo - start) // window,
                                    (shi - 1 - start) // window + 1))
+            shard_spans.append(
+                np.asarray(clipped, dtype=np.int64).reshape(-1, 2))
         pruned = WindowPlan(order=iname, lo_key=shell.lo_key,
                             hi_key=shell.hi_key, pages=sorted(pages),
                             range_rows=shell.range_rows,
                             candidate_rows=candidate_rows, pruned=True,
-                            pages_total=shell.pages_total)
+                            pages_total=shell.pages_total,
+                            shard_bounds=shard_bounds,
+                            shard_spans=shard_spans)
         # the base pattern's own index may beat sub-range skipping under
         # the instantiations' index (fewer actual window dispatches win)
         return pruned if len(pruned.pages) <= len(unpruned.pages) \
@@ -516,6 +534,166 @@ class FederatedStore:
         self._steps[key] = fn
         return fn
 
+    def lowerable_windowed_grouped_compact(self, wc: int, groups: int,
+                                           wild_cols: tuple = (0, 1, 2)):
+        """Sub-window compacted grouped step (docs/fusion.md).
+
+        Instead of streaming a contiguous window, each shard gathers an
+        explicit row-index vector of capacity ``wc`` (< window),
+        host-computed from the ``merge_spans`` live spans inside the
+        page's span -- the PR 5 leftover: when sub-ranges leave large
+        dead gaps *inside* a window, the gather skips them at row
+        granularity rather than only skipping whole disjoint pages.
+        Rows outside every per-binding sub-range are provably match-free
+        (each instantiation's matches lie inside its own key interval),
+        so dropping them cannot change the response; the caller records
+        the reclaimed rows on the :class:`LaunchRecord`.
+
+        ``wc`` is a power of two (bounded jit cache; the caller only
+        compacts when ``wc <= window // 2``, so the gather pays for
+        itself). Index -1 marks padding slots.
+        """
+        key = ("compact", wc, groups, wild_cols)
+        fn = self._steps.get(key)
+        if fn is not None:
+            return fn
+        mesh, axis = self.mesh, self.axis
+        bt = min(kops.DEFAULT_BT, wc)
+
+        def step(triples, valid, pats, pat_valid, base_vec, row_sel):
+            def shard_fn(cand, cand_valid, p, pv, bv, rs):
+                rs = rs.reshape(wc)
+                safe = jnp.maximum(rs, 0)
+                win = jnp.take(cand, safe, axis=0)        # (wc, 3)
+                wv = jnp.take(cand_valid, safe, axis=0) & (rs >= 0)
+                keep, idx, nmatch = kops.bindjoin_grouped(win, p, pv,
+                                                          bt=bt)
+                base = kops.tpf_match(win, bv)
+                mask = keep & base[:, None] & wv[:, None]      # (wc, G)
+                cnts = jnp.sum(jnp.where(mask, nmatch, 0), axis=0)
+                rows, counts = jax.vmap(
+                    lambda m: kops.compact_mask(m, wc),
+                    in_axes=1, out_axes=0)(mask)       # (G, wc), (G,)
+                safe2 = jnp.maximum(rows, 0)
+                page = jnp.take(win, safe2, axis=0)        # (G, wc, 3)
+                first = jax.vmap(lambda r, col: col[r],
+                                 in_axes=(0, 1))(safe2, idx)   # (G, wc)
+                page = page[:, :, list(wild_cols)]
+                page = jnp.where((rows >= 0)[:, :, None], page, -1)
+                first = jnp.where(rows >= 0, first, -1)
+                page = jax.lax.all_gather(page, axis)
+                first = jax.lax.all_gather(first, axis)
+                counts = jax.lax.all_gather(counts, axis)
+                cnts = jax.lax.all_gather(cnts, axis)
+                return page, first, counts, cnts
+
+            fn = shard_map(
+                shard_fn, mesh=mesh,
+                in_specs=(P(axis, None), P(axis), P(), P(), P(),
+                          P(axis, None)),
+                out_specs=(P(), P(), P(), P()),
+                check_vma=False,
+            )
+            return fn(triples, valid, pats, pat_valid, base_vec, row_sel)
+
+        fn = jax.jit(step)
+        self._steps[key] = fn
+        return fn
+
+    def lowerable_windowed_fused(self, window: int, segs: int,
+                                 groups: int):
+        """Cross-pattern fused windowed step: S segments, one launch.
+
+        The sharded twin of ``kops.bindjoin_fused`` (docs/fusion.md):
+        per round, every shard slices ONE window of *each* segment's
+        bound-prefix range under this step's index order, concatenates
+        the S windows into one tile-aligned stream, and the fused kernel
+        resolves each tile's segment from its program id. Per-segment
+        ``(lo, hi)`` keys and page indexes arrive as int64/int32 [S]
+        vectors; a page index of -1 deactivates its segment for the
+        round (its rows are masked out of every group), which is how
+        segments with fewer planned pages ride along. Windows are padded
+        to the next power of two so the fused tile evenly divides every
+        segment's extent.
+
+        Returns (page, first, counts, cnts) shaped
+        (shards, S, G, Wp[, 3]) / (shards, S, G) after the all-gather --
+        no column projection: segments bind different components, so the
+        full triples travel back.
+        """
+        window = max(1, min(window, self.shard_n))
+        wp = _pow2(window)
+        key = ("fused", window, segs, groups)
+        fn = self._steps.get(key)
+        if fn is not None:
+            return fn
+        mesh, axis = self.mesh, self.axis
+        bt = min(FUSED_BT, wp)
+        tiles_per_seg = wp // bt
+
+        def step(triples, valid, keys, pats, pat_valid, base_vecs,
+                 lo_keys, hi_keys, page_idx):
+            def shard_fn(cand, cand_valid, k, p, pv, bvs, lo, hi, pi):
+                wins, valids = [], []
+                for si in range(segs):
+                    start = jnp.searchsorted(k, lo[si], side="left")
+                    end = jnp.searchsorted(k, hi[si], side="right")
+                    win, wv, ins = _window_slice(
+                        cand, cand_valid, start, end, pi[si], window)
+                    ok = wv & ins & (pi[si] >= 0)
+                    if wp > window:
+                        win = jnp.concatenate(
+                            [win, jnp.zeros((wp - window, 3), win.dtype)])
+                        ok = jnp.concatenate(
+                            [ok, jnp.zeros((wp - window,), bool)])
+                    wins.append(win)
+                    valids.append(ok)
+                stream = jnp.concatenate(wins, axis=0)   # (S * Wp, 3)
+                svalid = jnp.concatenate(valids, axis=0)
+                seg_of_tile = jnp.repeat(
+                    jnp.arange(segs, dtype=jnp.int32), tiles_per_seg)
+                keep, idx, nmatch = kops.bindjoin_fused(
+                    stream, seg_of_tile, p, pv, bt=bt)
+                seg_of_row = jnp.repeat(seg_of_tile, bt)
+                base = _fused_base_mask(stream, seg_of_row, bvs)
+                mask = keep & base[:, None] & svalid[:, None]
+                mm = mask.reshape(segs, wp, groups)
+                cnts = jnp.where(mask, nmatch, 0).reshape(
+                    segs, wp, groups).sum(axis=1)        # (S, G)
+                rows, counts = jax.vmap(jax.vmap(
+                    lambda m: kops.compact_mask(m, wp),
+                    in_axes=1, out_axes=0))(mm)   # (S, G, Wp), (S, G)
+                safe = jnp.maximum(rows, 0)
+                win_all = stream.reshape(segs, wp, 3)
+                page = jax.vmap(
+                    lambda w, r: jnp.take(w, r, axis=0))(win_all, safe)
+                idxr = idx.reshape(segs, wp, groups)
+                first = jax.vmap(
+                    lambda ix, r: jax.vmap(lambda rg, col: col[rg],
+                                           in_axes=(0, 1))(r, ix)
+                )(idxr, safe)                            # (S, G, Wp)
+                page = jnp.where((rows >= 0)[..., None], page, -1)
+                first = jnp.where(rows >= 0, first, -1)
+                page = jax.lax.all_gather(page, axis)
+                first = jax.lax.all_gather(first, axis)
+                counts = jax.lax.all_gather(counts, axis)
+                cnts = jax.lax.all_gather(cnts, axis)
+                return page, first, counts, cnts
+
+            fn = shard_map(
+                shard_fn, mesh=mesh,
+                in_specs=(P(axis, None), P(axis), P(axis), P(), P(),
+                          P(), P(), P(), P()),
+                out_specs=(P(), P(), P(), P()),
+                check_vma=False,
+            )
+            return fn(triples, valid, keys, pats, pat_valid, base_vecs,
+                      lo_keys, hi_keys, page_idx)
+
+        fn = jax.jit(step)
+        self._steps[key] = fn
+        return fn
+
     def execute_windowed(self, tp: TriplePattern,
                          omega: Optional[np.ndarray], max_mpr: int,
                          capacity: int, window: int) -> np.ndarray:
@@ -651,38 +829,106 @@ class ShardedSelector:
                 results[i] = res
         return results
 
+    def select_count(self, tp: TriplePattern, omega: Optional[np.ndarray],
+                     insts: Optional[List[TriplePattern]] = None) -> int:
+        """Count-only sharded selection: Definition-2 ``cnt``, no row
+        gather, no all-gathered pages consumed (docs/fusion.md)."""
+        if self.fragments is not None:
+            got = self.fragments.peek_data(
+                fragment_key(tp.as_tuple(), omega), touch=True)
+            if got is not None:
+                self.fragments.note_skip()
+                self.launches.append(LaunchRecord(
+                    cand_streamed=0, pat_slots=0, groups=1, skipped=True))
+                return int(got[1])
+        patterns = [insts if insts is not None
+                    else instantiate_patterns(tp, omega)]
+        return self._launch_groups(tp, [omega], patterns,
+                                   count_only=True)[0][1]
+
     def _launch_groups(
         self, tp: TriplePattern, omegas: Sequence[Optional[np.ndarray]],
         patterns: List[List[TriplePattern]],
+        count_only: bool = False,
     ) -> List[Tuple[np.ndarray, int]]:
         """Windowed sharded launches over the store-miss groups."""
-        g = len(omegas)
+        all_insts = [p for group in patterns for p in group]
+        plan = self.fed.plan_windows(tp, all_insts, self.window)
+        return self._launch_plan(tp, patterns, plan,
+                                 count_only=count_only)
+
+    def _gather_fast_block(self, tp: TriplePattern,
+                           all_insts: List[TriplePattern]) -> np.ndarray:
+        """Host-side pruned candidate block for the small-work path."""
+        sr = self.store.subranges(tp, insts=all_insts)
+        if sr is not None and sr.rows < len(
+                self.store.candidate_range(tp)):
+            return self.store.gather_subranges(sr)
+        return self.store.candidate_range(tp).triples
+
+    def _page_row_sel(self, plan: WindowPlan, window: int,
+                      page: int) -> Optional[np.ndarray]:
+        """Sub-window compaction plan for one page (docs/fusion.md).
+
+        Intersects each shard's live ``merge_spans`` sub-ranges with the
+        page's owned span; if the widest shard's live row count, padded
+        to a power of two, is at most half the window, returns the
+        int32 [shards, wc] gather-index table (-1 padding) for
+        ``lowerable_windowed_grouped_compact``. Otherwise (dead gaps too
+        small to pay for the gather) returns None and the page streams
+        contiguously as before.
+        """
+        if not plan.pruned or plan.shard_spans is None \
+                or plan.shard_bounds is None:
+            return None
+        per_shard: List[np.ndarray] = []
+        need = 0
+        for (start, end), spans in zip(plan.shard_bounds,
+                                       plan.shard_spans, strict=True):
+            plo = start + page * window
+            phi = min(plo + window, end)
+            segs = [np.arange(max(int(lo), plo), min(int(hi), phi),
+                              dtype=np.int64)
+                    for lo, hi in spans]
+            segs = [a for a in segs if a.size]
+            live = np.concatenate(segs) if segs \
+                else np.empty((0,), dtype=np.int64)
+            per_shard.append(live)
+            need = max(need, int(live.size))
+        wc = _pow2(max(need, 1))
+        if wc > window // 2:
+            return None
+        sel = np.full((len(per_shard), wc), -1, dtype=np.int32)
+        for s, live in enumerate(per_shard):
+            sel[s, :live.size] = live.astype(np.int32)
+        return sel
+
+    def _launch_plan(
+        self, tp: TriplePattern, patterns: List[List[TriplePattern]],
+        plan: WindowPlan, count_only: bool = False,
+    ) -> List[Tuple[np.ndarray, int]]:
+        """Execute one planned (grouped) request: fast path or windows."""
+        g = len(patterns)
         m = max(len(p) for p in patterns)
         window = self.window
-        all_insts = [p for group in patterns for p in group]
-        plan = self.fed.plan_windows(tp, all_insts, window)
-        empty = np.empty((0, 3), dtype=np.int32)
         if not plan.pages:
             # no window can contain a match on any shard (empty range,
             # or every sub-range empty): zero launches, cnt = 0
-            return [(empty, 0)] * g
+            return [(_EMPTY, 0)] * g
 
         # Small-work fast path: the plan's relevant rows cannot pay for
         # window dispatches -- evaluate the groups over the pruned block
         # gathered from the (host) oracle store instead.
         if (self.store is not None
                 and 0 < plan.candidate_rows <= self.fast_path_rows):
-            sr = self.store.subranges(tp, insts=all_insts)
-            if sr is not None and sr.rows < len(
-                    self.store.candidate_range(tp)):
-                block = self.store.gather_subranges(sr)
-            else:
-                block = self.store.candidate_range(tp).triples
+            block = self._gather_fast_block(
+                tp, [p for group in patterns for p in group])
             self.launches.append(LaunchRecord(
                 cand_streamed=int(block.shape[0]), pat_slots=0, groups=g,
                 pruned=plan.pruned, cand_full=plan.range_rows,
                 fast_path=True))
-            return select_block_numpy(block, tp, patterns)
+            return select_block_numpy(block, tp, patterns,
+                                      count_only=count_only)
 
         # pad the grid to bucketed static shapes (bounded jit cache):
         # groups to a power of two, pattern slots to the kernel m-tile.
@@ -707,17 +953,33 @@ class ShardedSelector:
             valid_dev = jnp.asarray(valid)
             bv_dev = jnp.asarray(base_vec)
             for page_idx in plan.pages:
-                pages, first, counts, cnts, _range_len = fn(
-                    idx.triples, idx.valid, idx.keys,
-                    pats_dev, valid_dev, bv_dev, lo_dev, hi_dev,
-                    jnp.asarray(page_idx, jnp.int32))
-                pages = np.asarray(pages)
-                first = np.asarray(first)
+                row_sel = self._page_row_sel(plan, window, page_idx)
+                if row_sel is not None:
+                    # sub-window compaction: gather only the live rows
+                    wc = row_sel.shape[1]
+                    cfn = self.fed.lowerable_windowed_grouped_compact(
+                        wc, gpad, wild_cols=wild_cols)
+                    pages, first, counts, cnts = cfn(
+                        idx.triples, idx.valid, pats_dev, valid_dev,
+                        bv_dev, jnp.asarray(row_sel))
+                    self.launches.append(LaunchRecord(
+                        cand_streamed=wc, pat_slots=gpad * mp, groups=g,
+                        pruned=True, cand_full=window,
+                        reclaimed_rows=window - wc))
+                else:
+                    pages, first, counts, cnts, _range_len = fn(
+                        idx.triples, idx.valid, idx.keys,
+                        pats_dev, valid_dev, bv_dev, lo_dev, hi_dev,
+                        jnp.asarray(page_idx, jnp.int32))
+                    self.launches.append(LaunchRecord(
+                        cand_streamed=window, pat_slots=gpad * mp,
+                        groups=g, pruned=plan.pruned, cand_full=window))
                 counts = np.asarray(counts)
                 cnt_total += np.asarray(cnts)[:, :g].sum(axis=0)
-                self.launches.append(LaunchRecord(
-                    cand_streamed=window, pat_slots=gpad * mp, groups=g,
-                    pruned=plan.pruned, cand_full=window))
+                if count_only:
+                    continue   # cnt-only: skip the gather epilogue
+                pages = np.asarray(pages)
+                first = np.asarray(first)
                 for s in range(pages.shape[0]):
                     for gi in range(g):
                         n = int(counts[s, gi])
@@ -727,8 +989,8 @@ class ShardedSelector:
 
         out: List[Tuple[np.ndarray, int]] = []
         for gi in range(g):
-            if not kept[gi]:
-                out.append((empty, int(cnt_total[gi])))
+            if count_only or not kept[gi]:
+                out.append((_EMPTY, int(cnt_total[gi])))
                 continue
             proj = np.concatenate(kept[gi], axis=0)
             first_g = np.concatenate(firsts[gi], axis=0)
@@ -743,3 +1005,173 @@ class ShardedSelector:
             out.append((stream_order(full, first_g, patterns[gi]),
                         int(cnt_total[gi])))
         return out
+
+    # -- cross-pattern fusion (docs/fusion.md) -------------------------------
+
+    def select_fused(self, segments: Sequence[FusedSegment]
+                     ) -> List[List[Tuple[np.ndarray, int]]]:
+        """Serve S heterogeneous segments with fused windowed launches.
+
+        The sharded twin of ``KernelSelector.select_fused``: segments
+        are planned individually (residency skips, ``plan_windows``
+        page skipping, and the small-work fast path behave exactly as
+        unfused), then the launch-worthy segments are grouped BY INDEX
+        ORDER -- only same-order segments can share a window slice pass
+        -- and each order group runs ``lowerable_windowed_fused``: per
+        round, one launch streams one window of every active segment.
+        Segments with fewer planned pages go inactive (page index -1)
+        in later rounds. ``fusion_legality`` refusals and singleton
+        order groups fall back to per-segment ``_launch_plan`` on the
+        already-computed plans.
+        """
+        results: List[List[Optional[Tuple[np.ndarray, int]]]] = [
+            [None] * len(seg.omegas) for seg in segments]
+        work: List[Tuple[int, List[List[TriplePattern]],
+                         List[Optional[np.ndarray]], List[int],
+                         WindowPlan]] = []
+        for si, seg in enumerate(segments):
+            patterns = seg.patterns
+            if patterns is None:
+                patterns = [instantiate_patterns(seg.tp, om)
+                            for om in seg.omegas]
+            live = consult_segment(self.fragments, seg, results[si],
+                                   self.launches)
+            if not live:
+                continue
+            omegas_live = [seg.omegas[i] for i in live]
+            pats_live = [patterns[i] for i in live]
+            all_insts = [p for group in pats_live for p in group]
+            plan = self.fed.plan_windows(seg.tp, all_insts, self.window)
+            if not plan.pages:
+                finish_segment(self.fragments, seg, omegas_live,
+                               [(_EMPTY, 0)] * len(live), results[si],
+                               live)
+                continue
+            if (self.store is not None
+                    and 0 < plan.candidate_rows <= self.fast_path_rows):
+                block = self._gather_fast_block(seg.tp, all_insts)
+                self.launches.append(LaunchRecord(
+                    cand_streamed=int(block.shape[0]), pat_slots=0,
+                    groups=len(live), pruned=plan.pruned,
+                    cand_full=plan.range_rows, fast_path=True))
+                fresh = select_block_numpy(block, seg.tp, pats_live,
+                                           count_only=seg.count_only)
+                finish_segment(self.fragments, seg, omegas_live, fresh,
+                               results[si], live)
+                continue
+            work.append((si, pats_live, omegas_live, live, plan))
+        if not work:
+            return results
+
+        # Legality: declared dependencies refuse the whole batch
+        # (conservative -- DaCe-style fusion only for independent
+        # states); geometry ceilings are checked per order group below.
+        dep_reason = fusion_legality(
+            [segments[w[0]] for w in work], stream_rows=0, slot_table=0)
+
+        by_order: Dict[str, List] = {}
+        for item in work:
+            by_order.setdefault(item[4].order, []).append(item)
+        wp = _pow2(self.window)
+        for items in by_order.values():
+            s_pad = _pow2(len(items))
+            g_pad = _pow2(max(len(w[3]) for w in items))
+            m_max = max(max(len(p) for p in w[1]) for w in items)
+            mp = kops.padded_pattern_slots(m_max)
+            reason = dep_reason or fusion_legality(
+                [segments[w[0]] for w in items],
+                stream_rows=s_pad * wp,
+                slot_table=s_pad * g_pad * mp)
+            if len(items) == 1 or reason is not None:
+                # documented fallback: per-segment grouped launches on
+                # the plans already in hand (no re-probe, no re-plan)
+                for si, pats_live, omegas_live, live, plan in items:
+                    seg = segments[si]
+                    fresh = self._launch_plan(seg.tp, pats_live, plan,
+                                              count_only=seg.count_only)
+                    finish_segment(self.fragments, seg, omegas_live,
+                                   fresh, results[si], live)
+                continue
+            self._launch_fused_order(items, segments, results,
+                                     s_pad, g_pad, mp)
+        return results
+
+    def _launch_fused_order(self, items, segments, results,
+                            s_pad: int, g_pad: int, mp: int) -> None:
+        """Run one order group's fused windowed rounds + epilogue."""
+        window = self.window
+        wp = _pow2(window)
+        s = len(items)
+        order = items[0][4].order
+        idx = self.fed.indexes[order]
+        pats_all = np.full((s_pad, g_pad, mp, 3), -1, dtype=np.int32)
+        valid_all = np.zeros((s_pad, g_pad, mp), dtype=np.int32)
+        base_vecs = np.zeros((s_pad, 8), dtype=np.int32)
+        lo = np.zeros((s_pad,), dtype=np.int64)
+        hi = np.full((s_pad,), -1, dtype=np.int64)  # empty range for pads
+        for wi, (si, pats_live, _om, _live, plan) in enumerate(items):
+            p_grid, v_grid, bv = marshal_pattern_grid(
+                segments[si].tp, pats_live, g_pad, mp)
+            pats_all[wi], valid_all[wi], base_vecs[wi] = p_grid, v_grid, bv
+            lo[wi], hi[wi] = plan.lo_key, plan.hi_key
+        fn = self.fed.lowerable_windowed_fused(window, s_pad, g_pad)
+        rounds = max(len(w[4].pages) for w in items)
+
+        kept: Dict[Tuple[int, int], List[np.ndarray]] = {}
+        firsts: Dict[Tuple[int, int], List[np.ndarray]] = {}
+        cnt_total = np.zeros((s, g_pad), dtype=np.int64)
+        with enable_x64(True):
+            lo_dev = jnp.asarray(lo, jnp.int64)
+            hi_dev = jnp.asarray(hi, jnp.int64)
+            pats_dev = jnp.asarray(pats_all)
+            valid_dev = jnp.asarray(valid_all)
+            bvs_dev = jnp.asarray(base_vecs)
+            for r in range(rounds):
+                pi = np.full((s_pad,), -1, dtype=np.int32)
+                for wi, item in enumerate(items):
+                    pages = item[4].pages
+                    if r < len(pages):
+                        pi[wi] = pages[r]
+                active = [wi for wi in range(s) if pi[wi] >= 0]
+                page, first, counts, cnts = fn(
+                    idx.triples, idx.valid, idx.keys, pats_dev,
+                    valid_dev, bvs_dev, lo_dev, hi_dev, jnp.asarray(pi))
+                counts = np.asarray(counts)
+                cnt_total += np.asarray(cnts).sum(axis=0)[:s]
+                self.launches.append(LaunchRecord(
+                    cand_streamed=len(active) * wp,
+                    pat_slots=g_pad * mp,
+                    groups=sum(len(items[wi][3]) for wi in active),
+                    pruned=any(items[wi][4].pruned for wi in active),
+                    cand_full=len(active) * wp,
+                    segments=len(active)))
+                page = np.asarray(page)
+                first = np.asarray(first)
+                for wi in active:
+                    if segments[items[wi][0]].count_only:
+                        continue   # cnt-only segment: no row gather
+                    for sh in range(page.shape[0]):
+                        for gi in range(len(items[wi][3])):
+                            n = int(counts[sh, wi, gi])
+                            if n:
+                                kept.setdefault((wi, gi), []).append(
+                                    page[sh, wi, gi, :n])
+                                firsts.setdefault((wi, gi), []).append(
+                                    first[sh, wi, gi, :n])
+
+        for wi, (si, pats_live, omegas_live, live, _plan) in \
+                enumerate(items):
+            seg = segments[si]
+            fresh: List[Tuple[np.ndarray, int]] = []
+            for gi in range(len(live)):
+                cnt = int(cnt_total[wi, gi])
+                rows = kept.get((wi, gi))
+                if seg.count_only or not rows:
+                    fresh.append((_EMPTY, cnt))
+                    continue
+                full = np.concatenate(rows, axis=0)
+                first_g = np.concatenate(firsts[(wi, gi)], axis=0)
+                fresh.append((stream_order(full, first_g,
+                                           pats_live[gi]), cnt))
+            finish_segment(self.fragments, seg, omegas_live, fresh,
+                           results[si], live)

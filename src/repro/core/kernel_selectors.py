@@ -68,6 +68,9 @@ from .store import _ORDERS, TripleStore, _pack
 # server that sees arbitrary range sizes.
 _MIN_BUCKET = 1024
 
+# Shared zero-row fragment payload (zero-size, never mutated).
+_EMPTY = np.empty((0, 3), dtype=np.int32)
+
 # Small-work fast path default: below this many (post-pruning)
 # candidate rows a kernel launch cannot pay for its dispatch overhead
 # (BENCH_kernels.json's `wildcard` row shows the kernel losing to the
@@ -79,11 +82,86 @@ _MIN_BUCKET = 1024
 DEFAULT_FAST_PATH_ROWS = 256
 
 
+# Cross-pattern fusion capacity caps (docs/fusion.md). Conservative by
+# design: a fused launch that would exceed any of them falls back to
+# per-group launches rather than risking VMEM pressure or an unbounded
+# jit cache. All power-of-two (KL004).
+MAX_FUSED_SEGMENTS = 16      # segments sharing one launch
+MAX_FUSED_SLOTS = 32768      # flat pattern slot table (S * G * Mp)
+MAX_FUSED_STREAM = 131072    # concatenated candidate rows
+
+# Tile size for fused launches: each segment's candidate block is
+# tile-aligned independently, so the finer tile bounds alignment waste.
+FUSED_BT = 256
+assert FUSED_BT == kops.DEFAULT_FUSED_BT
+
+
 def _bucket(n: int) -> int:
     b = _MIN_BUCKET
     while b < n:
         b *= 2
     return b
+
+
+def _pow2_at_least(n: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+@dataclasses.dataclass
+class FusedSegment:
+    """One segment of a fused cross-pattern launch.
+
+    A segment is what ``select_same_pattern`` serves alone today: one
+    triple pattern plus G request groups (each an Omega or None). The
+    fused path concatenates every segment's pruned candidate union into
+    one stream and resolves per-segment slot tables inside the kernel.
+
+    ``count_only`` marks a count-probe segment: its groups only need the
+    Definition-2 ``cnt``, so the launch skips the gather/stream epilogue
+    for it and the fragment carries no data triples.
+
+    ``depends_on`` declares that this segment's Omega derives from the
+    output of another in-flight segment (by index into the fused batch).
+    Fusion legality is conservative: any declared dependency refuses to
+    fuse and falls back to per-group launches, in the spirit of DaCe's
+    state-fusion tests -- only provably independent work units share a
+    launch. Batched server requests are independent by construction
+    (each arrives with its Omega fully materialized), so the server
+    never sets this; planners that pipeline bind-join rounds must.
+    """
+
+    tp: TriplePattern
+    omegas: List[Optional[np.ndarray]]
+    patterns: Optional[List[List[TriplePattern]]] = None
+    count_only: bool = False
+    depends_on: Tuple[int, ...] = ()
+
+
+def fusion_legality(segments: Sequence[FusedSegment], *,
+                    stream_rows: int, slot_table: int,
+                    max_segments: int = MAX_FUSED_SEGMENTS,
+                    max_slots: int = MAX_FUSED_SLOTS,
+                    max_stream: int = MAX_FUSED_STREAM) -> Optional[str]:
+    """Decide whether a set of segments may share one fused launch.
+
+    Returns None when fusion is legal, else a human-readable refusal
+    reason (the caller falls back to per-group launches and the reason
+    is surfaced in logs/tests). Explicit and conservative: dependencies
+    forbid fusion outright, and capacity ceilings bound the slot table,
+    the candidate stream, and the segment count.
+    """
+    if any(seg.depends_on for seg in segments):
+        return "dependent segments: an Omega derives from an in-flight output"
+    if len(segments) > max_segments:
+        return f"segment count {len(segments)} exceeds {max_segments}"
+    if slot_table > max_slots:
+        return f"slot table {slot_table} exceeds {max_slots}"
+    if stream_rows > max_stream:
+        return f"candidate stream {stream_rows} exceeds {max_stream}"
+    return None
 
 
 @functools.partial(jax.jit, static_argnames=("capacity",))
@@ -102,6 +180,57 @@ def _compact_epilogue(keep, idx_first, nmatch, base_mask, row_valid,
         lambda m: kops.compact_mask(m, capacity),
         in_axes=1, out_axes=0)(mask)                        # (G, Tp), (G,)
     return rows, counts, cnts
+
+
+@jax.jit
+def _count_epilogue(keep, nmatch, base_mask, row_valid):
+    """Count-only epilogue: just the Definition-2 ``cnt`` per group.
+
+    No compaction, no row indices -- a count-only selection never
+    gathers the rows it would not return (docs/fusion.md).
+    """
+    mask = keep & base_mask[:, None] & row_valid[:, None]   # (Tp, G)
+    return jnp.sum(jnp.where(mask, nmatch, 0), axis=0)      # (G,)
+
+
+@jax.jit
+def _fused_base_mask(cand, seg_of_row, base_vecs):
+    """Per-row base-pattern mask for a fused stream.
+
+    ``base_vecs`` is int32 [S, 8] (one ``pattern_vec_from`` per segment);
+    each row applies its own segment's bound components and repeated-
+    variable equality flags -- the fused-stream generalization of the
+    single ``tpf_match`` launch on the same-pattern path.
+    """
+    bv = base_vecs[jnp.maximum(seg_of_row, 0)]              # (T, 8)
+    mask = jnp.ones(cand.shape[0], dtype=bool)
+    for i in range(3):
+        mask &= (bv[:, i] < 0) | (cand[:, i] == bv[:, i])
+    mask &= (bv[:, 3] == 0) | (cand[:, 0] == cand[:, 1])
+    mask &= (bv[:, 4] == 0) | (cand[:, 0] == cand[:, 2])
+    mask &= (bv[:, 5] == 0) | (cand[:, 1] == cand[:, 2])
+    return mask & (seg_of_row >= 0)
+
+
+@functools.partial(jax.jit, static_argnames=("capacity",))
+def _fused_epilogue(keep, nmatch, base_mask, row_valid, seg_onehot,
+                    capacity: int):
+    """Device epilogue over the fused kernel outputs.
+
+    Like ``_compact_epilogue`` but segment-aware: compacted row indices
+    stay ascending per output column, and because every segment owns a
+    disjoint ascending row extent of the stream, the per-(segment,
+    group) kept counts (``seg_onehot.T @ mask``) let the host split each
+    column's index list into per-segment runs without a second pass.
+    """
+    mask = keep & base_mask[:, None] & row_valid[:, None]       # (Tp, G)
+    m32 = mask.astype(jnp.int32)
+    seg_counts = seg_onehot.T @ m32                             # (S, G)
+    seg_cnts = seg_onehot.T @ jnp.where(mask, nmatch, 0)        # (S, G)
+    rows, _counts = jax.vmap(
+        lambda m: kops.compact_mask(m, capacity),
+        in_axes=1, out_axes=0)(mask)                            # (G, Tp)
+    return rows, seg_counts, seg_cnts
 
 
 @dataclasses.dataclass
@@ -129,6 +258,14 @@ class LaunchRecord:
     threshold, so the groups were served by the numpy oracle with no
     kernel launch at all -- the server charges it to
     ``Counters.fast_path_selects``, never to the launch budget.
+
+    ``segments`` counts the distinct triple-pattern segments the launch
+    served: 1 for the classic same-pattern grouped launch, >= 2 for a
+    cross-pattern fused launch (docs/fusion.md) whose candidate stream
+    concatenates every segment's pruned union. ``reclaimed_rows``
+    records sub-window compaction on the sharded path: rows inside a
+    shard window that ``merge_spans`` proved dead and the launch
+    therefore never streamed.
     """
 
     cand_streamed: int      # padded candidates streamed once (T)
@@ -138,6 +275,19 @@ class LaunchRecord:
     pruned: bool = False    # streamed the sub-range union, not the range
     cand_full: int = 0      # unpruned stream size (pruning accounting)
     fast_path: bool = False  # routed to the numpy oracle (small work)
+    segments: int = 1       # distinct pattern segments fused in the launch
+    reclaimed_rows: int = 0  # dead sub-window rows compacted away
+    # raw (pre-padding) candidate rows behind cand_streamed; 0 means
+    # "not tracked, use cand_streamed". The throughput sim re-derives a
+    # fused launch's tile-aligned stream from these, since padding
+    # granularity differs between solo (shape bucket) and fused
+    # (FUSED_BT tiles) launches.
+    cand_rows: int = 0
+    # raw full-range rows (pre-padding, pre-pruning): the ceiling the
+    # stream flips to when a batch's combined sub-range union stops
+    # paying (``pruned`` goes False); lets the sim cap its additive
+    # union estimate at the real range size.
+    full_rows: int = 0
 
     @property
     def cells(self) -> int:
@@ -242,9 +392,59 @@ def record_fragments(
         fragments.put_data(fragment_key(tp.as_tuple(), om), payload)
 
 
+def consult_segment(
+    fragments: Optional[FragmentStore], seg: FusedSegment,
+    results_row: List[Optional[Tuple[np.ndarray, int]]],
+    launches: List[LaunchRecord],
+) -> List[int]:
+    """Fragment-store residency for one fused segment's groups.
+
+    Data segments reuse ``consult_fragments``; count-only groups are
+    answered from a resident *data* fragment's cnt (never the other way
+    round: a count result carries no rows to reuse). Shared by the
+    single-host and sharded fused paths.
+    """
+    if not seg.count_only:
+        res, live = consult_fragments(fragments, seg.tp, seg.omegas,
+                                      launches)
+        for i, r in enumerate(res):
+            if r is not None:
+                results_row[i] = r
+        return live
+    live: List[int] = []
+    for i, om in enumerate(seg.omegas):
+        got = None
+        if fragments is not None:
+            got = fragments.peek_data(
+                fragment_key(seg.tp.as_tuple(), om), touch=True)
+        if got is not None:
+            fragments.note_skip()
+            launches.append(LaunchRecord(
+                cand_streamed=0, pat_slots=0, groups=1, skipped=True))
+            results_row[i] = (_EMPTY, int(got[1]))
+        else:
+            live.append(i)
+    return live
+
+
+def finish_segment(
+    fragments: Optional[FragmentStore], seg: FusedSegment,
+    omegas_live: Sequence[Optional[np.ndarray]],
+    fresh: Sequence[Tuple[np.ndarray, int]],
+    results_row: List[Optional[Tuple[np.ndarray, int]]],
+    live: Sequence[int],
+) -> None:
+    """Register fresh results (data segments only) and fill slots."""
+    if not seg.count_only:
+        record_fragments(fragments, seg.tp, omegas_live, fresh)
+    for i, res in zip(live, fresh, strict=True):
+        results_row[i] = res
+
+
 def select_block_numpy(
     block: np.ndarray, tp: TriplePattern,
     patterns: Sequence[List[TriplePattern]],
+    count_only: bool = False,
 ) -> List[Tuple[np.ndarray, int]]:
     """Numpy evaluation of G grouped selections over one candidate block.
 
@@ -257,7 +457,9 @@ def select_block_numpy(
     without touching the store's memo layers (``block`` is already in
     hand). ``block`` must cover every instantiated pattern's matches and
     contain no duplicate triples (the candidate-range / sub-range-union
-    contracts).
+    contracts). ``count_only`` skips the kept-row gather and
+    ``stream_order`` entirely: only the Definition-2 ``cnt`` is
+    produced (count probes never read the rows).
     """
     comps = tp.as_tuple()
     base = np.ones(block.shape[0], dtype=bool)
@@ -281,7 +483,7 @@ def select_block_numpy(
         comp &= base[:, None]
         keep = comp.any(axis=1)
         cnt = int(comp.sum())
-        if not keep.any():
+        if count_only or not keep.any():
             out.append((empty, cnt))
             continue
         kept = block[keep]
@@ -357,19 +559,225 @@ class KernelSelector:
                 results[i] = res
         return results
 
+    def select_count(self, tp: TriplePattern, omega: Optional[np.ndarray],
+                     insts: Optional[List[TriplePattern]] = None) -> int:
+        """Count-only selection: Definition-2 ``cnt``, no row gather.
+
+        The standalone count-probe path (docs/fusion.md): the candidate
+        stream and the bind-join grid are still evaluated (the count
+        needs them) but no kept row is ever compacted, gathered, or
+        stream-ordered. A resident data fragment answers for free.
+        """
+        if self.fragments is not None:
+            got = self.fragments.peek_data(
+                fragment_key(tp.as_tuple(), omega), touch=True)
+            if got is not None:
+                self.fragments.note_skip()
+                self.launches.append(LaunchRecord(
+                    cand_streamed=0, pat_slots=0, groups=1, skipped=True))
+                return int(got[1])
+        patterns = [insts if insts is not None
+                    else instantiate_patterns(tp, omega)]
+        return self._launch_groups(tp, [omega], patterns,
+                                   count_only=True)[0][1]
+
+    def select_fused(self, segments: Sequence[FusedSegment]
+                     ) -> List[List[Tuple[np.ndarray, int]]]:
+        """Serve S heterogeneous segments from ONE fused kernel launch.
+
+        Each segment is exactly what ``select_same_pattern`` serves
+        alone: one triple pattern plus its request groups. The fused
+        path concatenates every segment's (pruned) candidate block into
+        one tile-aligned stream, marshals rectangular per-segment slot
+        tables, and launches ``kops.bindjoin_fused`` once; the kernel
+        resolves each tile's segment from its program id. Residency
+        skips, Omega-restricted pruning, the small-work fast path, and
+        the ``stream_order`` parity epilogue all behave exactly as on
+        the unfused path, so fragments are byte-identical. When
+        ``fusion_legality`` refuses (declared dependencies or capacity
+        ceilings) or only one segment has launch-worthy work, every
+        segment falls back to its own grouped launch.
+        """
+        results: List[List[Optional[Tuple[np.ndarray, int]]]] = [
+            [None] * len(seg.omegas) for seg in segments]
+        prepared: List[Tuple[int, List[List[TriplePattern]], List[int]]] = []
+        for si, seg in enumerate(segments):
+            patterns = seg.patterns
+            if patterns is None:
+                patterns = [instantiate_patterns(seg.tp, om)
+                            for om in seg.omegas]
+            live = self._consult_segment(seg, results[si])
+            if live:
+                prepared.append((si, patterns, live))
+
+        # Per-segment prologue, identical to ``_launch_groups``: range,
+        # sub-range union, small-work fast path. Only segments that
+        # would genuinely launch join the fused stream.
+        work = []
+        for si, patterns, live in prepared:
+            seg = segments[si]
+            omegas_live = [seg.omegas[i] for i in live]
+            pats_live = [patterns[i] for i in live]
+            rng = self.store.candidate_range(seg.tp)
+            full = len(rng)
+            if full == 0:
+                for i in live:
+                    results[si][i] = (_EMPTY, 0)
+                continue
+            all_insts = [p for group in pats_live for p in group]
+            sr = self.store.subranges(seg.tp, insts=all_insts)
+            pruned = sr is not None and sr.rows < full
+            block = None
+            if pruned:
+                block = self.store.gather_subranges(sr)
+                t = int(block.shape[0])
+                if t == 0:
+                    for i in live:
+                        results[si][i] = (_EMPTY, 0)
+                    continue
+            else:
+                t = full
+            if 0 < t <= self.fast_path_rows:
+                self.launches.append(LaunchRecord(
+                    cand_streamed=t, pat_slots=0, groups=len(live),
+                    pruned=pruned, cand_full=full, fast_path=True))
+                if block is None:
+                    block = rng.triples
+                fresh = select_block_numpy(block, seg.tp, pats_live,
+                                           count_only=seg.count_only)
+                self._finish_segment(seg, omegas_live, fresh,
+                                     results[si], live)
+                continue
+            if block is None:
+                block = rng.triples
+            work.append((si, pats_live, omegas_live, live, block, t,
+                         pruned, full))
+
+        if not work:
+            return results
+
+        # Fused geometry: common padded (G, Mp) slot grid, power-of-two
+        # segment/tile counts (bounded jit cache), per-segment blocks
+        # tile-aligned so every bt-tile belongs to exactly one segment.
+        bt = FUSED_BT
+        s = len(work)
+        s_pad = _pow2_at_least(s)
+        g_pad = _pow2_at_least(max(len(w[3]) for w in work))
+        m_max = max(max(len(p) for p in w[1]) for w in work)
+        mp = kops.padded_pattern_slots(m_max)
+        tiles = [-(-w[5] // bt) for w in work]
+        total_tiles = sum(tiles)
+        reason = fusion_legality(
+            [segments[w[0]] for w in work],
+            stream_rows=total_tiles * bt, slot_table=s_pad * g_pad * mp)
+        if s == 1 or reason is not None:
+            # Documented fallback (docs/fusion.md): one grouped launch
+            # per segment, same blocks, byte-identical results.
+            for si, pats_live, omegas_live, live, block, t, pruned, full \
+                    in work:
+                seg = segments[si]
+                fresh = self._launch_block(
+                    seg.tp, pats_live, block, t, pruned, full,
+                    count_only=seg.count_only)
+                self._finish_segment(seg, omegas_live, fresh,
+                                     results[si], live)
+            return results
+
+        tiles_pad = _pow2_at_least(total_tiles)
+        t_pad = tiles_pad * bt
+        cand = np.zeros((t_pad, 3), dtype=np.int32)
+        row_valid = np.zeros((t_pad,), dtype=bool)
+        seg_of_tile = np.full((tiles_pad,), -1, dtype=np.int32)
+        pats_all = np.full((s_pad, g_pad, m_max, 3), -1, dtype=np.int32)
+        valid_all = np.zeros((s_pad, g_pad, m_max), dtype=np.int32)
+        base_vecs = np.zeros((s_pad, 8), dtype=np.int32)
+        cursor = 0
+        for wi, (si, pats_live, _om, _live, block, t, _pr, _full) \
+                in enumerate(work):
+            cand[cursor:cursor + t] = block
+            row_valid[cursor:cursor + t] = True
+            seg_of_tile[cursor // bt:cursor // bt + tiles[wi]] = wi
+            p_grid, v_grid, bv = marshal_pattern_grid(
+                segments[si].tp, pats_live, g_pad, m_max)
+            pats_all[wi] = p_grid
+            valid_all[wi] = v_grid
+            base_vecs[wi] = bv
+            cursor += tiles[wi] * bt
+        seg_of_row = np.repeat(seg_of_tile, bt)
+        seg_onehot = (seg_of_row[:, None]
+                      == np.arange(s_pad)[None, :]).astype(np.int32)
+
+        keep, idx, nmatch = kops.bindjoin_fused(
+            jnp.asarray(cand), jnp.asarray(seg_of_tile),
+            jnp.asarray(pats_all), jnp.asarray(valid_all), bt=bt)
+        base_mask = _fused_base_mask(
+            jnp.asarray(cand), jnp.asarray(seg_of_row),
+            jnp.asarray(base_vecs))
+        rows, seg_counts, seg_cnts = _fused_epilogue(
+            keep, nmatch, base_mask, jnp.asarray(row_valid),
+            jnp.asarray(seg_onehot), capacity=t_pad)
+
+        full_tiles = sum(-(-w[7] // bt) for w in work)
+        self.launches.append(LaunchRecord(
+            cand_streamed=t_pad, pat_slots=g_pad * mp,
+            groups=sum(len(w[3]) for w in work),
+            pruned=any(w[6] for w in work),
+            cand_full=_pow2_at_least(full_tiles) * bt,
+            segments=s, cand_rows=sum(w[5] for w in work),
+            full_rows=sum(w[7] for w in work)))
+
+        rows = np.asarray(rows)
+        seg_counts = np.asarray(seg_counts)
+        seg_cnts = np.asarray(seg_cnts)
+        idx = np.asarray(idx)
+        # Column g's compacted indices ascend, and segments own disjoint
+        # ascending row extents: segment wi's run starts after every
+        # earlier segment's kept count in that column.
+        off = np.cumsum(seg_counts, axis=0) - seg_counts     # (S, G)
+        for wi, (si, pats_live, omegas_live, live, _b, _t, _pr, _full) \
+                in enumerate(work):
+            seg = segments[si]
+            fresh: List[Tuple[np.ndarray, int]] = []
+            for gi in range(len(live)):
+                cnt = int(seg_cnts[wi, gi])
+                n = int(seg_counts[wi, gi])
+                if seg.count_only or n == 0:
+                    fresh.append((_EMPTY, cnt))
+                    continue
+                kept_rows = rows[gi, off[wi, gi]:off[wi, gi] + n]
+                kept = cand[kept_rows]             # tp-index order
+                first = idx[kept_rows, gi]
+                fresh.append((stream_order(kept, first, pats_live[gi]),
+                              cnt))
+            self._finish_segment(seg, omegas_live, fresh, results[si],
+                                 live)
+        return results
+
+    def _consult_segment(self, seg: FusedSegment,
+                         results_row: List[Optional[Tuple[np.ndarray, int]]]
+                         ) -> List[int]:
+        return consult_segment(self.fragments, seg, results_row,
+                               self.launches)
+
+    def _finish_segment(self, seg: FusedSegment,
+                        omegas_live: Sequence[Optional[np.ndarray]],
+                        fresh: Sequence[Tuple[np.ndarray, int]],
+                        results_row: List[Optional[Tuple[np.ndarray, int]]],
+                        live: Sequence[int]) -> None:
+        return finish_segment(self.fragments, seg, omegas_live, fresh,
+                              results_row, live)
+
     def _launch_groups(
         self, tp: TriplePattern, omegas: Sequence[Optional[np.ndarray]],
-        patterns: List[List[TriplePattern]],
+        patterns: List[List[TriplePattern]], count_only: bool = False,
     ) -> List[Tuple[np.ndarray, int]]:
         """One grouped kernel launch over the store-miss groups."""
         rng = self.store.candidate_range(tp)
         full = len(rng)
-        empty = np.empty((0, 3), dtype=np.int32)
         if full == 0:
-            return [(empty, 0)] * len(omegas)
+            return [(_EMPTY, 0)] * len(omegas)
 
         g = len(omegas)
-        m = max(len(p) for p in patterns)
 
         # Omega-restricted pruning: the union of the groups' per-binding
         # sub-ranges covers every triple that can match any instantiated
@@ -385,7 +793,7 @@ class KernelSelector:
             if t == 0:
                 # no binding has any candidates (e.g. Omega values
                 # absent from the store): nothing to stream, cnt = 0
-                return [(empty, 0)] * len(omegas)
+                return [(_EMPTY, 0)] * len(omegas)
         else:
             t = full
 
@@ -398,11 +806,28 @@ class KernelSelector:
                 pruned=pruned, cand_full=full, fast_path=True))
             if not pruned:
                 block = rng.triples
-            return select_block_numpy(block, tp, patterns)
+            return select_block_numpy(block, tp, patterns,
+                                      count_only=count_only)
 
         if not pruned:
             block = rng.triples
+        return self._launch_block(tp, patterns, block, t, pruned, full,
+                                  count_only=count_only)
 
+    def _launch_block(
+        self, tp: TriplePattern, patterns: List[List[TriplePattern]],
+        block: np.ndarray, t: int, pruned: bool, full: int,
+        count_only: bool = False,
+    ) -> List[Tuple[np.ndarray, int]]:
+        """The grouped launch proper, over an already-prepared block.
+
+        Shared by ``_launch_groups`` and ``select_fused``'s legality
+        fallback so both take the exact same launch with the exact same
+        accounting. ``count_only`` skips the compact/gather/stream
+        epilogue: only the per-group Definition-2 counts come back.
+        """
+        g = len(patterns)
+        m = max(len(p) for p in patterns)
         pats, valid, base_vec = marshal_pattern_grid(tp, patterns, g, m)
 
         # Pad the candidate block to a shape bucket (bounded jit cache).
@@ -415,15 +840,21 @@ class KernelSelector:
         keep, idx, nmatch = kops.bindjoin_grouped(
             jnp.asarray(cand), jnp.asarray(pats), jnp.asarray(valid))
         base_mask = kops.tpf_match(jnp.asarray(cand), jnp.asarray(base_vec))
-        rows, counts, cnts = _compact_epilogue(
-            keep, idx, nmatch, base_mask, jnp.asarray(row_valid),
-            capacity=tpad)
 
         mp = kops.padded_pattern_slots(m)
         self.launches.append(
             LaunchRecord(cand_streamed=tpad, pat_slots=g * mp, groups=g,
-                         pruned=pruned, cand_full=_bucket(full)))
+                         pruned=pruned, cand_full=_bucket(full),
+                         cand_rows=t, full_rows=full))
 
+        if count_only:
+            cnts = _count_epilogue(keep, nmatch, base_mask,
+                                   jnp.asarray(row_valid))
+            return [(_EMPTY, int(c)) for c in np.asarray(cnts)]
+
+        rows, counts, cnts = _compact_epilogue(
+            keep, idx, nmatch, base_mask, jnp.asarray(row_valid),
+            capacity=tpad)
         rows = np.asarray(rows)
         counts = np.asarray(counts)
         cnts = np.asarray(cnts)
@@ -432,7 +863,7 @@ class KernelSelector:
         for gi in range(g):
             n = int(counts[gi])
             if n == 0:
-                out.append((empty, int(cnts[gi])))
+                out.append((_EMPTY, int(cnts[gi])))
                 continue
             kept_rows = rows[gi, :n]
             kept = cand[kept_rows]                 # tp-index order

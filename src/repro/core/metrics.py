@@ -47,6 +47,8 @@ class Counters:
     # kernel-selector launch accounting (selector_backend="kernel"):
     kernel_launches: int = 0        # grouped bind-join kernel launches
     kernel_cand_streamed: int = 0   # padded candidates streamed (HBM pass)
+    kernel_cand_rows: int = 0       # raw (pre-padding) candidate rows
+    kernel_cand_full_rows: int = 0  # raw full-range rows behind launches
     kernel_pat_slots: int = 0       # padded pattern slots across groups
     kernel_batched_requests: int = 0  # requests served by shared launches
     launches_skipped: int = 0       # launches avoided by store residency
@@ -55,6 +57,11 @@ class Counters:
     #                                 to sub-range pruning (full - pruned)
     fast_path_selects: int = 0      # requests served by the numpy block
     #                                 evaluation instead of a launch
+    # Cross-pattern kernel fusion (docs/fusion.md). These classify a
+    # subset of kernel_launches (a fused launch IS a kernel launch);
+    # they are descriptive shape counters, not request dispositions.
+    fused_launches: int = 0         # launches serving >= 2 segments
+    fused_segments: int = 0         # segments across fused launches
 
     def merge(self, other: "Counters") -> None:
         for f in dataclasses.fields(self):
@@ -111,6 +118,13 @@ def metrics_snapshot(server, batch=None) -> dict:
             "misses": r_misses,
             "hit_rate": r_hits / max(r_hits + r_misses, 1),
         },
+        # mean segments per fused launch (1.0-equivalent batches never
+        # fuse, so 0.0 means "no fusion happened"): the headline shape
+        # metric of docs/fusion.md, derived here so every surface (wire
+        # and in-process) computes it identically.
+        "fused_segments_per_launch": (
+            server.counters.fused_segments
+            / max(server.counters.fused_launches, 1)),
     }
     if server.cache is not None:
         out["http"] = {

@@ -86,6 +86,21 @@ def brtpf_cardinality(
     return brtpf_select_with_cnt(store, tp, omega)[1]
 
 
+def brtpf_count(
+    store: TripleStore, tp: TriplePattern, omega: Optional[np.ndarray]
+) -> int:
+    """Definition-2 ``cnt`` without materializing the data sequence.
+
+    The count-only fast path for count probes: ``store.cardinality`` is
+    a pure searchsorted for prefix patterns (the common case), so no
+    match stream is gathered or concatenated. Equal to
+    ``brtpf_select_with_cnt(...)[1]`` by construction -- cardinality's
+    scan fallback is an exact count.
+    """
+    return int(sum(store.cardinality(p)
+                   for p in instantiate_patterns(tp, omega)))
+
+
 @dataclasses.dataclass
 class Fragment:
     """One page of a (br)TPF -- the wire-level unit (LDF Definition 3).

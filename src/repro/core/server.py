@@ -75,16 +75,28 @@ class Request:
 
     ``omega`` is None for pure TPF requests; otherwise an int32 [M, V]
     sequence of solution mappings with M <= maxMpR (server-enforced).
+
+    ``count_only`` asks for the fragment's Definition-2 ``cnt`` metadata
+    without its data triples (docs/fusion.md): the response is a normal
+    :class:`~repro.core.selectors.Fragment` whose data page is empty.
+    Count results live under their own memo key -- a count probe can be
+    answered FROM a resident data fragment, but never populates (or
+    poisons) the data memo the other way round.
     """
 
     pattern: TriplePattern
     omega: Optional[np.ndarray] = None
     page: int = 0
+    count_only: bool = False
 
     def key(self):
         om = None
         if self.omega is not None:
             om = tuple(map(tuple, np.asarray(self.omega).tolist()))
+        if self.count_only:
+            # distinct key namespace: real omega_rows is None or a tuple
+            # of row-tuples, never a str-tagged pair
+            om = ("count", om)
         return request_key(self.pattern.as_tuple(), om, self.page)
 
     @property
@@ -284,6 +296,8 @@ class BrTPFServer:
             elif self._selector is not None:
                 self._note_launch_skip()
             return memo
+        if req.count_only:
+            return self._count_data(req, memo_key)
         if req.is_brtpf:
             patterns = instantiate_patterns(req.pattern, req.omega)
             self.counters.server_lookups += len(patterns)
@@ -301,6 +315,28 @@ class BrTPFServer:
             else:
                 data = tpf_select(self.store, req.pattern)
                 cnt = self.store.cardinality(req.pattern)
+        self._memoize(memo_key, data, cnt)
+        return data, cnt
+
+    def _count_data(self, req: Request, memo_key) -> Tuple[np.ndarray, int]:
+        """Count-probe evaluation (docs/fusion.md): Definition-2 ``cnt``
+        with no materialized rows. Accelerated backends run their
+        ``select_count`` cnt-only path (the bind-join grid still
+        evaluates; the gather/stream epilogue is skipped); the numpy
+        oracle uses ``brtpf_count`` (pure ``cardinality`` sums)."""
+        omega = req.omega if req.is_brtpf else None
+        patterns = instantiate_patterns(req.pattern, omega)
+        self.counters.server_lookups += len(patterns)
+        if self._selector is not None:
+            n0 = len(self._selector.launches)
+            cnt = self._selector.select_count(req.pattern, omega, patterns)
+            self._charge_launches(self._selector.launches[n0:])
+        elif omega is not None:
+            from .selectors import brtpf_count
+            cnt = brtpf_count(self.store, req.pattern, omega)
+        else:
+            cnt = int(self.store.cardinality(req.pattern))
+        data = np.empty((0, 3), dtype=np.int32)
         self._memoize(memo_key, data, cnt)
         return data, cnt
 
@@ -330,8 +366,21 @@ class BrTPFServer:
                 continue
             self.counters.kernel_launches += 1
             self.counters.kernel_cand_streamed += rec.cand_streamed
+            self.counters.kernel_cand_rows += (rec.cand_rows
+                                               or rec.cand_streamed)
+            self.counters.kernel_cand_full_rows += (
+                rec.full_rows or rec.cand_rows or rec.cand_streamed)
             self.counters.kernel_pat_slots += rec.pat_slots
+            if rec.segments > 1:
+                # shape classification of the launch just charged above
+                # (fused launches ARE kernel launches), feeding the
+                # fused_segments_per_launch metric (docs/fusion.md)
+                self.counters.fused_launches += 1
+                self.counters.fused_segments += rec.segments
             if rec.pruned:
+                # covers sub-window compaction too: a compacted record
+                # has cand_full = window, cand_streamed = wc, so its
+                # reclaimed_rows = window - wc is exactly this delta
                 self.counters.cand_pruned_away += max(
                     rec.cand_full - rec.cand_streamed, 0)
         self.counters.kernel_batched_requests += batched_requests
@@ -400,10 +449,19 @@ class BrTPFServer:
             memo_key = req.key()[:2]
             if self.fragments.contains_data(memo_key):
                 continue  # resident in the unified store, no launch
-            per_pattern = groups.setdefault(req.pattern.as_tuple(),
-                                            OrderedDict())
+            per_pattern = groups.setdefault(
+                (req.pattern.as_tuple(), req.count_only), OrderedDict())
             if memo_key not in per_pattern:
                 per_pattern[memo_key] = req
+        # Cross-pattern fusion (docs/fusion.md): >= 2 distinct
+        # (pattern, count_only) groups become segments of fused launches
+        # -- singleton groups ride along (they'd otherwise launch solo
+        # through handle()). A homogeneous batch has nothing to fuse and
+        # keeps the classic same-pattern grouped path below.
+        if (self.config.fuse_patterns and len(groups) >= 2
+                and hasattr(self._selector, "select_fused")):
+            self._prefill_fused(groups)
+            return
         for members in groups.values():
             member_reqs = list(members.values())
             if len(member_reqs) < 2:
@@ -417,12 +475,38 @@ class BrTPFServer:
                 tp, omegas, insts)
             self._charge_launches(self._selector.launches[n0:],
                                   batched_requests=len(member_reqs))
-            for req, patterns, (data, cnt) in zip(member_reqs, insts,
-                                                  results, strict=True):
-                self.counters.server_lookups += len(patterns)
-                memo_key = req.key()[:2]
-                self._memoize(memo_key, data, cnt)
-                self._prefilled.add(memo_key)
+            self._consume_prefill(member_reqs, insts, results)
+
+    def _prefill_fused(self, groups: "OrderedDict") -> None:
+        """Serve a heterogeneous batch's miss groups as fused segments."""
+        from .kernel_selectors import FusedSegment
+        segments = []
+        members = []
+        for (_ptuple, count_only), per in groups.items():
+            member_reqs = list(per.values())
+            tp = member_reqs[0].pattern
+            omegas = [r.omega if r.is_brtpf else None
+                      for r in member_reqs]
+            insts = [instantiate_patterns(tp, om) for om in omegas]
+            segments.append(FusedSegment(tp=tp, omegas=omegas,
+                                         patterns=insts,
+                                         count_only=count_only))
+            members.append((member_reqs, insts))
+        n0 = len(self._selector.launches)
+        rows = self._selector.select_fused(segments)
+        self._charge_launches(
+            self._selector.launches[n0:],
+            batched_requests=sum(len(m) for m, _ in members))
+        for (member_reqs, insts), row in zip(members, rows, strict=True):
+            self._consume_prefill(member_reqs, insts, row)
+
+    def _consume_prefill(self, member_reqs, insts, results) -> None:
+        for req, patterns, (data, cnt) in zip(member_reqs, insts,
+                                              results, strict=True):
+            self.counters.server_lookups += len(patterns)
+            memo_key = req.key()[:2]
+            self._memoize(memo_key, data, cnt)
+            self._prefilled.add(memo_key)
 
     # -- convenience ---------------------------------------------------------
 

@@ -57,6 +57,15 @@ class HttpRecord:
     cand: int = 0
     pats: int = 0
     launches: int = 0
+    # raw (pre-padding) candidate rows behind ``cand``: the fused-launch
+    # model re-pads these at FUSED_BT tile granularity, which is how the
+    # real fused stream is laid out (solo launches pad to a pow2 shape
+    # bucket instead). 0 on old traces -> fall back to ``cand``.
+    cand_rows: int = 0
+    # raw full-range rows: when a batch's combined sub-range union
+    # reaches this, pruning stops paying and the launch streams the full
+    # range -- the cap on the model's additive union estimate.
+    cand_full_rows: int = 0
 
 
 @dataclasses.dataclass
@@ -101,6 +110,16 @@ def collect_traces(server: BrTPFServer, workload: Sequence[Tuple[str, BGP]],
 # Cost model
 # ---------------------------------------------------------------------------
 
+# fused stream tile size -- mirrors DEFAULT_FUSED_BT in kernels/ops.py:
+# a fused launch's candidate stream is laid out in bt-row tiles (one
+# segment per tile) and padded to a power-of-two tile count.
+_FUSED_BT = 256
+
+
+def _pow2_at_least(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
 @dataclasses.dataclass
 class SimParams:
     server_workers: int = 4            # paper: 4-core server machine
@@ -132,6 +151,15 @@ class SimParams:
     # requests arriving while a launch is still queued share its
     # candidate stream and pay only their marginal pattern-slot cells.
     batch_window_s: float = 0.0
+    # cross-pattern kernel fusion (docs/fusion.md): with batching on, a
+    # request whose pattern DIFFERS from the open launch's still joins
+    # it -- as a new fused segment that brings its own candidate stream
+    # (same-pattern joiners share an existing segment's stream and add
+    # none). Caps mirror ``fusion_legality`` in core/kernel_selectors.py:
+    # a launch refuses new segments past the segment/stream ceilings.
+    fuse_patterns: bool = True
+    fused_max_segments: int = 16      # MAX_FUSED_SEGMENTS
+    fused_max_stream: int = 131072    # MAX_FUSED_STREAM (candidate rows)
     # unified fragment store (core/fragments.py): a kernel-path request
     # whose fragment was computed by an EARLIER request (and whose
     # launch is no longer joinable) skips its launch entirely -- it is
@@ -187,6 +215,11 @@ class SimResult:
     # the modeled unified store (memo or shared HTTP cache) -- the
     # third quantity live_replay validates.
     launches_skipped: int = 0
+    # cross-pattern fusion shape (mirrors Counters.fused_launches /
+    # fused_segments): launches that ended up serving >= 2 distinct
+    # pattern keys, and the total distinct keys across those launches.
+    fused_launches: int = 0
+    fused_segments: int = 0
     # candidate rows streamed by created launches (requests that join an
     # open launch share its stream and add none; skipped requests stream
     # nothing). Traces collected against a pruning server already carry
@@ -194,6 +227,12 @@ class SimResult:
     # the model's Omega-restricted streaming total -- the fourth
     # quantity live_replay validates.
     cand_streamed: int = 0
+    # raw (pre-padding) candidate rows behind cand_streamed. Additive
+    # across requests, so -- unlike the padded total, whose pow2/tile
+    # padding depends on how requests regrouped into launches -- this is
+    # invariant under batching composition and is the tighter live
+    # validation quantity.
+    cand_rows: int = 0
 
     @property
     def launches_per_request(self) -> float:
@@ -206,6 +245,10 @@ class SimResult:
     @property
     def skips_per_request(self) -> float:
         return self.launches_skipped / max(self.kernel_requests, 1)
+
+    @property
+    def fused_segments_per_launch(self) -> float:
+        return self.fused_segments / max(self.fused_launches, 1)
 
     @property
     def throughput_per_hour(self) -> float:
@@ -222,23 +265,60 @@ class SimResult:
 
 @dataclasses.dataclass
 class _Launch:
-    """One (possibly grouped) kernel launch queued on a worker."""
+    """One (possibly grouped, possibly fused) launch queued on a worker."""
 
     key: tuple
     start: float                 # when it begins executing (no more joins)
     done: float                  # completion; grows as requests join
     worker: int
     waiters: List[tuple] = dataclasses.field(default_factory=list)
+    # fused-segment bookkeeping: raw candidate rows per pattern key
+    # (same-key joiners extend their segment's sub-range union --
+    # bind-join chunks are disjoint, so union ~ sum) and the creator's
+    # solo padded stream (the floor when the launch never fuses: a
+    # singleton launch pads to the solo shape bucket).
+    seg_rows: Dict[tuple, int] = dataclasses.field(default_factory=dict)
+    # per-key full-range row cap: members' combined sub-range unions
+    # cannot exceed the pattern's range, and once they reach it the real
+    # launch streams the (unpruned) full range instead
+    seg_full: Dict[tuple, int] = dataclasses.field(default_factory=dict)
+    solo_cand: int = 0
+    # fragment identities already being computed by this launch: a
+    # same-fragment duplicate arriving in the same window is served from
+    # the batch prefill's memo (a store skip), never a new group
+    frags: set = dataclasses.field(default_factory=set)
+
+    @property
+    def keys(self):
+        return self.seg_rows.keys()
+
+    def seg_streamed(self) -> List[int]:
+        """Per-segment raw rows actually streamed (union capped at full)."""
+        return [min(r, self.seg_full.get(k)) if self.seg_full.get(k)
+                else r for k, r in self.seg_rows.items()]
+
+    def stream_tiles(self) -> int:
+        """FUSED_BT-aligned tile count of the fused candidate stream."""
+        return sum(-(-max(r, 1) // _FUSED_BT)
+                   for r in self.seg_streamed())
 
 
 class _Server:
     """k identical workers + FIFO queue (+ optional launch batching)."""
 
-    def __init__(self, workers: int, batch_window: float = 0.0) -> None:
+    def __init__(self, workers: int, batch_window: float = 0.0,
+                 fuse: bool = False, max_segments: int = 16,
+                 max_stream: int = 131072) -> None:
         self.free_at = [0.0] * workers
         self.batch_window = batch_window
-        # pattern_key -> newest still-queued launch for that pattern.
+        self.fuse = fuse
+        self.max_segments = max_segments
+        self.max_stream = max_stream
+        # pattern_key -> newest still-queued launch for that pattern
+        # (unfused batching); under fusion the newest launch is joinable
+        # by ANY pattern, so one global slot suffices.
         self._open: Dict[tuple, _Launch] = {}
+        self._open_any: Optional[_Launch] = None
 
     def schedule(self, arrival: float, service: float) -> float:
         """Returns completion time; assigns the earliest-free worker."""
@@ -248,38 +328,76 @@ class _Server:
         self.free_at[i] = done
         return done
 
-    def schedule_launch(self, arrival: float, key: tuple, shared: float,
-                        marginal: float) -> Tuple[_Launch, bool]:
-        """Schedule one kernel launch, batching where possible.
+    def schedule_launch(self, arrival: float, key: tuple, overhead: float,
+                        stream: float, marginal: float,
+                        cand_rows: int = 0, solo_cand: int = 0,
+                        frag_key: tuple = (), full_rows: int = 0,
+                        ) -> Tuple[_Launch, bool, bool, bool]:
+        """Schedule one kernel launch, batching/fusing where possible.
 
-        ``shared`` is the cost paid once per launch (dispatch overhead +
-        candidate HBM stream); ``marginal`` is this request's own
-        pattern-slot compare cells. A request arriving before an earlier
-        same-key launch *starts* joins it: the launch grows by the
-        marginal cost only, modelling one padded grouped launch
-        (``BrTPFServer.handle_batch``); every member completes together
-        at the launch's final ``done``. ``batch_window`` > 0 delays each
-        launch start to give concurrent requests time to coalesce.
+        ``overhead`` is the per-launch dispatch cost, ``stream`` the
+        cost of this request's candidate HBM stream, ``marginal`` its
+        own pattern-slot compare cells. A request arriving before an
+        earlier launch *starts* joins it (``batch_window`` > 0 delays
+        each start to give concurrent requests time to coalesce):
 
-        Returns (launch, created).
+        * same ``key`` -- it shares that segment's candidate stream and
+          the launch grows by ``marginal`` only (one padded grouped
+          launch, ``BrTPFServer.handle_batch``);
+        * different ``key`` under fusion -- it becomes a NEW segment of
+          the fused launch (``select_fused``): the launch grows by
+          ``stream + marginal`` because the segment brings its own
+          candidate block, but pays no extra dispatch overhead. The
+          launch refuses segments past the ``fusion_legality`` caps.
+
+        Every member completes together at the launch's final ``done``.
+        Returns (launch, created, new_segment, duplicate) --
+        ``new_segment`` is True when this request added its own
+        candidate stream (always True for a created launch);
+        ``duplicate`` marks a same-fragment repeat served from the batch
+        prefill's memo (a store skip on the live server, no new work).
         """
+        tiles = -(-max(cand_rows, 1) // _FUSED_BT)
         if self.batch_window > 0.0:
-            open_ = self._open.get(key)
+            open_ = self._open_any if self.fuse else self._open.get(key)
             if open_ is not None and arrival <= open_.start:
-                open_.done += marginal
-                # the launch grew by `marginal`, so this worker's whole
-                # queue (the launch plus anything accepted after it)
-                # shifts by the same amount -- never rewind free_at
-                self.free_at[open_.worker] += marginal
-                return open_, False
+                if frag_key and frag_key in open_.frags:
+                    return open_, False, False, True
+                if key in open_.keys:
+                    grow, new_seg = marginal, False
+                    open_.seg_rows[key] += max(cand_rows, 0)
+                    open_.seg_full[key] = max(open_.seg_full.get(key, 0),
+                                              full_rows)
+                    open_.frags.add(frag_key)
+                elif (self.fuse
+                        and len(open_.keys) < self.max_segments
+                        and (open_.stream_tiles() + tiles) * _FUSED_BT
+                        <= self.max_stream):
+                    grow, new_seg = stream + marginal, True
+                    open_.seg_rows[key] = max(cand_rows, 0)
+                    open_.seg_full[key] = full_rows
+                    open_.frags.add(frag_key)
+                else:
+                    open_ = None   # fusion caps reached: fresh launch
+                if open_ is not None:
+                    open_.done += grow
+                    # the launch grew, so this worker's whole queue (the
+                    # launch plus anything accepted after it) shifts by
+                    # the same amount -- never rewind free_at
+                    self.free_at[open_.worker] += grow
+                    return open_, False, new_seg, False
         i = int(np.argmin(self.free_at))
         start = max(arrival, self.free_at[i]) + self.batch_window
         launch = _Launch(key=key, start=start,
-                         done=start + shared + marginal, worker=i)
+                         done=start + overhead + stream + marginal,
+                         worker=i, seg_rows={key: max(cand_rows, 0)},
+                         seg_full={key: full_rows},
+                         solo_cand=solo_cand, frags={frag_key})
         self.free_at[i] = launch.done
         if self.batch_window > 0.0:
             self._open[key] = launch
-        return launch, True
+            self._open_any = launch
+        return launch, True, True, False
 
 
 @dataclasses.dataclass
@@ -304,7 +422,10 @@ def simulate(traces_per_client: Sequence[Sequence[QueryTrace]],
     up (the paper's per-core 193-query sequences were sized not to).
     """
     server = _Server(params.server_workers,
-                     batch_window=params.batch_window_s)
+                     batch_window=params.batch_window_s,
+                     fuse=params.fuse_patterns,
+                     max_segments=params.fused_max_segments,
+                     max_stream=params.fused_max_stream)
     cache = LRUCache(cache_size) if use_cache else None
     # Unified-store memo model: LRU set of fragment keys served so far.
     # A later request for a resident fragment skips its launch entirely
@@ -315,12 +436,17 @@ def simulate(traces_per_client: Sequence[Sequence[QueryTrace]],
     # selection's consumer as a store hit). Skip accounting applies to
     # accelerated-backend replays only, mirroring
     # ``Counters.launches_skipped``.
-    memo: "OrderedDict[tuple, None]" = OrderedDict()
+    # frag_key -> name of the query that computed it. The owner matters
+    # for kernel replays: a repeat EXECUTION of the same query finds its
+    # fragments resident (the live store skips those launches), whereas
+    # a cand > 0 event from a DIFFERENT query is trace evidence that the
+    # real store had evicted the fragment by then -- it must launch.
+    memo: "OrderedDict[tuple, str]" = OrderedDict()
     kernel_replay = any(
         isinstance(ev, HttpRecord) and ev.cand > 0
         for traces in traces_per_client
         for trace in traces for ev in trace.events)
-    sim_launches = kernel_requests = sim_skips = sim_cand = 0
+    sim_launches = kernel_requests = sim_skips = sim_cand = sim_rows = 0
     completed = timeouts = attempted = 0
     qet_sum = 0.0
     qets: List[float] = []
@@ -403,10 +529,18 @@ def simulate(traces_per_client: Sequence[Sequence[QueryTrace]],
                 t += params.cache_hit_s
                 if kernel_replay:
                     sim_skips += 1   # page resident: launch avoided
-            elif frag_key in memo:
+            elif frag_key in memo and not (
+                    kernel_replay and ev.cand > 0
+                    and memo[frag_key] != trace.name):
                 # unified-store skip: the fragment was computed by an
                 # earlier request -- served from the memo at servlet
-                # overhead, no launch
+                # overhead, no launch. Kernel traces encode collection-
+                # time residency: a cand > 0 event means the real server
+                # streamed candidates, i.e. its store had EVICTED any
+                # earlier copy -- unless the earlier copy came from a
+                # prior execution of this same query (trace duplication
+                # across clients / wrap-around), which collection never
+                # saw and which the live store serves residency-free.
                 memo.move_to_end(frag_key)
                 if kernel_replay:
                     sim_skips += 1
@@ -421,8 +555,8 @@ def simulate(traces_per_client: Sequence[Sequence[QueryTrace]],
                 # shard in parallel -- so each pays dispatch overhead
                 # but the HBM stream total is just ``cand``).
                 n_launch = max(ev.launches, 1)
-                shared = (n_launch * params.kernel_launch_overhead_s
-                          + ev.cand * params.kernel_stream_s)
+                overhead = n_launch * params.kernel_launch_overhead_s
+                stream = ev.cand * params.kernel_stream_s
                 # per-request work that never batches: HTTP handling +
                 # this request's own pattern-slot compare cells (pats
                 # sums per-launch slot counts, so the per-launch grid is
@@ -430,18 +564,33 @@ def simulate(traces_per_client: Sequence[Sequence[QueryTrace]],
                 marginal = (params.req_overhead_s
                             + ev.cand * ev.pats
                             * params.kernel_cell_s / n_launch)
-                launch, created = server.schedule_launch(
-                    t, ev.pattern_key, shared, marginal)
+                launch, created, new_seg, dup = server.schedule_launch(
+                    t, ev.pattern_key, overhead, stream, marginal,
+                    cand_rows=ev.cand_rows or ev.cand,
+                    solo_cand=ev.cand, frag_key=frag_key,
+                    full_rows=ev.cand_full_rows)
                 kernel_requests += 1
+                if dup and kernel_replay:
+                    # same-fragment repeat inside the window: the live
+                    # batch planner serves it from the prefill memo and
+                    # counts a store skip, not a new launch member
+                    sim_skips += 1
                 # a created request stands for all of its window
                 # launches (1 on the single-host kernel path); a
-                # joining request rides them and creates none -- and
-                # streams no candidates of its own either.
+                # joining request rides them and creates none. A
+                # same-pattern joiner streams no candidates of its own;
+                # a cross-pattern joiner fused in as a new segment DOES
+                # stream its own candidate block. Streamed-row totals
+                # for batched launches are settled at the end (the
+                # launch's padding depends on whether it fused), so only
+                # the unbatched path charges here.
                 sim_launches += n_launch if created else 0
-                sim_cand += ev.cand if created else 0
+                if params.batch_window_s <= 0.0:
+                    sim_cand += ev.cand if created else 0
+                    sim_rows += (ev.cand_rows or ev.cand) if created else 0
                 # the launch leaves this fragment resident in the
                 # modeled unified store
-                memo[frag_key] = None
+                memo[frag_key] = trace.name
                 memo.move_to_end(frag_key)
                 while len(memo) > params.selector_memo_entries:
                     memo.popitem(last=False)
@@ -462,7 +611,7 @@ def simulate(traces_per_client: Sequence[Sequence[QueryTrace]],
                            + ev.scanned * params.scan_s_per_triple)
                 t = server.schedule(t, service)
                 # served -> resident (repeats of this fragment skip)
-                memo[frag_key] = None
+                memo[frag_key] = trace.name
                 memo.move_to_end(frag_key)
                 while len(memo) > params.selector_memo_entries:
                     memo.popitem(last=False)
@@ -476,12 +625,31 @@ def simulate(traces_per_client: Sequence[Sequence[QueryTrace]],
 
     simulated = (params.duration_s if events <= params.max_events
                  else frontier)
+    # fused-shape tallies: every created launch under batching is in
+    # ``launches``; one that accumulated >= 2 distinct pattern keys
+    # modelled a cross-pattern fused launch (Counters.fused_launches).
+    # Its stream is the segments' tile-aligned blocks padded to a pow2
+    # tile count (``select_fused``); a singleton launch pads its block
+    # to the solo shape bucket instead, which the trace already carries.
+    fused = [ln for ln in launches if len(ln.keys) > 1]
+    for ln in launches:
+        streamed = ln.seg_streamed()
+        sim_rows += sum(streamed)
+        if len(ln.keys) > 1:
+            sim_cand += _pow2_at_least(ln.stream_tiles()) * _FUSED_BT
+        else:
+            # same-pattern joiners grew the union block (capped at the
+            # full range); the solo shape bucket (already pow2,
+            # min-bucket floored) is the floor
+            sim_cand += max(ln.solo_cand, _pow2_at_least(sum(streamed)))
     return SimResult(completed, timeouts, attempted, qet_sum, qets,
                      simulated_s=max(simulated, 1e-9),
                      launches=sim_launches,
                      kernel_requests=kernel_requests,
                      launches_skipped=sim_skips,
-                     cand_streamed=sim_cand)
+                     fused_launches=len(fused),
+                     fused_segments=sum(len(ln.keys) for ln in fused),
+                     cand_streamed=sim_cand, cand_rows=sim_rows)
 
 
 def split_workload(workload, num_clients: int):
@@ -528,6 +696,19 @@ class LiveValidation:
     # together when pruning shrinks the streams.
     simulated_cand: int = 0
     observed_cand: int = 0
+    # raw (pre-padding) candidate rows. The padded totals above shift
+    # with how requests regroup into launches (pow2/tile padding is not
+    # additive); raw rows are composition-invariant, so this is the
+    # tight streaming-agreement check under fusion.
+    simulated_cand_rows: int = 0
+    observed_cand_rows: int = 0
+    # cross-pattern fusion validation: launches that served >= 2
+    # distinct patterns (sim: _Launch.keys; observed:
+    # Counters.fused_launches) and their total segment counts.
+    simulated_fused: int = 0
+    observed_fused: int = 0
+    simulated_fused_segments: int = 0
+    observed_fused_segments: int = 0
 
     @property
     def agreement(self) -> float:
@@ -551,6 +732,12 @@ class LiveValidation:
         """Relative streamed-candidate disagreement |obs - sim| / max(sim, 1)."""
         return (abs(self.observed_cand - self.simulated_cand)
                 / max(self.simulated_cand, 1))
+
+    @property
+    def cand_rows_within(self) -> float:
+        """Relative raw-candidate-row disagreement |obs - sim| / max(sim, 1)."""
+        return (abs(self.observed_cand_rows - self.simulated_cand_rows)
+                / max(self.simulated_cand_rows, 1))
 
 
 def requests_from_trace(trace: QueryTrace) -> List["object"]:
@@ -586,7 +773,12 @@ def live_replay(traces_per_client: Sequence[Sequence[QueryTrace]],
     client-per-stream structure.
     """
     from .batching import serve_concurrent
-    sim_params = dataclasses.replace(params, batch_window_s=batch_window_s)
+    # The live loop drives ONE in-process server: flushes serialize on
+    # the event loop, so the matching cost model is a single worker --
+    # an open launch then stays joinable while the previous flush is
+    # still executing, exactly like the real pending-batch queue.
+    sim_params = dataclasses.replace(params, batch_window_s=batch_window_s,
+                                     server_workers=1)
     sim = simulate(traces_per_client, sim_params)
 
     streams = [[req for trace in traces for req in requests_from_trace(trace)]
@@ -608,6 +800,14 @@ def live_replay(traces_per_client: Sequence[Sequence[QueryTrace]],
         simulated_cand=sim.cand_streamed,
         observed_cand=(after.kernel_cand_streamed
                        - base.kernel_cand_streamed),
+        simulated_cand_rows=sim.cand_rows,
+        observed_cand_rows=(after.kernel_cand_rows
+                            - base.kernel_cand_rows),
+        simulated_fused=sim.fused_launches,
+        observed_fused=after.fused_launches - base.fused_launches,
+        simulated_fused_segments=sim.fused_segments,
+        observed_fused_segments=(after.fused_segments
+                                 - base.fused_segments),
     )
 
 
@@ -631,6 +831,9 @@ def main(argv=None) -> int:
                         help="batching window in seconds (sim and live)")
     parser.add_argument("--max-batch", type=int, default=64)
     parser.add_argument("--max-mpr", type=int, default=30)
+    parser.add_argument("--no-fuse", action="store_true",
+                        help="disable cross-pattern kernel fusion in both "
+                             "the cost model and the live server (A/B)")
     parser.add_argument("--seed", type=int, default=0)
     args = parser.parse_args(argv)
 
@@ -640,20 +843,25 @@ def main(argv=None) -> int:
     data = generate(scale, seed=args.seed)
     workload = generate_workload(data, args.queries, seed=args.seed + 1)
 
-    config = ServerConfig(max_mpr=args.max_mpr, selector_backend="kernel")
+    config = ServerConfig(max_mpr=args.max_mpr, selector_backend="kernel",
+                          fuse_patterns=not args.no_fuse)
     server = BrTPFServer(data.store, config)
     traces = collect_traces(server, workload, "brtpf",
                             max_mpr=args.max_mpr)
     params = calibrate(server, workload)
     params.batch_window_s = args.window
+    params.fuse_patterns = not args.no_fuse
     per_client = split_workload(traces, args.clients)
 
     sim = simulate(per_client, params)
     print(f"sim: clients={args.clients} window={args.window:g}s "
+          f"fuse={not args.no_fuse} "
           f"completed={sim.completed} kernel_requests={sim.kernel_requests} "
           f"launches={sim.launches} "
           f"launches_per_request={sim.launches_per_request:.3f} "
           f"launches_skipped={sim.launches_skipped} "
+          f"fused_launches={sim.fused_launches} "
+          f"fused_segments_per_launch={sim.fused_segments_per_launch:.2f} "
           f"cand_streamed={sim.cand_streamed} "
           f"cand_per_request={sim.cand_per_request:.0f}")
     if not args.live:
@@ -676,6 +884,12 @@ def main(argv=None) -> int:
     print(f"validation(cand): simulated={lv.simulated_cand} "
           f"observed={lv.observed_cand} "
           f"(|rel err|={lv.cand_within:.1%})")
+    print(f"validation(cand_rows): simulated={lv.simulated_cand_rows} "
+          f"observed={lv.observed_cand_rows} "
+          f"(|rel err|={lv.cand_rows_within:.1%})")
+    print(f"validation(fused): simulated={lv.simulated_fused} launches / "
+          f"{lv.simulated_fused_segments} segments, "
+          f"observed={lv.observed_fused} / {lv.observed_fused_segments}")
     # The live loop reports through the SAME canonical snapshot schema
     # the serving edge exposes at GET /metrics (core/metrics.py), so a
     # number printed here is directly comparable to what the load
@@ -684,6 +898,9 @@ def main(argv=None) -> int:
     c = snap["counters"]
     print(f"metrics[{snap['v']}]: num_requests={c['num_requests']} "
           f"kernel_launches={c['kernel_launches']} "
+          f"fused_launches={c['fused_launches']} "
+          f"fused_segments_per_launch="
+          f"{snap['fused_segments_per_launch']:.2f} "
           f"kernel_batched_requests={c['kernel_batched_requests']} "
           f"launches_skipped={snap['launches_skipped']} "
           f"selector_memo_hit_rate="

@@ -86,13 +86,18 @@ def request_to_wire(req) -> dict:
         om = np.asarray(req.omega)
         omega = [[int(x) for x in row] for row in om.tolist()]
         omega_vars = int(om.shape[1]) if om.ndim == 2 else 0
-    return envelope(
+    out = envelope(
         KIND_REQUEST,
         pattern=[int(c) for c in req.pattern.as_tuple()],
         omega=omega,
         omega_vars=omega_vars,
         page=int(req.page),
     )
+    # count probes (docs/fusion.md): emitted only when set, so v1 bodies
+    # from pre-fusion clients stay byte-identical
+    if getattr(req, "count_only", False):
+        out["count_only"] = True
+    return out
 
 
 def request_from_wire(obj):
@@ -118,7 +123,11 @@ def request_from_wire(obj):
     page = obj.get("page", 0)
     if not isinstance(page, int) or page < 0:
         raise WireError("'page' must be a non-negative int")
-    return Request(pattern=tp, omega=omega, page=page)
+    count_only = obj.get("count_only", False)
+    if not isinstance(count_only, bool):
+        raise WireError("'count_only' must be a bool")
+    return Request(pattern=tp, omega=omega, page=page,
+                   count_only=count_only)
 
 
 # ---------------------------------------------------------------------------

@@ -53,6 +53,12 @@ from jax.experimental import pallas as pl
 DEFAULT_BT = 1024
 DEFAULT_BM = 128
 
+# Fused launches tile the candidate stream finer than the same-pattern
+# grouped kernel: each segment's block is tile-aligned independently, so
+# a smaller tile bounds the per-segment alignment waste while staying a
+# multiple of the VPU's 8-row sublane.
+DEFAULT_FUSED_BT = 256
+
 
 def _bindjoin_kernel(cs_ref, cp_ref, co_ref, ps_ref, pp_ref, po_ref,
                      pv_ref, keep_ref, idx_ref, *, bm: int, m_total: int):
@@ -231,5 +237,126 @@ def bindjoin_grouped_pallas(cand_s, cand_p, cand_o, pat_s, pat_p, pat_o,
         ],
         interpret=interpret,
     )(cand2(cand_s), cand2(cand_p), cand2(cand_o),
+      pat2(pat_s), pat2(pat_p), pat2(pat_o), pat2(pat_valid))
+    return keep, idx, nmatch
+
+
+def _bindjoin_fused_kernel(seg_ref, cs_ref, cp_ref, co_ref, ps_ref, pp_ref,
+                           po_ref, pv_ref, keep_ref, idx_ref, nmatch_ref,
+                           *, bm: int, m_per_group: int, m_per_seg: int):
+    """Heterogeneous-batch bind-join: the kernel resolves its segment.
+
+    Each candidate tile carries a segment id (``seg_ref``, one scalar per
+    t-tile); the flat pattern table holds every segment's slot block side
+    by side, so the tile's pattern slice starts at
+    ``seg * m_per_seg + j * bm`` -- a dynamic ``pl.ds`` slice into the
+    VMEM-resident table. Dead padding tiles carry segment id -1 and
+    match nothing.
+    """
+    tiles_per_group = m_per_group // bm
+    j = pl.program_id(1)
+    m_step = j % tiles_per_group     # m-tile within this tile's group
+
+    seg = seg_ref[0, 0]              # this candidate tile's segment id
+    live = seg >= 0
+    col0 = jnp.maximum(seg, 0) * m_per_seg + j * bm
+
+    cs = cs_ref[...]                 # (BT, 1) int32
+    cp = cp_ref[...]
+    co = co_ref[...]
+    ps = ps_ref[:, pl.ds(col0, bm)]  # (1, BM) -- this segment's slot tile
+    pp = pp_ref[:, pl.ds(col0, bm)]
+    po = po_ref[:, pl.ds(col0, bm)]
+    pv = pv_ref[:, pl.ds(col0, bm)]
+
+    comp = (
+        ((ps < 0) | (cs == ps))
+        & ((pp < 0) | (cp == pp))
+        & ((po < 0) | (co == po))
+        & (pv != 0)
+        & live
+    )                                # (BT, BM) bool
+
+    any_m = jnp.any(comp, axis=1, keepdims=True)              # (BT, 1)
+    cnt_m = jnp.sum(comp.astype(jnp.int32), axis=1,
+                    keepdims=True).astype(jnp.int32)          # (BT, 1)
+    col = jax.lax.broadcasted_iota(jnp.int32, comp.shape, 1)
+    col = col + m_step * bm
+    big = jnp.int32(m_per_group)
+    first = jnp.min(jnp.where(comp, col, big), axis=1,
+                    keepdims=True).astype(jnp.int32)          # (BT, 1)
+
+    @pl.when(m_step == 0)
+    def _init():
+        keep_ref[...] = any_m.astype(jnp.int32)
+        idx_ref[...] = first
+        nmatch_ref[...] = cnt_m
+
+    @pl.when(m_step != 0)
+    def _accum():
+        keep_ref[...] = jnp.maximum(keep_ref[...], any_m.astype(jnp.int32))
+        idx_ref[...] = jnp.minimum(idx_ref[...], first)
+        nmatch_ref[...] = nmatch_ref[...] + cnt_m
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("segments", "groups", "bt", "bm",
+                                    "interpret"))
+def bindjoin_fused_pallas(seg_of_tile, cand_s, cand_p, cand_o, pat_s, pat_p,
+                          pat_o, pat_valid, *, segments: int, groups: int,
+                          bt: int = DEFAULT_FUSED_BT, bm: int = DEFAULT_BM,
+                          interpret: bool = False):
+    """Cross-pattern fused bind-join: S segments, one launch.
+
+    ``seg_of_tile`` is int32 ``[T // bt]`` mapping each candidate tile to
+    its segment (-1 = dead padding tile). Pattern inputs are flat int32
+    ``[segments * groups * Mp]`` slot tables -- per segment, ``groups``
+    pattern sets of ``Mp`` (multiple of ``bm``) slots. Candidates are
+    int32 ``[T]`` with ``T`` a multiple of ``bt``; every tile's rows
+    belong to one segment (``ops.bindjoin_fused`` marshals/pads).
+
+    Returns (keep, idx, nmatch) int32 ``[T, groups]`` where column g of a
+    row is that row's result against *its own segment's* group-g pattern
+    set (``idx == Mp`` when no match).
+    """
+    t = cand_s.shape[0]
+    sgm = pat_s.shape[0]
+    assert sgm % (segments * groups) == 0, (sgm, segments, groups)
+    mp = sgm // (segments * groups)
+    assert t % bt == 0 and mp % bm == 0, (t, mp, bt, bm)
+    assert seg_of_tile.shape[0] == t // bt, (seg_of_tile.shape, t, bt)
+    tiles_per_group = mp // bm
+    m_per_seg = groups * mp
+
+    cand2 = lambda x: x.reshape(t, 1)
+    pat2 = lambda x: x.reshape(1, sgm)
+
+    grid = (t // bt, m_per_seg // bm)
+    kernel = functools.partial(_bindjoin_fused_kernel, bm=bm,
+                               m_per_group=mp, m_per_seg=m_per_seg)
+    out_spec = pl.BlockSpec((bt, 1),
+                            lambda i, j: (i, j // tiles_per_group))
+    keep, idx, nmatch = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),    # segment id
+            pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),   # cand s
+            pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),   # cand p
+            pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),   # cand o
+            pl.BlockSpec((1, sgm), lambda i, j: (0, 0)),  # pat s (table)
+            pl.BlockSpec((1, sgm), lambda i, j: (0, 0)),  # pat p
+            pl.BlockSpec((1, sgm), lambda i, j: (0, 0)),  # pat o
+            pl.BlockSpec((1, sgm), lambda i, j: (0, 0)),  # pat valid
+        ],
+        out_specs=[out_spec, out_spec, out_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, groups), jnp.int32),
+            jax.ShapeDtypeStruct((t, groups), jnp.int32),
+            jax.ShapeDtypeStruct((t, groups), jnp.int32),
+        ],
+        interpret=interpret,
+    )(seg_of_tile.reshape(t // bt, 1),
+      cand2(cand_s), cand2(cand_p), cand2(cand_o),
       pat2(pat_s), pat2(pat_p), pat2(pat_o), pat2(pat_valid))
     return keep, idx, nmatch

@@ -15,7 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import ref
-from .bindjoin import (DEFAULT_BM, DEFAULT_BT, bindjoin_grouped_pallas,
+from .bindjoin import (DEFAULT_BM, DEFAULT_BT, DEFAULT_FUSED_BT,
+                       bindjoin_fused_pallas, bindjoin_grouped_pallas,
                        bindjoin_pallas)
 from .tpf_match import DEFAULT_BR, LANES, tpf_match_pallas
 
@@ -117,6 +118,56 @@ def bindjoin_grouped(cand: jnp.ndarray, patterns: jnp.ndarray,
             po.reshape(g, mp), pv.reshape(g, mp))
         keep = keep.astype(jnp.int32)
     return keep[:t].astype(bool), idx[:t], nmatch[:t]
+
+
+def bindjoin_fused(cand: jnp.ndarray, seg_of_tile: jnp.ndarray,
+                   patterns: jnp.ndarray, pat_valid: jnp.ndarray, *,
+                   bt: int = DEFAULT_FUSED_BT, bm: int = DEFAULT_BM,
+                   use_pallas: bool = True
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Cross-pattern fused bind-join: S segments share one candidate pass.
+
+    Args:
+      cand: int32 [T, 3] concatenated candidate stream, T % bt == 0;
+        each bt-tile's rows belong to one segment (callers tile-align
+        every segment's block -- ``kernel_selectors.select_fused``).
+      seg_of_tile: int32 [T // bt] per-tile segment id (-1 = dead tile).
+      patterns: int32 [S, G, M, 3] per-segment per-group instantiated
+        patterns (component < 0 = wild).
+      pat_valid: int32 [S, G, M] (0 marks padding rows).
+
+    Returns:
+      keep:   bool  [T, G] -- row matches its own segment's group g.
+      idx:    int32 [T, G] -- first matching within-group pattern index
+        (= padded M if none).
+      nmatch: int32 [T, G] -- matching-pattern count (cnt contribution).
+    """
+    t = cand.shape[0]
+    s, g, m = patterns.shape[0], patterns.shape[1], patterns.shape[2]
+    assert t % bt == 0, (t, bt)
+    mp = padded_pattern_slots(m, bm)
+
+    def pad_flat(x, fill):
+        out = jnp.full((s, g, mp), fill, dtype=x.dtype)
+        return out.at[:, :, :m].set(x).reshape(s * g * mp)
+
+    ps = pad_flat(patterns[:, :, :, 0], 0)
+    pp = pad_flat(patterns[:, :, :, 1], 0)
+    po = pad_flat(patterns[:, :, :, 2], 0)
+    pv = pad_flat(pat_valid.astype(jnp.int32), 0)
+    if use_pallas:
+        keep, idx, nmatch = bindjoin_fused_pallas(
+            seg_of_tile.astype(jnp.int32), cand[:, 0], cand[:, 1],
+            cand[:, 2], ps, pp, po, pv, segments=s, groups=g, bt=bt, bm=bm,
+            interpret=_use_interpret())
+    else:
+        seg_of_row = jnp.repeat(seg_of_tile.astype(jnp.int32), bt)
+        keep, idx, nmatch = ref.bindjoin_fused_ref(
+            cand[:, 0], cand[:, 1], cand[:, 2], seg_of_row,
+            ps.reshape(s, g, mp), pp.reshape(s, g, mp),
+            po.reshape(s, g, mp), pv.reshape(s, g, mp))
+        keep = keep.astype(jnp.int32)
+    return keep.astype(bool), idx, nmatch
 
 
 def tpf_match(cand: jnp.ndarray, pattern_vec: jnp.ndarray, *,

@@ -83,6 +83,41 @@ def bindjoin_grouped_ref(cand_s, cand_p, cand_o, pat_s, pat_p, pat_o,
     return keep, idx, nmatch
 
 
+def bindjoin_fused_ref(cand_s, cand_p, cand_o, seg_of_row, pat_s, pat_p,
+                       pat_o, pat_valid):
+    """Reference cross-pattern fused bind-join filter.
+
+    Pattern components are ``[S, G, M]`` (S segments, each with G request
+    groups); ``seg_of_row`` is int32 ``[T]`` mapping each candidate row
+    to its segment (-1 = dead padding row, matches nothing). Returns
+    keep/idx/nmatch ``[T, G]`` where column g holds the row's result
+    against *its own segment's* group-g pattern set (idx = M if none).
+    """
+    m = pat_s.shape[2]
+    seg = jnp.maximum(seg_of_row, 0)
+    ms = pat_s[seg]                  # [T, G, M] per-row segment gather
+    mp = pat_p[seg]
+    mo = pat_o[seg]
+    mv = pat_valid[seg]
+    cs = cand_s[:, None, None]
+    cp = cand_p[:, None, None]
+    co = cand_o[:, None, None]
+    comp = (
+        ((ms < 0) | (cs == ms))
+        & ((mp < 0) | (cp == mp))
+        & ((mo < 0) | (co == mo))
+        & (mv != 0)
+        & (seg_of_row >= 0)[:, None, None]
+    )  # [T, G, M]
+    keep = jnp.any(comp, axis=-1)
+    nmatch = jnp.sum(comp.astype(jnp.int32), axis=-1)
+    big = jnp.int32(m)
+    idx_grid = jnp.where(
+        comp, jnp.arange(m, dtype=jnp.int32)[None, None, :], big)
+    idx = jnp.min(idx_grid, axis=-1).astype(jnp.int32)
+    return keep, idx, nmatch
+
+
 def tpf_match_ref(cand_s, cand_p, cand_o, pattern_vec):
     """Reference triple-pattern matcher.
 

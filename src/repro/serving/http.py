@@ -12,7 +12,11 @@ gives the async front end a real HTTP boundary:
 * ``POST /fragment``  -- the same request as a brtpf/v1 ``request``
   envelope body (``core/wire.py``);
 * ``GET  /metrics``   -- the canonical metrics snapshot
-  (``core/metrics.py``), same keys over the wire as in-process.
+  (``core/metrics.py``), same keys over the wire as in-process, plus a
+  transport-only ``routes`` section: server-side per-endpoint latency
+  quantiles over a bounded window of recent requests, in the SAME
+  ``latency_summary()`` schema the closed-loop load generator reports
+  client-side -- so an SLO gate can read either side of the wire.
 
 An over-maxMpR request maps to **HTTP 414** (the paper's URL-length
 rationale for maxMpR made literal); malformed envelopes map to 400.
@@ -32,17 +36,63 @@ from __future__ import annotations
 
 import asyncio
 import json
-from typing import List, Optional, Tuple
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
 from urllib.parse import parse_qs
 
 from ..core.batching import (DEFAULT_BATCH_WINDOW_S, DEFAULT_MAX_BATCH,
                              AsyncBrTPFServer)
+from ..core.metrics import latency_summary
 from ..core.server import MaxMprExceeded
 from ..core.wire import (WIRE_VERSION, KIND_REQUEST, WireError, dumps,
                          envelope, error_to_wire, fragment_to_wire, loads,
                          request_from_wire)
 
 _JSON_HEADERS = [(b"content-type", b"application/json")]
+
+# Per-route latency window: how many recent request durations each
+# endpoint retains. Bounded so a long-lived server cannot grow metrics
+# state without bound; 2048 samples keep p99 meaningful (nearest-rank
+# needs ~100+ samples) while costing a few KiB per route.
+ROUTE_SAMPLE_CAP = 2048
+
+# Endpoints whose latency is recorded (unknown paths are not: an
+# attacker probing random URLs must not mint unbounded route labels).
+_ROUTED_PATHS = ("/", "/fragment", "/metrics")
+
+
+class RouteLatency:
+    """Server-side per-endpoint latency recorder.
+
+    Keeps the last :data:`ROUTE_SAMPLE_CAP` request durations per
+    ``"METHOD /path"`` label and summarizes them through the shared
+    :func:`~repro.core.metrics.latency_summary` schema -- p50/p95/p99/
+    mean milliseconds plus ``req_per_s`` -- so ``GET /metrics`` exposes
+    the same quantile keys server-side that ``benchmarks/latency.py``
+    measures client-side. ``req_per_s`` is computed over the wall time
+    since the route's first recorded request (the SLO-relevant arrival
+    rate, not the sum of service times).
+    """
+
+    def __init__(self, cap: int = ROUTE_SAMPLE_CAP) -> None:
+        self._cap = int(cap)
+        self._samples: Dict[str, Deque[float]] = {}
+        self._started: Dict[str, float] = {}
+
+    def record(self, route: str, seconds: float, now: float) -> None:
+        window = self._samples.get(route)
+        if window is None:
+            window = self._samples[route] = deque(maxlen=self._cap)
+            self._started[route] = now - seconds
+        window.append(seconds)
+
+    def summary(self, now: Optional[float] = None) -> dict:
+        now = time.perf_counter() if now is None else now
+        return {route: latency_summary(
+                    list(window),
+                    wall_s=max(now - self._started[route], 1e-9))
+                for route, window in sorted(self._samples.items())}
 
 
 class BrTPFApp:
@@ -58,6 +108,7 @@ class BrTPFApp:
 
     def __init__(self, backend) -> None:
         self.backend = backend
+        self.route_latency = RouteLatency()
 
     @property
     def max_mpr(self) -> int:
@@ -76,20 +127,26 @@ class BrTPFApp:
             raise RuntimeError(f"unsupported ASGI scope {scope['type']!r}")
         method = scope["method"]
         path = scope["path"]
-        if path == "/fragment" and method in ("GET", "POST"):
-            await self._fragment(scope, receive, send, method)
-        elif path == "/metrics" and method == "GET":
-            await self._send_json(send, 200,
-                                  self.backend.metrics_snapshot())
-        elif path == "/" and method == "GET":
-            await self._send_json(send, 200, self._describe())
-        elif path in ("/", "/fragment", "/metrics"):
-            await self._send_json(
-                send, 405, error_to_wire(405, f"method {method} not "
-                                              f"allowed on {path}"))
-        else:
-            await self._send_json(
-                send, 404, error_to_wire(404, f"unknown path {path!r}"))
+        start = time.perf_counter()
+        try:
+            if path == "/fragment" and method in ("GET", "POST"):
+                await self._fragment(scope, receive, send, method)
+            elif path == "/metrics" and method == "GET":
+                await self._send_json(send, 200, self._metrics())
+            elif path == "/" and method == "GET":
+                await self._send_json(send, 200, self._describe())
+            elif path in _ROUTED_PATHS:
+                await self._send_json(
+                    send, 405, error_to_wire(405, f"method {method} not "
+                                                  f"allowed on {path}"))
+            else:
+                await self._send_json(
+                    send, 404, error_to_wire(404, f"unknown path {path!r}"))
+        finally:
+            if path in _ROUTED_PATHS:
+                now = time.perf_counter()
+                self.route_latency.record(f"{method} {path}",
+                                          now - start, now)
 
     async def _lifespan(self, receive, send) -> None:
         while True:
@@ -102,6 +159,15 @@ class BrTPFApp:
                 return
 
     # -- handlers ------------------------------------------------------------
+
+    def _metrics(self) -> dict:
+        """Backend snapshot plus the transport-only per-route latency
+        section. ``routes`` is added HERE and not in metrics_snapshot:
+        only the wire layer has routes, and the in-process snapshot
+        must stay byte-comparable across surfaces that have none."""
+        snap = self.backend.metrics_snapshot()
+        snap["routes"] = self.route_latency.summary()
+        return snap
 
     def _describe(self) -> dict:
         return envelope(

@@ -1,0 +1,10 @@
+"""KL005 bad: a fused bind-join launch whose segment count never
+reaches a LaunchRecord sink -- invisible to fused_segments_per_launch."""
+from repro.kernels import ops as kops
+
+
+def launch_fused(cand, seg_of_tile, pats, segments, groups):
+    keep, idx, nmatch = kops.bindjoin_fused(cand, seg_of_tile, pats,  # BAD
+                                            segments=segments,
+                                            groups=groups)
+    return keep, idx, nmatch

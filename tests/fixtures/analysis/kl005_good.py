@@ -1,0 +1,18 @@
+"""KL005 good: the fused bind-join call site records its segment count
+into the module's LaunchRecord sink."""
+from repro.core.kernel_selectors import LaunchRecord
+from repro.kernels import ops as kops
+
+
+class Selector:
+    def __init__(self):
+        self.launches = []
+
+    def launch_fused(self, cand, seg_of_tile, pats, segments, groups):
+        keep, idx, nmatch = kops.bindjoin_fused(cand, seg_of_tile, pats,
+                                                segments=segments,
+                                                groups=groups)
+        self.launches.append(LaunchRecord(
+            cand_streamed=int(cand.shape[0]), pat_slots=groups,
+            groups=groups, segments=segments))
+        return keep, idx, nmatch

@@ -27,6 +27,7 @@ CASES = [
     ("kl002", "KL002"),
     ("kl003", "KL003"),
     ("kl004", "KL004"),
+    ("kl005", "KL005"),
     ("cc001", "CC001"),
     ("cc002", "CC002"),
     ("ac001", "AC001"),

@@ -1,0 +1,257 @@
+"""Cross-pattern kernel fusion (docs/fusion.md): parity and legality.
+
+The non-negotiable bar: a heterogeneous batch served through the fused
+path must produce fragments BYTE-IDENTICAL to the unfused path (and to
+the per-request numpy oracle) on every selector backend -- mixed data
+and count segments, empty-Omega and wildcard edges included. Legality
+is conservative in the spirit of DaCe's state-fusion tests: declared
+dependencies and capacity ceilings refuse to fuse and fall back to
+per-group launches, with the SAME bytes.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (BrTPFServer, Request, ServerConfig, TriplePattern,
+                        TripleStore, UNBOUND, brtpf_select_with_cnt,
+                        encode_var, fragment_to_wire)
+from repro.core.kernel_selectors import (FusedSegment, KernelSelector,
+                                         MAX_FUSED_SEGMENTS,
+                                         MAX_FUSED_STREAM, fusion_legality)
+from repro.core.wire import dumps
+
+try:
+    import hypothesis
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # pragma: no cover - minimal environment
+    hypothesis = None
+
+V = encode_var
+
+pytestmark = pytest.mark.tier1
+
+BACKENDS = ["numpy", "kernel", "sharded"]
+
+
+def make_store(seed=0, n=600, terms=15):
+    rng = np.random.default_rng(seed)
+    return TripleStore(np.unique(
+        rng.integers(0, terms, size=(n, 3)).astype(np.int32), axis=0))
+
+
+def rand_omega(rng, m, v=2, terms=15, unbound_frac=0.3):
+    om = rng.integers(0, terms, size=(m, v)).astype(np.int32)
+    om[rng.random((m, v)) < unbound_frac] = UNBOUND
+    return om
+
+
+def make_server(store, backend, fuse, **extra):
+    cfg = ServerConfig(selector_backend=backend, fuse_patterns=fuse,
+                       max_mpr=30, **extra)
+    if backend == "sharded":
+        cfg = ServerConfig(selector_backend=backend, fuse_patterns=fuse,
+                           max_mpr=30, shard_window=256, **extra)
+    return BrTPFServer(store, cfg)
+
+
+def hetero_batch(rng, count_probes=True):
+    """A heterogeneous batch: >= 4 distinct patterns, mixed Omega
+    shapes (brTPF, TPF/None, empty-Omega, full wildcard), and --
+    optionally -- interleaved Definition-2 count probes."""
+    reqs = [
+        Request(pattern=TriplePattern(V(0), 3, V(1)),
+                omega=rand_omega(rng, 6)),
+        Request(pattern=TriplePattern(5, V(0), V(1)),
+                omega=rand_omega(rng, 4)),
+        Request(pattern=TriplePattern(V(0), V(1), 7),
+                omega=rand_omega(rng, 9)),
+        # TPF member: no Omega at all
+        Request(pattern=TriplePattern(V(0), 2, V(1))),
+        # empty-Omega edge: zero mappings behaves as TPF
+        Request(pattern=TriplePattern(V(0), 5, V(1)),
+                omega=np.empty((0, 2), np.int32)),
+        # full wildcard pattern
+        Request(pattern=TriplePattern(V(0), V(1), V(2)),
+                omega=rand_omega(rng, 3, v=3)),
+        # repeated-variable pattern
+        Request(pattern=TriplePattern(V(0), 4, V(0)),
+                omega=rand_omega(rng, 5, v=1)),
+    ]
+    if count_probes:
+        reqs += [
+            Request(pattern=TriplePattern(V(0), 3, V(1)),
+                    omega=rand_omega(rng, 5), count_only=True),
+            Request(pattern=TriplePattern(9, V(0), V(1)),
+                    count_only=True),
+        ]
+    return reqs
+
+
+def wire_bytes(frags):
+    return [dumps(fragment_to_wire(f)) for f in frags]
+
+
+class TestFusedBatchParity:
+    """Fused vs unfused vs per-request oracle, all three backends."""
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_hetero_batch_byte_identical(self, backend, seed):
+        store = make_store(seed)
+        reqs = hetero_batch(np.random.default_rng(seed))
+
+        fused = make_server(store, backend, fuse=True)
+        unfused = make_server(store, backend, fuse=False)
+        oracle = make_server(store, "numpy", fuse=False)
+
+        got = wire_bytes(fused.handle_batch(reqs))
+        want_unfused = wire_bytes(unfused.handle_batch(reqs))
+        want_oracle = wire_bytes([oracle.handle(r) for r in reqs])
+        assert got == want_unfused == want_oracle
+
+        if backend != "numpy":
+            # the fused server actually fused (>= 2 segments shared a
+            # launch) and the unfused server never did
+            assert fused.counters.fused_launches >= 1
+            assert fused.counters.fused_segments \
+                   >= 2 * fused.counters.fused_launches
+            assert unfused.counters.fused_launches == 0
+            # the whole point: strictly fewer launches than unfused
+            assert fused.counters.kernel_launches \
+                   < unfused.counters.kernel_launches
+
+    @pytest.mark.parametrize("backend", ["kernel", "sharded"])
+    def test_count_only_batch(self, backend):
+        """An all-count batch fuses too, and count fragments carry
+        cnt-only payloads identical to the oracle's."""
+        store = make_store(3)
+        rng = np.random.default_rng(3)
+        reqs = [Request(pattern=TriplePattern(V(0), p, V(1)),
+                        omega=rand_omega(rng, 4), count_only=True)
+                for p in (2, 3, 5, 7)]
+        fused = make_server(store, backend, fuse=True)
+        oracle = make_server(store, "numpy", fuse=False)
+        got = wire_bytes(fused.handle_batch(reqs))
+        want = wire_bytes([oracle.handle(r) for r in reqs])
+        assert got == want
+        for frag in fused.handle_batch(reqs):
+            assert frag.data.shape[0] == 0   # counts never stream rows
+
+    @pytest.mark.parametrize("backend", ["kernel", "sharded"])
+    def test_paging_through_fused_prefill(self, backend):
+        """Page 1+ requests served off a fused prefill page exactly
+        like the oracle pages its per-request selection."""
+        store = make_store(4)
+        rng = np.random.default_rng(4)
+        base = hetero_batch(rng, count_probes=False)
+        fused = make_server(store, backend, fuse=True, page_size=8)
+        oracle = make_server(store, "numpy", fuse=False, page_size=8)
+        first = fused.handle_batch(base)
+        for req, frag in zip(base, first):
+            want = oracle.handle(req)
+            assert dumps(fragment_to_wire(frag)) \
+                   == dumps(fragment_to_wire(want))
+            page = 1
+            while want.has_next:
+                nxt = Request(pattern=req.pattern, omega=req.omega,
+                              page=page)
+                want = oracle.handle(nxt)
+                got = fused.handle(nxt)
+                assert dumps(fragment_to_wire(got)) \
+                       == dumps(fragment_to_wire(want))
+                page += 1
+
+
+class TestFusionLegality:
+    """Conservative, explicit refusals with a documented fallback."""
+
+    def _segments(self, store, rng, n=3, depends=()):
+        segs = []
+        for i, p in enumerate((2, 3, 5, 7, 11)[:n]):
+            segs.append(FusedSegment(
+                tp=TriplePattern(V(0), p, V(1)),
+                omegas=[rand_omega(rng, 4)],
+                depends_on=(0,) if i in depends else ()))
+        return segs
+
+    def test_dependent_segments_refuse(self):
+        store = make_store(5)
+        rng = np.random.default_rng(5)
+        segs = self._segments(store, rng, n=3, depends=(1,))
+        reason = fusion_legality(segs, stream_rows=1024, slot_table=64)
+        assert reason is not None and "dependent" in reason
+
+    def test_capacity_ceilings_refuse(self):
+        store = make_store(5)
+        rng = np.random.default_rng(5)
+        segs = self._segments(store, rng, n=3)
+        assert "segment count" in fusion_legality(
+            segs, stream_rows=1024, slot_table=64, max_segments=2)
+        assert "candidate stream" in fusion_legality(
+            segs, stream_rows=MAX_FUSED_STREAM + 1, slot_table=64)
+        assert "slot table" in fusion_legality(
+            segs, stream_rows=1024, slot_table=64, max_slots=63)
+        assert fusion_legality(segs, stream_rows=1024,
+                               slot_table=64) is None
+        assert MAX_FUSED_SEGMENTS >= 2
+
+    def test_dependent_segments_fall_back_to_per_group(self):
+        """select_fused with a declared dependency: no fused launch is
+        recorded, results still byte-match the oracle."""
+        store = make_store(6)
+        rng = np.random.default_rng(6)
+        segs = self._segments(store, rng, n=3, depends=(2,))
+        sel = KernelSelector(store)
+        results = sel.select_fused(segs)
+        assert all(rec.segments == 1 for rec in sel.launches)
+        assert len(sel.launches) >= 2   # one grouped launch per segment
+        for seg, rows in zip(segs, results):
+            for om, (data, cnt) in zip(seg.omegas, rows):
+                want, wcnt = brtpf_select_with_cnt(store, seg.tp, om)
+                np.testing.assert_array_equal(data, want)
+                assert cnt == wcnt
+
+    def test_independent_segments_fuse_into_one_launch(self):
+        store = make_store(7)
+        rng = np.random.default_rng(7)
+        segs = self._segments(store, rng, n=3)
+        sel = KernelSelector(store)
+        results = sel.select_fused(segs)
+        fused = [rec for rec in sel.launches if rec.segments >= 2]
+        assert len(fused) == 1
+        assert fused[0].segments == 3
+        assert fused[0].cand_rows > 0
+        for seg, rows in zip(segs, results):
+            for om, (data, cnt) in zip(seg.omegas, rows):
+                want, wcnt = brtpf_select_with_cnt(store, seg.tp, om)
+                np.testing.assert_array_equal(data, want)
+                assert cnt == wcnt
+
+
+if hypothesis is not None:
+    @st.composite
+    def batches(draw):
+        seed = draw(st.integers(0, 2**16))
+        rng = np.random.default_rng(seed)
+        n_pat = draw(st.integers(2, 5))
+        preds = draw(st.lists(st.integers(0, 12), min_size=n_pat,
+                              max_size=n_pat, unique=True))
+        reqs = []
+        for p in preds:
+            kind = draw(st.sampled_from(["brtpf", "tpf", "count"]))
+            om = (rand_omega(rng, draw(st.integers(1, 8)))
+                  if kind != "tpf" else None)
+            reqs.append(Request(pattern=TriplePattern(V(0), p, V(1)),
+                                omega=om, count_only=kind == "count"))
+        return seed, reqs
+
+    class TestFusionPropertySweep:
+        @settings(max_examples=25, deadline=None)
+        @given(batches())
+        def test_fused_equals_oracle(self, batch):
+            seed, reqs = batch
+            store = make_store(seed % 7)
+            fused = make_server(store, "kernel", fuse=True)
+            oracle = make_server(store, "numpy", fuse=False)
+            got = wire_bytes(fused.handle_batch(reqs))
+            want = wire_bytes([oracle.handle(r) for r in reqs])
+            assert got == want

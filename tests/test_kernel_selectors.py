@@ -9,8 +9,9 @@ independent of the selector backend.
 import numpy as np
 import pytest
 
-from repro.core import (BrTPFServer, Request, TriplePattern, TripleStore,
-                        UNBOUND, brtpf_select_with_cnt, encode_var)
+from repro.core import (BrTPFServer, Request, ServerConfig, TriplePattern,
+                        TripleStore, UNBOUND, brtpf_select_with_cnt,
+                        encode_var)
 from repro.core.kernel_selectors import KernelSelector
 
 V = encode_var
@@ -184,11 +185,26 @@ class TestServerBackendParity:
             assert f_w.cnt == f_g.cnt
             assert f_w.has_next == f_g.has_next
 
-        # the three tp_a selections shared ONE grouped launch; tp_b was
-        # a solo launch: 2 launches total vs 4 for the unbatched server
-        assert batched.counters.kernel_launches == 2
+        # cross-pattern fusion (docs/fusion.md): the tp_a group and the
+        # tp_b solo segment share ONE fused launch vs 4 unbatched
+        assert batched.counters.kernel_launches == 1
+        assert batched.counters.fused_launches == 1
+        assert batched.counters.fused_segments == 2
         assert solo.counters.kernel_launches == 4
-        assert batched.counters.kernel_batched_requests == 3
+        # every member rode the fused launch, tp_b solo included
+        assert batched.counters.kernel_batched_requests == 4
+
+        # with fusion off, handle_batch still coalesces same-pattern
+        # requests: one grouped launch per pattern (the PR 1 contract)
+        unfused = BrTPFServer(
+            store, ServerConfig(selector_backend="kernel",
+                                fuse_patterns=False))
+        got_unfused = unfused.handle_batch(reqs)
+        for f_w, f_g in zip(want, got_unfused, strict=True):
+            np.testing.assert_array_equal(f_w.data, f_g.data)
+        assert unfused.counters.kernel_launches == 2
+        assert unfused.counters.fused_launches == 0
+        assert unfused.counters.kernel_batched_requests == 3
         # identical transfer/request accounting either way
         assert (batched.counters.num_requests
                 == solo.counters.num_requests)

@@ -20,8 +20,9 @@ import numpy as np
 import pytest
 from jax.sharding import Mesh
 
-from repro.core import (BrTPFServer, Request, TriplePattern, TripleStore,
-                        UNBOUND, brtpf_select_with_cnt, encode_var)
+from repro.core import (BrTPFServer, Request, ServerConfig, TriplePattern,
+                        TripleStore, UNBOUND, brtpf_select_with_cnt,
+                        encode_var)
 from repro.core.federation import FederatedStore, ShardedSelector
 
 V = encode_var
@@ -220,12 +221,30 @@ class TestServerShardedBackendParity:
         batched_expect = (pages_for(tp_a, [reqs[0], reqs[1], reqs[3]])
                           + pages_for(tp_b, [reqs[2]]))
         assert solo.counters.kernel_launches == solo_expect
-        assert batched.counters.kernel_launches == batched_expect
+        # cross-pattern fusion (docs/fusion.md): both patterns' pruned
+        # unions share launches instead of paying per-pattern pages
+        assert batched.counters.fused_launches >= 1
+        assert batched.counters.fused_segments \
+            >= 2 * batched.counters.fused_launches
+        assert batched.counters.kernel_launches <= batched_expect
         assert batched.counters.kernel_launches \
             <= solo.counters.kernel_launches
         whole_shard_pages = -(-fed.shard_n // 128)
         assert solo.counters.kernel_launches < 4 * whole_shard_pages
-        assert batched.counters.kernel_batched_requests == 3
+        # every member rode a fused launch, the tp_b solo included
+        assert batched.counters.kernel_batched_requests == 4
+
+        # with fusion off, the PR 3 contract holds: one grouped window
+        # sequence per pattern, exactly the plan's page count
+        unfused = BrTPFServer(
+            store, ServerConfig(selector_backend="sharded",
+                                shard_window=128, fuse_patterns=False))
+        got_unfused = unfused.handle_batch(reqs)
+        for f_w, f_g in zip(want, got_unfused, strict=True):
+            np.testing.assert_array_equal(f_w.data, f_g.data)
+        assert unfused.counters.kernel_launches == batched_expect
+        assert unfused.counters.fused_launches == 0
+        assert unfused.counters.kernel_batched_requests == 3
         # identical transfer/request accounting either way
         assert (batched.counters.num_requests
                 == oracle.counters.num_requests)
