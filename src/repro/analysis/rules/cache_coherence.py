@@ -27,6 +27,12 @@ _FRAGMENTS_FILE = "fragments.py"
 # data backing cached ranges.
 _MUTATED_ATTRS = {"triples", "_indexes"}
 
+# Attributes whose (re)assignment constitutes a placement cutover: a
+# server swapping its FederatedStore (docs/federation.md, "Placement")
+# serves the same key ranges from new shard boundaries, so every cached
+# fragment/range must be invalidated with the swap.
+_CUTOVER_ATTRS = {"federated"}
+
 # Call names that constitute (or lead to) cache invalidation.
 _INVALIDATION_SINKS = {"on_release", "evict", "evict_page",
                        "evict_candidate_range", "clear", "invalidate",
@@ -54,9 +60,10 @@ def check_fragmentstore_internals(ctx: AnalysisContext) -> List[Finding]:
     return findings
 
 
-def _mutations(func_node: ast.AST) -> List[ast.stmt]:
-    """Statements in ``func_node`` that rebind or store into a
-    ``.triples`` / ``._indexes`` attribute."""
+def _mutations(func_node: ast.AST,
+               attrs=frozenset(_MUTATED_ATTRS)) -> List[ast.stmt]:
+    """Statements in ``func_node`` that rebind or store into an
+    attribute named in ``attrs``."""
     hits: List[ast.stmt] = []
     for node in ast.walk(func_node):
         if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
@@ -69,11 +76,11 @@ def _mutations(func_node: ast.AST) -> List[ast.stmt]:
             targets = [node.target]
         for tgt in targets:
             if (isinstance(tgt, ast.Attribute)
-                    and tgt.attr in _MUTATED_ATTRS):
+                    and tgt.attr in attrs):
                 hits.append(node)
             elif (isinstance(tgt, ast.Subscript)
                   and isinstance(tgt.value, ast.Attribute)
-                  and tgt.value.attr in _MUTATED_ATTRS):
+                  and tgt.value.attr in attrs):
                 hits.append(node)
     return hits
 
@@ -105,9 +112,44 @@ def check_mutation_invalidation(ctx: AnalysisContext) -> List[Finding]:
     return findings
 
 
+def check_repartition_invalidation(ctx: AnalysisContext) -> List[Finding]:
+    """CC003: a placement cutover (rebinding a ``.federated`` store)
+    must reach a FragmentStore invalidation in the call graph.
+
+    The repartitioned store serves identical fragments from new shard
+    boundaries, but cached pages/ranges were computed (and accounted)
+    against the old ones -- a swap that keeps them resident would serve
+    stale residency decisions after cutover. ``__init__`` is exempt
+    (first construction precedes any cache entries)."""
+    findings: List[Finding] = []
+    graph = ctx.callgraph()
+    for info in graph.functions.values():
+        if info.name == "__init__":
+            continue
+        hits = _mutations(info.node, attrs=_CUTOVER_ATTRS)
+        if not hits:
+            continue
+        if graph.reaches(info, _INVALIDATION_SINKS):
+            continue
+        for stmt in hits:
+            findings.append(Finding(
+                file=info.module.rel, line=stmt.lineno,
+                col=stmt.col_offset, rule="CC003",
+                severity=SEVERITY_ERROR,
+                message=(f"'{info.name}' swaps a federated store "
+                         "(placement cutover) but no FragmentStore "
+                         "invalidation (on_release/evict/clear) is "
+                         "reachable from it; fragments cached against "
+                         "the old shard boundaries would stay "
+                         "resident")))
+    return findings
+
+
 RULES = [
     Rule("CC001", "FragmentStore internals stay inside fragments.py",
          check_fragmentstore_internals),
     Rule("CC002", "data mutation reaches cache invalidation",
          check_mutation_invalidation),
+    Rule("CC003", "placement cutover reaches cache invalidation",
+         check_repartition_invalidation),
 ]

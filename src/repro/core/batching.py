@@ -55,6 +55,16 @@ DEFAULT_BATCH_WINDOW_S = 2e-3
 DEFAULT_MAX_BATCH = 64
 
 
+class QueueSaturated(RuntimeError):
+    """Admission control (docs/serving.md): the batching queue is full.
+
+    Raised at enqueue time when ``queue_depth`` pending requests are
+    already waiting for a flush. The condition is *retryable* -- the
+    queue drains within a batching window -- so the ASGI app maps it to
+    HTTP 503 with a ``retryable`` error envelope instead of buffering
+    without bound."""
+
+
 @dataclasses.dataclass
 class BatchStats:
     """Front-end accounting (kernel launch counts live on the wrapped
@@ -95,12 +105,16 @@ class AsyncBrTPFServer:
         batch_window_s: float = DEFAULT_BATCH_WINDOW_S,
         max_batch: int = DEFAULT_MAX_BATCH,
         executor=None,
+        queue_depth: Optional[int] = None,
     ) -> None:
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        if queue_depth is not None and queue_depth < 1:
+            raise ValueError("queue_depth must be >= 1 (or None)")
         self.server = server
         self.batch_window_s = float(batch_window_s)
         self.max_batch = int(max_batch)
+        self.queue_depth = queue_depth
         self.stats = BatchStats()
         self._executor = executor
         self._pending: List[Tuple[Request, "asyncio.Future"]] = []
@@ -112,14 +126,20 @@ class AsyncBrTPFServer:
     def from_config(cls, store, config=None,
                     batch_window_s: float = DEFAULT_BATCH_WINDOW_S,
                     max_batch: int = DEFAULT_MAX_BATCH,
-                    cache=None, executor=None) -> "AsyncBrTPFServer":
+                    cache=None, executor=None,
+                    queue_depth: Optional[int] = None
+                    ) -> "AsyncBrTPFServer":
         """Build the wrapped origin server from a
         :class:`~repro.core.config.ServerConfig` -- the construction
         path the ASGI app factory and the replica router share, so a
-        whole fleet is provably configured from one value object."""
+        whole fleet is provably configured from one value object.
+        ``queue_depth`` defaults to the config's knob when not passed
+        explicitly."""
+        if queue_depth is None:
+            queue_depth = getattr(config, "queue_depth", None)
         return cls(BrTPFServer(store, config, cache=cache),
                    batch_window_s=batch_window_s, max_batch=max_batch,
-                   executor=executor)
+                   executor=executor, queue_depth=queue_depth)
 
     @property
     def max_mpr(self) -> int:
@@ -167,6 +187,15 @@ class AsyncBrTPFServer:
             async with self._flush_lock:
                 self.stats.fast_path += 1
                 return self.server.handle(req)
+        # Admission control (docs/serving.md): refuse instead of
+        # buffering without bound -- the queue drains within one
+        # batching window, so the client can retry after backoff.
+        if (self.queue_depth is not None
+                and len(self._pending) >= self.queue_depth):
+            self.stats.rejected += 1
+            raise QueueSaturated(
+                f"batching queue full: {len(self._pending)} pending >= "
+                f"queue_depth={self.queue_depth}")
         loop = asyncio.get_running_loop()
         fut: "asyncio.Future" = loop.create_future()
         self._pending.append((req, fut))
@@ -186,6 +215,14 @@ class AsyncBrTPFServer:
         self._closed = True
         self._cancel_timer()
         await self._flush("close")
+
+    async def repartition(self, heat=None) -> None:
+        """Atomic placement cutover (docs/federation.md, "Placement"):
+        runs ``BrTPFServer.repartition`` under the flush lock, so the
+        store swap + fragment invalidation land strictly between
+        flushes -- no batch is ever served half-old, half-new."""
+        async with self._flush_lock:
+            self.server.repartition(heat)
 
     # -- flush machinery -----------------------------------------------------
 

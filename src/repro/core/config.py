@@ -58,6 +58,18 @@ class ServerConfig:
       fused launches (one candidate stream, per-segment slot tables)
       instead of one grouped launch sequence per pattern. Fragments are
       byte-identical either way; the toggle exists for A/B accounting.
+    * ``placement_policy`` -- sharded-backend data placement
+      (docs/federation.md, "Placement"): ``"static"`` keeps the legacy
+      equal contiguous split; ``"heat"`` attaches a bounded
+      :class:`~repro.core.placement.HeatLog` (capacity
+      ``heat_capacity``) to the selector so
+      ``BrTPFServer.repartition()`` can cut workload-aware shard
+      boundaries from observed traffic.
+    * ``queue_depth`` -- admission control for the async batching front
+      end (docs/serving.md): maximum pending (unflushed) requests;
+      overflow raises
+      :class:`~repro.core.batching.QueueSaturated` (HTTP 503,
+      retryable). ``None`` keeps the legacy unbounded queue.
     """
 
     page_size: int = DEFAULT_PAGE_SIZE
@@ -69,6 +81,9 @@ class ServerConfig:
     shard_axis: str = "data"
     fast_path_rows: int = 0
     fuse_patterns: bool = True
+    placement_policy: str = "static"
+    heat_capacity: int = 4096
+    queue_depth: Optional[int] = None
 
     def __post_init__(self) -> None:
         if self.selector_backend not in SELECTOR_BACKENDS:
@@ -78,6 +93,13 @@ class ServerConfig:
             raise ValueError("page_size must be >= 1")
         if self.max_mpr < 1:
             raise ValueError("max_mpr must be >= 1")
+        if self.placement_policy not in ("static", "heat"):
+            raise ValueError(
+                f"unknown placement_policy {self.placement_policy!r}")
+        if self.heat_capacity < 1:
+            raise ValueError("heat_capacity must be >= 1")
+        if self.queue_depth is not None and self.queue_depth < 1:
+            raise ValueError("queue_depth must be >= 1 (or None)")
 
     def replace(self, **changes: Any) -> "ServerConfig":
         return dataclasses.replace(self, **changes)

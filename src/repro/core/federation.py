@@ -37,6 +37,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..compat import enable_x64, shard_map
 from ..kernels import ops as kops
 from .fragments import FragmentStore, fragment_key
+from .placement import HeatLog, Placement
 from .kernel_selectors import (_EMPTY, FUSED_BT, FusedSegment,
                                LaunchRecord, _fused_base_mask,
                                consult_fragments, consult_segment,
@@ -112,9 +113,11 @@ class WindowPlan:
     candidate_rows: int      # rows inside relevant sub-ranges (<= above)
     pruned: bool
     pages_total: int         # pages an unpruned plan would launch
-    # Pruned plans carry the shard-local geometry that sub-window
-    # compaction needs: per shard the base range bounds and the merged
-    # live spans (absolute shard-local positions). None when unpruned.
+    # Per shard the base range bounds [start, end) -- absolute
+    # shard-local positions. Set on every plan (per-shard attribution
+    # and replica routing need it); ``shard_spans`` additionally carries
+    # the merged live sub-range spans that sub-window compaction needs,
+    # and stays None when unpruned.
     shard_bounds: Optional[List[Tuple[int, int]]] = None
     shard_spans: Optional[List[np.ndarray]] = None
 
@@ -145,6 +148,15 @@ class FederatedStore:
     # launch geometry (window, groups, pattern slots, projection).
     _steps: Dict[tuple, object] = dataclasses.field(
         default_factory=dict, repr=False)
+    # Workload-aware placement (docs/federation.md, "Placement"): when
+    # set, shard boundaries follow the heat-weighted quantiles instead
+    # of the equal split, and ``placement.replicas`` ranges are held by
+    # several shards (the routed launch path dedups them to one owner).
+    placement: Optional[Placement] = None
+    # Host copy of the unsharded dataset, kept so ``repartition`` can
+    # rebuild under new boundaries without a device gather.
+    host_triples: Optional[np.ndarray] = dataclasses.field(
+        default=None, repr=False)
 
     @property
     def shards(self) -> int:
@@ -152,10 +164,13 @@ class FederatedStore:
 
     @classmethod
     def build(cls, triples_np: np.ndarray, mesh: Mesh,
-              axis: str = "data") -> "FederatedStore":
+              axis: str = "data",
+              placement: Optional[Placement] = None) -> "FederatedStore":
         from .store import _ORDERS, _pack
         shards = mesh.shape[axis]
         n = triples_np.shape[0]
+        if placement is not None:
+            return cls._build_placed(triples_np, mesh, axis, placement)
         shard_n = max(1, -(-n // shards))
         total = shard_n * shards
         base = np.full((total, 3), -1, dtype=np.int32)
@@ -193,7 +208,107 @@ class FederatedStore:
         spo = indexes["spo"]
         return cls(mesh=mesh, axis=axis,
                    triples=spo.triples, valid=spo.valid, keys=spo.keys,
-                   shard_n=shard_n, indexes=indexes)
+                   shard_n=shard_n, indexes=indexes,
+                   host_triples=np.asarray(triples_np))
+
+    @classmethod
+    def _build_placed(cls, triples_np: np.ndarray, mesh: Mesh,
+                      axis: str, placement: Placement) -> "FederatedStore":
+        """Build under workload-aware boundaries + replicated ranges.
+
+        Per order, each triple's packed key is assigned to the shard
+        whose boundary span owns it (``Placement.shard_of``; orders
+        without boundaries fall back to an equal-count contiguous
+        split), then every :class:`~repro.core.placement.ReplicaRange`'s
+        rows are *additionally* copied onto its replica shards.  Each
+        shard's partition stays a contiguous key range plus whole
+        replicated sub-ranges, sorted -- which is what lets the routed
+        launch path subtract a replica range from non-owners by a pair
+        of binary searches.
+        """
+        from .store import _ORDERS, _pack
+        shards = mesh.shape[axis]
+        per_order_rows: Dict[str, List[np.ndarray]] = {}
+        for name, comp_order in _ORDERS.items():
+            keys = _pack(triples_np[:, comp_order[0]],
+                         triples_np[:, comp_order[1]],
+                         triples_np[:, comp_order[2]])
+            bounds = placement.boundaries.get(name)
+            if bounds is not None and len(bounds) == shards - 1:
+                assign = np.searchsorted(
+                    np.asarray(bounds, dtype=np.int64), keys, side="right")
+            else:
+                # equal-count contiguous fallback over this order's
+                # sorted keys (still a contiguous key partition)
+                order = np.argsort(keys, kind="stable")
+                assign = np.empty(keys.shape, dtype=np.int64)
+                cutpos = np.arange(1, shards) * keys.size // shards
+                assign[order] = np.searchsorted(
+                    cutpos, np.arange(keys.size), side="right")
+            rows = [triples_np[assign == s] for s in range(shards)]
+            for rr in placement.replicas.get(name, ()):
+                sel = (keys >= rr.lo_key) & (keys <= rr.hi_key)
+                block = triples_np[sel]
+                if block.shape[0] == 0:
+                    continue
+                for rs in rr.replicas:
+                    if rs != rr.home:
+                        rows[rs] = np.concatenate([rows[rs], block],
+                                                  axis=0)
+            per_order_rows[name] = rows
+        shard_n = max(1, max(r.shape[0] for rows in per_order_rows.values()
+                             for r in rows))
+        total = shard_n * shards
+        sharding = NamedSharding(mesh, P(axis, None))
+        vsharding = NamedSharding(mesh, P(axis))
+        indexes: Dict[str, ShardIndex] = {}
+        for name, comp_order in _ORDERS.items():
+            padded = np.full((total, 3), -1, dtype=np.int32)
+            valid = np.zeros((total,), dtype=bool)
+            keys = np.full((total,), np.iinfo(np.int64).max,
+                           dtype=np.int64)
+            for s, block in enumerate(per_order_rows[name]):
+                m = block.shape[0]
+                k = _pack(block[:, comp_order[0]], block[:, comp_order[1]],
+                          block[:, comp_order[2]])
+                order = np.argsort(k, kind="stable")
+                sl = slice(s * shard_n, s * shard_n + m)
+                padded[sl] = block[order]
+                valid[sl] = True
+                keys[sl] = k[order]
+            with enable_x64(True):
+                keys_dev = jax.device_put(keys, vsharding)
+            indexes[name] = ShardIndex(
+                name=name,
+                triples=jax.device_put(padded, sharding),
+                valid=jax.device_put(valid, vsharding),
+                keys=keys_dev,
+                host_keys=keys.reshape(shards, shard_n))
+        spo = indexes["spo"]
+        return cls(mesh=mesh, axis=axis,
+                   triples=spo.triples, valid=spo.valid, keys=spo.keys,
+                   shard_n=shard_n, indexes=indexes,
+                   placement=placement,
+                   host_triples=np.asarray(triples_np))
+
+    def repartition(self, heat: HeatLog, **plan_kwargs) -> "FederatedStore":
+        """Rebuild with workload-aware boundaries planned from ``heat``.
+
+        Returns a NEW store (rebuild-with-cutover: the caller swaps it in
+        atomically and must invalidate any :class:`FragmentStore` pages
+        planned against the old partitioning -- repro-lint CC003 enforces
+        that every ``.federated`` swap site reaches an invalidation).
+        """
+        from .placement import dataset_keys, plan_placement
+        if self.host_triples is None:
+            raise ValueError(
+                "host triples unavailable; the store was not built via "
+                "FederatedStore.build")
+        placement = plan_placement(
+            heat, dataset_keys(self.host_triples), self.shards,
+            **plan_kwargs)
+        return FederatedStore.build(self.host_triples, self.mesh,
+                                    axis=self.axis, placement=placement)
 
     # -- host-side request marshalling ---------------------------------------
 
@@ -286,7 +401,10 @@ class FederatedStore:
                               pages=list(range(pages_total)),
                               range_rows=range_rows,
                               candidate_rows=range_rows, pruned=False,
-                              pages_total=pages_total)
+                              pages_total=pages_total,
+                              shard_bounds=[
+                                  (int(s), int(e)) for s, e in
+                                  zip(starts, ends, strict=True)])
 
         bname, _ = TripleStore._choose_index(tp)
         unpruned = base_plan(bname)
@@ -373,6 +491,11 @@ class FederatedStore:
         partition through the bind-join kernel in one launch. Kept for
         the dry-run roofline comparison; ``capacity`` bounds the local
         page (matches beyond it are silently dropped)."""
+        if self.placement is not None and self.placement.has_replicas:
+            raise RuntimeError(
+                "execute_full cannot serve a replicated placement: the "
+                "full-shard stream would report replicated ranges once "
+                "per holder -- use the windowed (routed) path")
         pats, valid, base_vec = self.request_arrays(tp, omega, max_mpr)
         pages, counts = self.lowerable(capacity)(
             self.triples, self.valid, jnp.asarray(pats),
@@ -529,6 +652,79 @@ class FederatedStore:
             )
             return fn(triples, valid, keys, pats, pat_valid, base_vec,
                       lo_key, hi_key, page_idx)
+
+        fn = jax.jit(step)
+        self._steps[key] = fn
+        return fn
+
+    def lowerable_windowed_routed(self, window: int, groups: int,
+                                  wild_cols: tuple = (0, 1, 2)):
+        """Routed grouped step (docs/federation.md, "Placement").
+
+        Same grouped geometry as :meth:`lowerable_windowed_grouped`, but
+        the shard-local span to stream arrives host-computed as explicit
+        ``(span_lo, span_hi)`` int32 [shards] position vectors instead of
+        being re-derived from ``(lo_key, hi_key)`` on device.  The host
+        planner needs that control under a workload-aware placement: it
+        has already chosen each replicated range's least-loaded owner and
+        subtracted the range from every other holder's span, so a
+        replicated triple is streamed by exactly one shard per request
+        (dedup at merge) and per-shard spans can differ in length.  A
+        shard with no work this round sends ``(0, 0)``.  Each round
+        streams at most ``window`` rows per shard (the planner chops
+        longer spans into window-sized chunks).
+        """
+        window = max(1, min(window, self.shard_n))
+        key = ("routed", window, groups, wild_cols)
+        fn = self._steps.get(key)
+        if fn is not None:
+            return fn
+        mesh, axis = self.mesh, self.axis
+
+        def step(triples, valid, pats, pat_valid, base_vec,
+                 span_lo, span_hi):
+            def shard_fn(cand, cand_valid, p, pv, bv, lo, hi):
+                lo = lo[0]
+                hi = hi[0]
+                shard_rows = cand.shape[0]
+                slice_start = jnp.clip(lo, 0, max(shard_rows - window, 0))
+                win = jax.lax.dynamic_slice_in_dim(
+                    cand, slice_start, window, axis=0)
+                win_valid = jax.lax.dynamic_slice_in_dim(
+                    cand_valid, slice_start, window, axis=0)
+                pos = jnp.arange(window, dtype=jnp.int32) + slice_start
+                in_span = (pos >= lo) & (pos < jnp.minimum(
+                    lo + window, hi))
+                keep, idx, nmatch = kops.bindjoin_grouped(win, p, pv)
+                base = kops.tpf_match(win, bv)
+                mask = (keep & base[:, None]
+                        & (win_valid & in_span)[:, None])        # (W, G)
+                cnts = jnp.sum(jnp.where(mask, nmatch, 0), axis=0)
+                rows, counts = jax.vmap(
+                    lambda m: kops.compact_mask(m, window),
+                    in_axes=1, out_axes=0)(mask)          # (G, W), (G,)
+                safe = jnp.maximum(rows, 0)
+                page = jnp.take(win, safe, axis=0)        # (G, W, 3)
+                first = jax.vmap(lambda r, col: col[r],
+                                 in_axes=(0, 1))(safe, idx)   # (G, W)
+                page = page[:, :, list(wild_cols)]
+                page = jnp.where((rows >= 0)[:, :, None], page, -1)
+                first = jnp.where(rows >= 0, first, -1)
+                page = jax.lax.all_gather(page, axis)
+                first = jax.lax.all_gather(first, axis)
+                counts = jax.lax.all_gather(counts, axis)
+                cnts = jax.lax.all_gather(cnts, axis)
+                return page, first, counts, cnts
+
+            fn = shard_map(
+                shard_fn, mesh=mesh,
+                in_specs=(P(axis, None), P(axis), P(), P(), P(),
+                          P(axis), P(axis)),
+                out_specs=(P(), P(), P(), P()),
+                check_vma=False,
+            )
+            return fn(triples, valid, pats, pat_valid, base_vec,
+                      span_lo, span_hi)
 
         fn = jax.jit(step)
         self._steps[key] = fn
@@ -748,6 +944,41 @@ def _pow2(n: int) -> int:
     return b
 
 
+def _subtract_interval(spans: List[Tuple[int, int]], a: int,
+                       b: int) -> List[Tuple[int, int]]:
+    """Remove [a, b) from a sorted list of disjoint [lo, hi) spans."""
+    out: List[Tuple[int, int]] = []
+    for lo, hi in spans:
+        if hi <= a or lo >= b:
+            out.append((lo, hi))
+            continue
+        if lo < a:
+            out.append((lo, a))
+        if hi > b:
+            out.append((b, hi))
+    return out
+
+
+def _chop_spans(spans: List[List[Tuple[int, int]]],
+                window: int) -> Tuple[List[List[Tuple[int, int]]], int]:
+    """Chop each shard's spans into window-sized chunks; returns the
+    per-shard chunk lists and the number of launch rounds (the longest
+    shard's chunk count -- shards with fewer chunks idle in later
+    rounds)."""
+    chunks: List[List[Tuple[int, int]]] = []
+    for shard_spans in spans:
+        cs: List[Tuple[int, int]] = []
+        for lo, hi in shard_spans:
+            p = lo
+            while p < hi:
+                q = min(p + window, hi)
+                cs.append((p, q))
+                p = q
+        chunks.append(cs)
+    rounds = max((len(c) for c in chunks), default=0)
+    return chunks, rounds
+
+
 class ShardedSelector:
     """Mesh-sharded windowed selector with the KernelSelector contract.
 
@@ -787,13 +1018,115 @@ class ShardedSelector:
     def __init__(self, fed: FederatedStore,
                  window: int = DEFAULT_SHARD_WINDOW,
                  fragments: Optional[FragmentStore] = None,
-                 store=None, fast_path_rows: int = 0) -> None:
+                 store=None, fast_path_rows: int = 0,
+                 heat: Optional[HeatLog] = None) -> None:
         self.fed = fed
         self.window = max(1, min(int(window), fed.shard_n))
         self.fragments = fragments
         self.store = store
         self.fast_path_rows = int(fast_path_rows)
         self.launches: List[LaunchRecord] = []
+        # Placement surfaces (docs/federation.md, "Placement"): the
+        # bounded heat log the re-partitioner consumes, and per-shard
+        # attribution counters -- launches a shard had work in, candidate
+        # rows it streamed, and planned window pages it owned.
+        self.heat = heat
+        self.shard_launches = np.zeros((fed.shards,), dtype=np.int64)
+        self.shard_rows = np.zeros((fed.shards,), dtype=np.int64)
+        self.shard_pages = np.zeros((fed.shards,), dtype=np.int64)
+
+    # -- placement surfaces (docs/federation.md, "Placement") ---------------
+
+    def shard_balance(self) -> dict:
+        """JSON-safe per-shard balance snapshot (metrics ``shards``)."""
+        from .metrics import shard_balance
+        return shard_balance(self.shard_launches.tolist(),
+                             self.shard_rows.tolist(),
+                             self.shard_pages.tolist())
+
+    def reset_shard_counters(self) -> None:
+        self.shard_launches[:] = 0
+        self.shard_rows[:] = 0
+        self.shard_pages[:] = 0
+
+    def rebind(self, fed: FederatedStore) -> None:
+        """Cutover to a repartitioned store: swap the federation, clamp
+        the window to the new shard size, and restart the per-shard
+        attribution (old counts were measured against old boundaries).
+        The heat log is kept -- it describes the workload, not the
+        partitioning."""
+        self.fed = fed
+        self.window = max(1, min(self.window, fed.shard_n))
+        self.shard_launches = np.zeros((fed.shards,), dtype=np.int64)
+        self.shard_rows = np.zeros((fed.shards,), dtype=np.int64)
+        self.shard_pages = np.zeros((fed.shards,), dtype=np.int64)
+
+    def _charge_shard_page(self, plan: WindowPlan, window: int,
+                           page_idx: int,
+                           row_sel: Optional[np.ndarray] = None) -> None:
+        """Attribute one window page to the shards that had work in it."""
+        if plan.shard_bounds is None:
+            return
+        for s, (start, end) in enumerate(plan.shard_bounds):
+            plo = start + page_idx * window
+            phi = min(plo + window, end)
+            if phi <= plo:
+                continue
+            if row_sel is not None:
+                rows = int((row_sel[s] >= 0).sum())
+                if rows == 0:
+                    continue
+            elif plan.pruned and plan.shard_spans is not None:
+                rows = 0
+                for lo, hi in np.asarray(
+                        plan.shard_spans[s]).reshape(-1, 2):
+                    rows += max(0, min(int(hi), phi) - max(int(lo), plo))
+                if rows == 0:
+                    continue
+            else:
+                rows = phi - plo
+            self.shard_launches[s] += 1
+            self.shard_pages[s] += 1
+            self.shard_rows[s] += rows
+
+    def _routed_spans(self, plan: WindowPlan) -> List[List[Tuple[int, int]]]:
+        """Per-shard live [lo, hi) position spans for the routed path,
+        with every overlapping replica range deduped to its least-loaded
+        owner (the other holders get the range subtracted -- a pair of
+        binary searches, since each holder's copy is sorted)."""
+        fed = self.fed
+        hk = fed.indexes[plan.order].host_keys
+        shards = hk.shape[0]
+        spans: List[List[Tuple[int, int]]] = []
+        if plan.pruned and plan.shard_spans is not None:
+            for sp in plan.shard_spans:
+                spans.append([(int(a), int(b)) for a, b in
+                              np.asarray(sp).reshape(-1, 2) if b > a])
+        elif plan.shard_bounds is not None:
+            spans = [[(int(a), int(b))] if b > a else []
+                     for a, b in plan.shard_bounds]
+        else:
+            for s in range(shards):
+                a = int(np.searchsorted(hk[s], plan.lo_key, side="left"))
+                b = int(np.searchsorted(hk[s], plan.hi_key, side="right"))
+                spans.append([(a, b)] if b > a else [])
+        placement = fed.placement
+        if placement is None:
+            return spans
+        for rr in placement.replicas.get(plan.order, ()):
+            if rr.hi_key < plan.lo_key or rr.lo_key > plan.hi_key:
+                continue
+            holders = rr.holders
+            owner = min(holders,
+                        key=lambda s: (int(self.shard_pages[s]), s))
+            for s in holders:
+                if s == owner:
+                    continue
+                a = int(np.searchsorted(hk[s], rr.lo_key, side="left"))
+                b = int(np.searchsorted(hk[s], rr.hi_key, side="right"))
+                if b > a:
+                    spans[s] = _subtract_interval(spans[s], a, b)
+        return spans
 
     # -- public API (same contract as KernelSelector) ------------------------
 
@@ -940,52 +1273,104 @@ class ShardedSelector:
         wild = [i for i, c in enumerate(comps) if is_var(c)]
         wild_cols = tuple(wild) or (0,)  # dummy column when fully bound
         idx = self.fed.indexes[plan.order]
-        fn = self.fed.lowerable_windowed_grouped(window, gpad,
-                                                 wild_cols=wild_cols)
+        routed = self.fed.placement is not None
+        fn = None if routed else self.fed.lowerable_windowed_grouped(
+            window, gpad, wild_cols=wild_cols)
 
         kept: List[List[np.ndarray]] = [[] for _ in range(g)]
         firsts: List[List[np.ndarray]] = [[] for _ in range(g)]
         cnt_total = np.zeros((g,), dtype=np.int64)
+        n_launched = 0
         with enable_x64(True):
             lo_dev = jnp.asarray(plan.lo_key, jnp.int64)
             hi_dev = jnp.asarray(plan.hi_key, jnp.int64)
             pats_dev = jnp.asarray(pats)
             valid_dev = jnp.asarray(valid)
             bv_dev = jnp.asarray(base_vec)
-            for page_idx in plan.pages:
-                row_sel = self._page_row_sel(plan, window, page_idx)
-                if row_sel is not None:
-                    # sub-window compaction: gather only the live rows
-                    wc = row_sel.shape[1]
-                    cfn = self.fed.lowerable_windowed_grouped_compact(
-                        wc, gpad, wild_cols=wild_cols)
-                    pages, first, counts, cnts = cfn(
+            if routed:
+                # workload-aware placement: explicit per-shard spans
+                # with replica ranges routed to one owner each
+                spans = self._routed_spans(plan)
+                chunks, rounds = _chop_spans(spans, window)
+                rfn = self.fed.lowerable_windowed_routed(
+                    window, gpad, wild_cols=wild_cols)
+                page_rounds = []
+                for r in range(rounds):
+                    span_lo = np.zeros((len(chunks),), dtype=np.int32)
+                    span_hi = np.zeros((len(chunks),), dtype=np.int32)
+                    for s, cs in enumerate(chunks):
+                        if r < len(cs):
+                            span_lo[s], span_hi[s] = cs[r]
+                    page_rounds.append(rfn(
                         idx.triples, idx.valid, pats_dev, valid_dev,
-                        bv_dev, jnp.asarray(row_sel))
-                    self.launches.append(LaunchRecord(
-                        cand_streamed=wc, pat_slots=gpad * mp, groups=g,
-                        pruned=True, cand_full=window,
-                        reclaimed_rows=window - wc))
-                else:
-                    pages, first, counts, cnts, _range_len = fn(
-                        idx.triples, idx.valid, idx.keys,
-                        pats_dev, valid_dev, bv_dev, lo_dev, hi_dev,
-                        jnp.asarray(page_idx, jnp.int32))
+                        bv_dev, jnp.asarray(span_lo),
+                        jnp.asarray(span_hi)))
                     self.launches.append(LaunchRecord(
                         cand_streamed=window, pat_slots=gpad * mp,
                         groups=g, pruned=plan.pruned, cand_full=window))
-                counts = np.asarray(counts)
-                cnt_total += np.asarray(cnts)[:, :g].sum(axis=0)
-                if count_only:
-                    continue   # cnt-only: skip the gather epilogue
-                pages = np.asarray(pages)
-                first = np.asarray(first)
-                for s in range(pages.shape[0]):
-                    for gi in range(g):
-                        n = int(counts[s, gi])
-                        if n:
-                            kept[gi].append(pages[s, gi, :n])
-                            firsts[gi].append(first[s, gi, :n])
+                    n_launched += 1
+                    for s, cs in enumerate(chunks):
+                        if r < len(cs):
+                            a, b = cs[r]
+                            self.shard_launches[s] += 1
+                            self.shard_pages[s] += 1
+                            self.shard_rows[s] += b - a
+                for pages, first, counts, cnts in page_rounds:
+                    counts = np.asarray(counts)
+                    cnt_total += np.asarray(cnts)[:, :g].sum(axis=0)
+                    if count_only:
+                        continue
+                    pages = np.asarray(pages)
+                    first = np.asarray(first)
+                    for s in range(pages.shape[0]):
+                        for gi in range(g):
+                            n = int(counts[s, gi])
+                            if n:
+                                kept[gi].append(pages[s, gi, :n])
+                                firsts[gi].append(first[s, gi, :n])
+            else:
+                for page_idx in plan.pages:
+                    row_sel = self._page_row_sel(plan, window, page_idx)
+                    if row_sel is not None:
+                        # sub-window compaction: gather only the live rows
+                        wc = row_sel.shape[1]
+                        cfn = self.fed.lowerable_windowed_grouped_compact(
+                            wc, gpad, wild_cols=wild_cols)
+                        pages, first, counts, cnts = cfn(
+                            idx.triples, idx.valid, pats_dev, valid_dev,
+                            bv_dev, jnp.asarray(row_sel))
+                        self.launches.append(LaunchRecord(
+                            cand_streamed=wc, pat_slots=gpad * mp, groups=g,
+                            pruned=True, cand_full=window,
+                            reclaimed_rows=window - wc))
+                    else:
+                        pages, first, counts, cnts, _range_len = fn(
+                            idx.triples, idx.valid, idx.keys,
+                            pats_dev, valid_dev, bv_dev, lo_dev, hi_dev,
+                            jnp.asarray(page_idx, jnp.int32))
+                        self.launches.append(LaunchRecord(
+                            cand_streamed=window, pat_slots=gpad * mp,
+                            groups=g, pruned=plan.pruned, cand_full=window))
+                    n_launched += 1
+                    self._charge_shard_page(plan, window, page_idx,
+                                            row_sel=row_sel)
+                    counts = np.asarray(counts)
+                    cnt_total += np.asarray(cnts)[:, :g].sum(axis=0)
+                    if count_only:
+                        continue   # cnt-only: skip the gather epilogue
+                    pages = np.asarray(pages)
+                    first = np.asarray(first)
+                    for s in range(pages.shape[0]):
+                        for gi in range(g):
+                            n = int(counts[s, gi])
+                            if n:
+                                kept[gi].append(pages[s, gi, :n])
+                                firsts[gi].append(first[s, gi, :n])
+        if self.heat is not None and n_launched:
+            self.heat.record(plan.order, plan.lo_key, plan.hi_key,
+                             launches=n_launched,
+                             rows=plan.candidate_rows,
+                             pages=len(plan.pages))
 
         out: List[Tuple[np.ndarray, int]] = []
         for gi in range(g):
@@ -1082,9 +1467,13 @@ class ShardedSelector:
                 [segments[w[0]] for w in items],
                 stream_rows=s_pad * wp,
                 slot_table=s_pad * g_pad * mp)
-            if len(items) == 1 or reason is not None:
+            if (len(items) == 1 or reason is not None
+                    or self.fed.placement is not None):
                 # documented fallback: per-segment grouped launches on
-                # the plans already in hand (no re-probe, no re-plan)
+                # the plans already in hand (no re-probe, no re-plan).
+                # A workload-aware placement always falls back: the
+                # fused step derives spans on device from (lo, hi) keys
+                # and cannot honor per-shard replica routing.
                 for si, pats_live, omegas_live, live, plan in items:
                     seg = segments[si]
                     fresh = self._launch_plan(seg.tp, pats_live, plan,
@@ -1116,6 +1505,14 @@ class ShardedSelector:
             lo[wi], hi[wi] = plan.lo_key, plan.hi_key
         fn = self.fed.lowerable_windowed_fused(window, s_pad, g_pad)
         rounds = max(len(w[4].pages) for w in items)
+        for _si, _pl, _om, _live, plan in items:
+            if self.heat is not None and plan.pages:
+                self.heat.record(plan.order, plan.lo_key, plan.hi_key,
+                                 launches=len(plan.pages),
+                                 rows=plan.candidate_rows,
+                                 pages=len(plan.pages))
+            for page_idx in plan.pages:
+                self._charge_shard_page(plan, window, page_idx)
 
         kept: Dict[Tuple[int, int], List[np.ndarray]] = {}
         firsts: Dict[Tuple[int, int], List[np.ndarray]] = {}

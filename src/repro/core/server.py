@@ -187,6 +187,7 @@ class BrTPFServer:
         # select_with_cnt / select_same_pattern / launches interface,
         # and both consult the unified store before launching.
         self._selector = None
+        self._heat = None
         if config.selector_backend == "kernel":
             from .kernel_selectors import KernelSelector
             self._selector = KernelSelector(
@@ -195,6 +196,7 @@ class BrTPFServer:
         elif config.selector_backend == "sharded":
             from .federation import (DEFAULT_SHARD_WINDOW, FederatedStore,
                                      ShardedSelector)
+            from .placement import HeatLog
             mesh = config.mesh
             if mesh is None:
                 import jax
@@ -202,11 +204,17 @@ class BrTPFServer:
                 mesh = Mesh(np.array(jax.devices()), (config.shard_axis,))
             self.federated = FederatedStore.build(store.triples, mesh,
                                                   axis=config.shard_axis)
+            # placement_policy="heat": record per-range heat from live
+            # traffic so repartition() can re-cut shard boundaries
+            # (docs/federation.md, "Placement")
+            self._heat = (HeatLog(config.heat_capacity)
+                          if config.placement_policy == "heat" else None)
             self._selector = ShardedSelector(
                 self.federated,
                 window=config.shard_window or DEFAULT_SHARD_WINDOW,
                 fragments=self.fragments,
-                store=store, fast_path_rows=config.fast_path_rows)
+                store=store, fast_path_rows=config.fast_path_rows,
+                heat=self._heat)
         self.counters = Counters()
         # Memo keys prefilled by the *current* handle_batch call: their
         # subsequent handle() reads are batched work, not cache skips.
@@ -518,9 +526,49 @@ class BrTPFServer:
         keys over the wire and in-process."""
         return metrics_snapshot(self)
 
+    def shard_launch_snapshot(self) -> np.ndarray:
+        """Copy of the per-shard planned-window-page counters (sharded
+        backend only; empty for the others) -- the delta surface the
+        trace recorder and the sim's per-shard ``--live`` validation
+        read (docs/federation.md, "Placement")."""
+        sel = self._selector
+        if sel is not None and hasattr(sel, "shard_pages"):
+            return np.array(sel.shard_pages, dtype=np.int64)
+        return np.zeros((0,), dtype=np.int64)
+
+    def repartition(self, heat=None) -> None:
+        """Workload-aware re-fragmentation cutover (docs/federation.md,
+        "Placement").
+
+        Plans a placement from the recorded heat (the server's own
+        ``placement_policy="heat"`` log unless one is passed), rebuilds
+        the :class:`~repro.core.federation.FederatedStore` under the new
+        boundaries + replica ranges, rebinds the selector, and clears
+        the unified fragment store -- conservative cutover coherence:
+        fragments are byte-identical across partitionings, but resident
+        pages predate the new boundaries and serving them residency-free
+        would hide the rebalance from the per-shard counters the sim
+        validates. The async front end wraps this under its flush lock
+        (``AsyncBrTPFServer.repartition``) so the swap lands atomically
+        between flushes.
+        """
+        if self.selector_backend != "sharded":
+            raise RuntimeError("repartition requires the sharded backend")
+        heat = heat if heat is not None else self._heat
+        if heat is None or len(heat) == 0:
+            raise ValueError(
+                "no heat recorded: pass a HeatLog, or construct the "
+                "server with placement_policy='heat'")
+        self.federated = self.federated.repartition(heat)
+        self._selector.rebind(self.federated)
+        self.fragments.clear()
+
     def reset_counters(self) -> None:
         self.counters.reset()
         self.fragments.reset_counters()
+        sel = self._selector
+        if sel is not None and hasattr(sel, "reset_shard_counters"):
+            sel.reset_shard_counters()
         self._range_base = (self.store.range_memo_hits,
                             self.store.range_memo_misses)
         if self.cache is not None:

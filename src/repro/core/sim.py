@@ -66,6 +66,11 @@ class HttpRecord:
     # reaches this, pruning stops paying and the launch streams the full
     # range -- the cap on the model's additive union estimate.
     cand_full_rows: int = 0
+    # per-shard planned-window-page delta (sharded backend only; empty
+    # tuple otherwise / on old traces): the shard-heat model replays it
+    # so --live can validate per-shard launch counts after a
+    # workload-aware repartition (docs/federation.md, "Placement").
+    shard_pages: tuple = ()
 
 
 @dataclasses.dataclass
@@ -233,6 +238,11 @@ class SimResult:
     # invariant under batching composition and is the tighter live
     # validation quantity.
     cand_rows: int = 0
+    # per-shard planned-window-page totals accumulated from created
+    # launches' HttpRecord.shard_pages deltas (sharded traces only;
+    # empty otherwise) -- the shard-heat model --live validates per
+    # shard (docs/federation.md, "Placement").
+    shard_launches: tuple = ()
 
     @property
     def launches_per_request(self) -> float:
@@ -447,6 +457,9 @@ def simulate(traces_per_client: Sequence[Sequence[QueryTrace]],
         for traces in traces_per_client
         for trace in traces for ev in trace.events)
     sim_launches = kernel_requests = sim_skips = sim_cand = sim_rows = 0
+    # per-shard planned-window-page accumulator (sharded traces only:
+    # grows to the widest shard_pages delta seen; stays [] otherwise)
+    shard_acc: List[int] = []
     completed = timeouts = attempted = 0
     qet_sum = 0.0
     qets: List[float] = []
@@ -585,6 +598,17 @@ def simulate(traces_per_client: Sequence[Sequence[QueryTrace]],
                 # launch's padding depends on whether it fused), so only
                 # the unbatched path charges here.
                 sim_launches += n_launch if created else 0
+                # shard-heat model: a created request's window pages land
+                # on the shards its trace recorded (a same-pattern joiner
+                # rides the open launch's pages and adds none; a fused
+                # new segment brings its own page spans, which the live
+                # placed planner also charges per segment).
+                if (created or new_seg) and ev.shard_pages:
+                    if len(shard_acc) < len(ev.shard_pages):
+                        shard_acc.extend(
+                            [0] * (len(ev.shard_pages) - len(shard_acc)))
+                    for si, pg in enumerate(ev.shard_pages):
+                        shard_acc[si] += int(pg)
                 if params.batch_window_s <= 0.0:
                     sim_cand += ev.cand if created else 0
                     sim_rows += (ev.cand_rows or ev.cand) if created else 0
@@ -649,7 +673,8 @@ def simulate(traces_per_client: Sequence[Sequence[QueryTrace]],
                      launches_skipped=sim_skips,
                      fused_launches=len(fused),
                      fused_segments=sum(len(ln.keys) for ln in fused),
-                     cand_streamed=sim_cand, cand_rows=sim_rows)
+                     cand_streamed=sim_cand, cand_rows=sim_rows,
+                     shard_launches=tuple(shard_acc))
 
 
 def split_workload(workload, num_clients: int):
@@ -709,6 +734,13 @@ class LiveValidation:
     observed_fused: int = 0
     simulated_fused_segments: int = 0
     observed_fused_segments: int = 0
+    # shard-heat validation (sharded backend only; empty tuples
+    # otherwise): per-shard planned-window-page totals (sim:
+    # SimResult.shard_launches from the traces' shard_pages deltas;
+    # observed: BrTPFServer.shard_launch_snapshot deltas) -- the
+    # placement layer's per-shard agreement surface.
+    simulated_shard: tuple = ()
+    observed_shard: tuple = ()
 
     @property
     def agreement(self) -> float:
@@ -738,6 +770,17 @@ class LiveValidation:
         """Relative raw-candidate-row disagreement |obs - sim| / max(sim, 1)."""
         return (abs(self.observed_cand_rows - self.simulated_cand_rows)
                 / max(self.simulated_cand_rows, 1))
+
+    @property
+    def shard_within(self) -> float:
+        """Total per-shard page disagreement: sum_s |obs_s - sim_s| /
+        max(sum_s sim_s, 1). Zero-pads the shorter side, so a shard one
+        side never touched still counts as disagreement."""
+        n = max(len(self.simulated_shard), len(self.observed_shard))
+        sim = list(self.simulated_shard) + [0] * (n - len(self.simulated_shard))
+        obs = list(self.observed_shard) + [0] * (n - len(self.observed_shard))
+        return (sum(abs(o - s) for o, s in zip(obs, sim, strict=True))
+                / max(sum(sim), 1))
 
 
 def requests_from_trace(trace: QueryTrace) -> List["object"]:
@@ -784,9 +827,15 @@ def live_replay(traces_per_client: Sequence[Sequence[QueryTrace]],
     streams = [[req for trace in traces for req in requests_from_trace(trace)]
                for traces in traces_per_client]
     base = server.counters.snapshot()
+    shard_snap = getattr(server, "shard_launch_snapshot", None)
+    shard_before = shard_snap() if shard_snap is not None else None
     _responses, front = serve_concurrent(
         server, streams, batch_window_s=batch_window_s, max_batch=max_batch)
     after = server.counters
+    shard_obs = ()
+    if shard_before is not None and shard_before.size:
+        shard_obs = tuple(
+            int(x) for x in (shard_snap() - shard_before).tolist())
     return LiveValidation(
         simulated_launches=sim.launches,
         observed_launches=after.kernel_launches - base.kernel_launches,
@@ -808,6 +857,8 @@ def live_replay(traces_per_client: Sequence[Sequence[QueryTrace]],
         simulated_fused_segments=sim.fused_segments,
         observed_fused_segments=(after.fused_segments
                                  - base.fused_segments),
+        simulated_shard=sim.shard_launches,
+        observed_shard=shard_obs,
     )
 
 
@@ -827,6 +878,17 @@ def main(argv=None) -> int:
                              "report observed launch counts")
     parser.add_argument("--clients", type=int, default=16)
     parser.add_argument("--queries", type=int, default=12)
+    parser.add_argument("--backend", choices=("kernel", "sharded"),
+                        default="kernel",
+                        help="selector backend for trace collection and "
+                             "the live server. 'sharded' replays the "
+                             "shard-heat model and validates per-shard "
+                             "page counts; run with XLA_FLAGS="
+                             "--xla_force_host_platform_device_count=N "
+                             "for a multi-shard mesh")
+    parser.add_argument("--shard-window", type=int, default=None,
+                        help="sharded-backend window rows per launch "
+                             "(default: the backend's own choice)")
     parser.add_argument("--window", type=float, default=2e-3,
                         help="batching window in seconds (sim and live)")
     parser.add_argument("--max-batch", type=int, default=64)
@@ -843,7 +905,9 @@ def main(argv=None) -> int:
     data = generate(scale, seed=args.seed)
     workload = generate_workload(data, args.queries, seed=args.seed + 1)
 
-    config = ServerConfig(max_mpr=args.max_mpr, selector_backend="kernel",
+    config = ServerConfig(max_mpr=args.max_mpr,
+                          selector_backend=args.backend,
+                          shard_window=args.shard_window,
                           fuse_patterns=not args.no_fuse)
     server = BrTPFServer(data.store, config)
     traces = collect_traces(server, workload, "brtpf",
@@ -890,6 +954,10 @@ def main(argv=None) -> int:
     print(f"validation(fused): simulated={lv.simulated_fused} launches / "
           f"{lv.simulated_fused_segments} segments, "
           f"observed={lv.observed_fused} / {lv.observed_fused_segments}")
+    if args.backend == "sharded":
+        print(f"validation(shard): simulated={list(lv.simulated_shard)} "
+              f"observed={list(lv.observed_shard)} "
+              f"(|rel err|={lv.shard_within:.1%})")
     # The live loop reports through the SAME canonical snapshot schema
     # the serving edge exposes at GET /metrics (core/metrics.py), so a
     # number printed here is directly comparable to what the load

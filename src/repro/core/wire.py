@@ -183,8 +183,16 @@ def fragment_from_wire(obj):
 # ---------------------------------------------------------------------------
 
 
-def error_to_wire(status: int, message: str) -> dict:
-    return envelope(KIND_ERROR, status=int(status), error=str(message))
+def error_to_wire(status: int, message: str,
+                  retryable: bool = False) -> dict:
+    out = envelope(KIND_ERROR, status=int(status), error=str(message))
+    if retryable:
+        # advisory: the condition is transient (e.g. 503 admission
+        # control -- the batching queue drains within one window) and
+        # the client should retry after backoff. Omitted when False so
+        # pre-existing error envelopes stay byte-identical.
+        out["retryable"] = True
+    return out
 
 
 def dumps(obj: dict) -> bytes:

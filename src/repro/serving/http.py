@@ -42,7 +42,7 @@ from typing import Deque, Dict, List, Optional, Tuple
 from urllib.parse import parse_qs
 
 from ..core.batching import (DEFAULT_BATCH_WINDOW_S, DEFAULT_MAX_BATCH,
-                             AsyncBrTPFServer)
+                             AsyncBrTPFServer, QueueSaturated)
 from ..core.metrics import latency_summary
 from ..core.server import MaxMprExceeded
 from ..core.wire import (WIRE_VERSION, KIND_REQUEST, WireError, dumps,
@@ -196,6 +196,12 @@ class BrTPFApp:
             # the paper's maxMpR bound exists because Omega rides the
             # request URL: too many mappings = URI too long
             await self._send_json(send, 414, error_to_wire(414, str(exc)))
+            return
+        except QueueSaturated as exc:
+            # admission control (docs/serving.md): the batching queue is
+            # full; retryable -- it drains within one batching window
+            await self._send_json(
+                send, 503, error_to_wire(503, str(exc), retryable=True))
             return
         await self._send_json(send, 200, fragment_to_wire(frag))
 

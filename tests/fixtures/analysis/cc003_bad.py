@@ -1,0 +1,11 @@
+"""CC003 bad: placement cutover with no reachable invalidation."""
+
+
+class Server:
+    def __init__(self, federated):
+        self.federated = federated  # construction is exempt
+
+
+def repartition(server, heat):
+    server.federated = server.federated.repartition(heat)  # BAD
+    return server.federated

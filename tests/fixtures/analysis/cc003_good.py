@@ -1,0 +1,12 @@
+"""CC003 good: the cutover drops every cached fragment with the swap."""
+
+
+class Server:
+    def __init__(self, federated):
+        self.federated = federated
+
+
+def repartition(server, fragments, heat):
+    server.federated = server.federated.repartition(heat)
+    fragments.clear()
+    return server.federated

@@ -30,6 +30,7 @@ CASES = [
     ("kl005", "KL005"),
     ("cc001", "CC001"),
     ("cc002", "CC002"),
+    ("cc003", "CC003"),
     ("ac001", "AC001"),
     ("ac002", "AC002"),
     ("as001", "AS001"),

@@ -494,3 +494,88 @@ class TestAsyncClient:
 
         got = asyncio.run(main())
         np.testing.assert_array_equal(got.solutions, ref.solutions)
+
+
+# ---------------------------------------------------------------------------
+# Admission control (docs/serving.md): bounded queue, retryable 503
+# ---------------------------------------------------------------------------
+
+
+class TestAdmissionControl:
+    def _fresh_reqs(self, n, seed=100):
+        """Distinct, never-served requests: the unified-store fast path
+        must not swallow them before the queue-depth check."""
+        tp = TriplePattern(V(0), 3, V(1))
+        return [Request(tp, rand_omega(np.random.default_rng(seed + i), 4),
+                        0) for i in range(n)]
+
+    def test_queue_overflow_rejects_at_enqueue(self):
+        from repro.core.batching import QueueSaturated
+        server = BrTPFServer(make_store(20), selector_backend="numpy")
+        # window far beyond the test's lifetime: the first request sits
+        # in the queue, so the second must hit the depth check
+        front = AsyncBrTPFServer(server, batch_window_s=60.0,
+                                 queue_depth=1)
+        r1, r2 = self._fresh_reqs(2)
+
+        async def main():
+            t1 = asyncio.create_task(front.handle(r1))
+            await asyncio.sleep(0)          # let r1 reach the queue
+            with pytest.raises(QueueSaturated):
+                await front.handle(r2)
+            rejected = front.stats.rejected
+            await front.aclose()            # flushes r1, resolves t1
+            return await t1, rejected
+
+        frag, rejected = asyncio.run(main())
+        assert rejected == 1
+        # the admitted request is served normally (byte parity)
+        want = BrTPFServer(make_store(20),
+                           selector_backend="numpy").handle(r1)
+        np.testing.assert_array_equal(frag.data, want.data)
+        assert frag.cnt == want.cnt
+        assert front.stats.requests == 1
+
+    def test_queue_depth_validation_and_config_plumbing(self):
+        from repro.core import ServerConfig
+        server = BrTPFServer(make_store(21), selector_backend="numpy")
+        with pytest.raises(ValueError):
+            AsyncBrTPFServer(server, queue_depth=0)
+        cfg = ServerConfig(selector_backend="numpy", queue_depth=3)
+        front = AsyncBrTPFServer.from_config(make_store(21), cfg)
+        try:
+            assert front.queue_depth == 3
+        finally:
+            asyncio.run(front.aclose())
+
+    def test_asgi_saturation_is_retryable_503(self):
+        """Concurrent posts against a depth-1 queue: the overflow comes
+        back as a brtpf/v1 503 error envelope marked retryable, while
+        admitted requests are still served (200)."""
+        from repro.core import ServerConfig
+        from repro.core.wire import dumps
+        from repro.serving.http import app_from_config, request_asgi
+        store = make_store(22)
+        cfg = ServerConfig(selector_backend="numpy", queue_depth=1,
+                           max_mpr=12)
+        app = app_from_config(store, cfg, batch_window_s=0.05)
+        reqs = self._fresh_reqs(4, seed=200)
+
+        async def main():
+            resps = await asyncio.gather(*[
+                request_asgi(app, "POST", "/fragment",
+                             body=dumps(r.to_wire())) for r in reqs])
+            await app.backend.aclose()
+            return resps
+
+        resps = asyncio.run(main())
+        by_status = {}
+        for r in resps:
+            by_status.setdefault(r.status_code, []).append(r)
+        assert 200 in by_status and 503 in by_status, sorted(by_status)
+        for r in by_status[503]:
+            env = r.json()
+            assert env["kind"] == "error"
+            assert env["retryable"] is True
+            assert env["status"] == 503
+        assert app.backend.stats.rejected == len(by_status[503])

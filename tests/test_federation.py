@@ -169,3 +169,142 @@ def test_windowed_empty_range():
     got = fed.execute_windowed(TriplePattern(9999, 1, V(0)), om,
                                max_mpr=2, capacity=8, window=16)
     assert got.shape == (0, 3)
+
+
+# -- host-only planning under non-uniform boundaries ------------------------
+#
+# plan_windows / prefix_keys touch nothing device-side: only shard_n,
+# the per-order host key copies, and static helpers. A stub mesh
+# (mesh.shape[axis] is all FederatedStore.shards reads) lets these
+# tests pin the planner's behavior under heat-skewed (non-uniform)
+# shard boundaries without forcing a multi-device platform.
+
+import types
+
+from repro.core.federation import ShardIndex
+from repro.core.store import _ORDERS, _pack
+
+_PAD_KEY = np.iinfo(np.int64).max
+
+
+def _host_only_fed(triples, splits, order_names=("spo",)):
+    """FederatedStore stub with non-uniform per-shard key counts.
+
+    ``splits`` are boundary *positions* into the sorted key array (e.g.
+    ``[40, 52]`` puts 40/12/12 keys on the 3 shards); every shard is
+    padded to the widest shard's width with +inf keys, exactly like the
+    placed build path does.
+    """
+    triples = np.asarray(triples)
+    shards = len(splits) + 1
+    indexes = {}
+    shard_n = 0
+    parts_by_order = {}
+    for name in order_names:
+        comp = _ORDERS[name]
+        keys = np.sort(_pack(triples[:, comp[0]], triples[:, comp[1]],
+                             triples[:, comp[2]]).astype(np.int64))
+        parts = np.split(keys, splits)
+        parts_by_order[name] = parts
+        shard_n = max(shard_n, max(p.size for p in parts))
+    for name, parts in parts_by_order.items():
+        hk = np.full((shards, shard_n), _PAD_KEY, dtype=np.int64)
+        for s, p in enumerate(parts):
+            hk[s, :p.size] = p
+        indexes[name] = ShardIndex(name=name, triples=None, valid=None,
+                                   keys=None, host_keys=hk)
+    mesh = types.SimpleNamespace(shape={"data": shards})
+    return FederatedStore(mesh=mesh, axis="data", triples=None,
+                          valid=None, keys=None, shard_n=shard_n,
+                          indexes=indexes)
+
+
+def _block_triples(n_subj=8, per_subj=8):
+    s = np.repeat(np.arange(n_subj), per_subj) + 10
+    p = np.tile(np.arange(per_subj), n_subj) % 4 + 1
+    o = np.arange(s.size) + 500
+    return np.stack([s, p, o], axis=1).astype(np.int32)
+
+
+def test_prefix_keys_bracket_exactly_the_prefix():
+    triples = _block_triples()
+    tp = TriplePattern(12, V(0), V(1))
+    lo, hi = FederatedStore.prefix_keys(tp, "spo")
+    keys = np.sort(_pack(triples[:, 0], triples[:, 1],
+                         triples[:, 2]).astype(np.int64))
+    inside = (keys >= lo) & (keys <= hi)
+    assert inside.sum() == (triples[:, 0] == 12).sum()
+    np.testing.assert_array_equal(
+        np.sort(keys[inside]),
+        np.sort(_pack(*[triples[triples[:, 0] == 12][:, i]
+                        for i in range(3)]).astype(np.int64)))
+    # POS mirror: a bound-predicate pattern brackets exactly that
+    # predicate's rows under the pos packing
+    tp_p = TriplePattern(V(0), 3, V(1))
+    lo, hi = FederatedStore.prefix_keys(tp_p, "pos")
+    pos_keys = _pack(triples[:, 1], triples[:, 2],
+                     triples[:, 0]).astype(np.int64)
+    inside = (pos_keys >= lo) & (pos_keys <= hi)
+    assert inside.sum() == (triples[:, 1] == 3).sum()
+
+
+def test_plan_windows_nonuniform_shard_bounds():
+    """Unpruned plan over skewed shards: shard_bounds reproduce each
+    shard's searchsorted range, pages_total follows the WIDEST shard's
+    range (not the mean), and row accounting sums across shards."""
+    triples = _block_triples()               # 64 rows, 8 per subject
+    fed = _host_only_fed(triples, splits=[40, 52])   # 40 / 12 / 12
+    tp = TriplePattern(12, V(0), V(1))       # subject block 2: keys 16..23
+    plan = fed.plan_windows(tp, [tp], window=4)
+    assert not plan.pruned and plan.order == "spo"
+    # subject 12's 8 keys all live on shard 0 under these splits
+    assert plan.shard_bounds == [(16, 24), (0, 0), (0, 0)]
+    assert plan.range_rows == plan.candidate_rows == 8
+    assert plan.pages_total == 2             # ceil(8 / 4), widest shard
+    assert plan.pages == [0, 1]
+
+    # a subject straddling the 40-key cut: rows split 0-offset on both
+    tp_b = TriplePattern(15, V(0), V(1))     # keys 40..47 -> 0 / 8 / 0
+    plan_b = fed.plan_windows(tp_b, [tp_b], window=4)
+    assert plan_b.shard_bounds == [(40, 40), (0, 8), (0, 0)]
+    assert plan_b.range_rows == 8
+    assert plan_b.pages_total == 2
+
+
+def test_plan_windows_pruned_nonuniform_spans():
+    """Omega-restricted plan over skewed shards: shard_spans carry the
+    per-shard live sub-ranges, candidate_rows counts only rows inside
+    them, and provably match-free window pages are dropped."""
+    triples = _block_triples()
+    fed = _host_only_fed(triples, splits=[40, 52])
+    tp = TriplePattern(12, V(0), V(1))
+    insts = [TriplePattern(12, 1, V(1)), TriplePattern(12, 3, V(1))]
+    plan = fed.plan_windows(tp, insts, window=2)
+    assert plan.pruned and plan.order == "spo"
+    assert plan.shard_bounds == [(16, 24), (0, 0), (0, 0)]
+    # 2 of the 4 predicates live: 8 * 2/4 rows, on shard 0 only
+    assert plan.candidate_rows == 4
+    assert plan.range_rows == 8
+    (s0, s1, s2) = plan.shard_spans
+    assert s1.shape == (0, 2) and s2.shape == (0, 2)
+    assert int(sum(hi - lo for lo, hi in s0)) == 4
+    # pruning drops pages: 4 pages of 2 rows cover the range, but the
+    # two live predicates sit in 2 row-pairs under the spo sort
+    assert plan.pages_total == 4
+    assert len(plan.pages) < plan.pages_total
+    # pages must cover every live span (positions relative to start=16)
+    covered = set()
+    for pg in plan.pages:
+        covered.update(range(16 + pg * 2, 16 + (pg + 1) * 2))
+    for lo, hi in s0:
+        assert set(range(int(lo), int(hi))) <= covered
+
+
+def test_plan_windows_window_clamped_to_shard_width():
+    triples = _block_triples()
+    fed = _host_only_fed(triples, splits=[40, 52])
+    tp = TriplePattern(12, V(0), V(1))
+    plan = fed.plan_windows(tp, [tp], window=10_000)
+    assert plan.pages_total == 1             # window clamps to shard_n
+    plan1 = fed.plan_windows(tp, [tp], window=0)
+    assert plan1.pages_total == 8            # clamps up to 1 row/window
