@@ -565,6 +565,21 @@ def main(argv=None) -> int:
         results.update(run_skew())
         results["warm_cache"] = run_warm_cache(smoke=True)
         failures = check_budgets(results)
+        # The smoke run is what CI executes per PR, so it must land the
+        # PR's trajectory entry too (full runs previously were the only
+        # writers, leaving PRs that only ran smoke absent from the
+        # series). Smoke keys are ``smoke_``-prefixed so the reduced
+        # concurrency sweep never masquerades as full-run numbers.
+        headline = {f"smoke_{k}": v for k, v in
+                    headline_metrics({"async": results,
+                                      "hetero": results,
+                                      "skew": results,
+                                      "warm_cache":
+                                          results["warm_cache"]}).items()}
+        headline["smoke_budget_failures"] = failures
+        path = persist("throughput", results, headline=headline,
+                       section="smoke")
+        print(f"# persisted -> {path}")
         return 1 if failures else 0
     out: Dict = {}
     if not args.async_only:

@@ -17,10 +17,10 @@ class Rule:
 
 def _collect() -> List[Rule]:
     from . import (accounting, async_safety, cache_coherence, dead_code,
-                   kernel_launch)
+                   kernel_launch, resilience)
     rules: List[Rule] = []
     for mod in (kernel_launch, cache_coherence, accounting, async_safety,
-                dead_code):
+                dead_code, resilience):
         rules.extend(mod.RULES)
     return rules
 

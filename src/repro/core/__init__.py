@@ -7,8 +7,8 @@ LRU cache simulation (``cache``), the unified page-granular fragment
 store under every cache layer (``fragments``), and request accounting
 (``metrics``).
 """
-from .batching import (AsyncBrTPFServer, BatchStats, drive_streams,
-                       serve_concurrent)
+from .batching import (AsyncBrTPFServer, BatchStats, DeadlineExceeded,
+                       QueueSaturated, drive_streams, serve_concurrent)
 from .bgp import BGP, bgp_from_arrays, evaluate_bgp_reference, parse_bgp
 from .cache import LRUCache, request_key
 from .client import (AsyncBrTPFClient, BrTPFClient, ExecutionResult,
@@ -37,6 +37,7 @@ from .store import (CandidateRange, SpanGroup, SubRanges, TripleStore,
 __all__ = [
     "AsyncBrTPFClient", "AsyncBrTPFServer", "BatchStats",
     "BGP", "BrTPFClient", "BrTPFServer", "CandidateRange",
+    "DeadlineExceeded", "QueueSaturated",
     "ClientFragmentCache", "Counters",
     "ExecutionResult",
     "Fragment", "FragmentStore", "LRUCache",

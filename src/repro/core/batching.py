@@ -65,6 +65,19 @@ class QueueSaturated(RuntimeError):
     without bound."""
 
 
+class DeadlineExceeded(RuntimeError):
+    """Deadline-aware shedding (docs/resilience.md): the request's
+    remaining ``timeout_ms`` budget expired before it could be served.
+
+    Raised at enqueue time when the budget is already exhausted, and at
+    flush time for requests that expired while waiting out the batching
+    window -- shedding them keeps an expired request from burning space
+    in a fused launch whose response nobody is waiting for. Retryable
+    (the ASGI app maps it to HTTP 504 with code ``DEADLINE_EXCEEDED``):
+    fragment requests are idempotent, and the *next* attempt may hit a
+    now-resident page or a less loaded replica."""
+
+
 @dataclasses.dataclass
 class BatchStats:
     """Front-end accounting (kernel launch counts live on the wrapped
@@ -78,6 +91,7 @@ class BatchStats:
     full_flushes: int = 0       # ... because max_batch was reached
     coalesced_requests: int = 0  # requests sharing a flush with >= 1 other
     max_batch_seen: int = 0
+    shed: int = 0               # expired-deadline requests shed unserved
 
     @property
     def mean_batch(self) -> float:
@@ -117,7 +131,8 @@ class AsyncBrTPFServer:
         self.queue_depth = queue_depth
         self.stats = BatchStats()
         self._executor = executor
-        self._pending: List[Tuple[Request, "asyncio.Future"]] = []
+        self._pending: List[Tuple[Request, "asyncio.Future",
+                                  Optional[float]]] = []
         self._timer: Optional[asyncio.TimerHandle] = None
         self._flush_lock = asyncio.Lock()
         self._closed = False
@@ -175,6 +190,14 @@ class AsyncBrTPFServer:
         except Exception:
             self.stats.rejected += 1
             raise
+        # Deadline check at enqueue (docs/resilience.md): a request that
+        # arrives with an exhausted budget is shed now -- nobody is
+        # waiting for the response, so serving it would be pure waste.
+        if req.timeout_ms is not None and req.timeout_ms <= 0:
+            self.stats.shed += 1
+            raise DeadlineExceeded(
+                f"request arrived with exhausted deadline budget "
+                f"(timeout_ms={req.timeout_ms})")
         # Unified-store fast path: a page that is already resident (an
         # HTTP-cached page or a memo-resident fragment) launches
         # nothing, so there is nothing to coalesce -- serve it now
@@ -198,7 +221,12 @@ class AsyncBrTPFServer:
                 f"queue_depth={self.queue_depth}")
         loop = asyncio.get_running_loop()
         fut: "asyncio.Future" = loop.create_future()
-        self._pending.append((req, fut))
+        # Absolute expiry on the loop clock: checked again at flush, so
+        # a request that spent its whole budget waiting out the batching
+        # window is shed instead of joining the launch.
+        expires = (None if req.timeout_ms is None
+                   else loop.time() + req.timeout_ms / 1e3)
+        self._pending.append((req, fut, expires))
         self.stats.requests += 1
         if self.batch_window_s <= 0 or len(self._pending) >= self.max_batch:
             cause = ("full" if len(self._pending) >= self.max_batch
@@ -247,11 +275,30 @@ class AsyncBrTPFServer:
         nothing.
         """
         async with self._flush_lock:
-            batch = self._pending
-            if not batch:
+            taken = self._pending
+            if not taken:
                 return
             self._pending = []
             self._cancel_timer()
+            # Deadline check at flush (docs/resilience.md): shed every
+            # request whose budget expired while it waited -- an expired
+            # member never enters the coalesced launch, so live requests
+            # pay nothing for a dead neighbor.
+            loop = asyncio.get_running_loop()
+            now = loop.time()
+            batch = []
+            for req, fut, expires in taken:
+                if expires is not None and now >= expires:
+                    self.stats.shed += 1
+                    if not fut.done():
+                        fut.set_exception(DeadlineExceeded(
+                            f"deadline expired "
+                            f"{(now - expires) * 1e3:.1f}ms before flush "
+                            f"(timeout_ms={req.timeout_ms})"))
+                    continue
+                batch.append((req, fut))
+            if not batch:
+                return
             self.stats.flushes += 1
             if cause == "timer":
                 self.stats.timer_flushes += 1
@@ -264,7 +311,6 @@ class AsyncBrTPFServer:
             reqs = [r for r, _ in batch]
             try:
                 if self._executor is not None:
-                    loop = asyncio.get_running_loop()
                     frags = await loop.run_in_executor(
                         self._executor, self.server.handle_batch, reqs)
                 else:

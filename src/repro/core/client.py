@@ -328,7 +328,8 @@ class AsyncBrTPFClient:
     def __init__(self, front, max_mpr: Optional[int] = None,
                  request_budget: Optional[int] = None,
                  client_cache: bool = True,
-                 count_probes: bool = False) -> None:
+                 count_probes: bool = False,
+                 deadline_ms: Optional[float] = None) -> None:
         # ``front`` is anything with ``async handle(Request) -> Fragment``
         # and a ``max_mpr`` bound: an AsyncBrTPFServer (in-process) or a
         # Transport (repro.serving.transport -- loopback or HTTP). Only
@@ -348,13 +349,22 @@ class AsyncBrTPFClient:
         # heterogeneous BGP the concurrent probes land in one batching
         # window and fuse into cnt-only segments of one launch.
         self.count_probes = bool(count_probes)
+        # Per-request deadline budget (docs/resilience.md), stamped onto
+        # every outgoing Request as ``timeout_ms``. A ResilientTransport
+        # below decrements it across retry attempts; a bare transport
+        # simply bounds its await on it. None = unbounded (pre-PR-10
+        # behavior, byte-identical wire bodies).
+        if deadline_ms is not None and deadline_ms <= 0:
+            raise ValueError("deadline_ms must be > 0 (or None)")
+        self.deadline_ms = deadline_ms
 
     # -- HTTP boundary (async) ----------------------------------------------
 
     async def _fetch(self, pattern: TriplePattern,
                      omega: Optional[np.ndarray], page: int,
                      count_only: bool = False):
-        req = Request(pattern, omega, page, count_only)
+        req = Request(pattern, omega, page, count_only,
+                      timeout_ms=self.deadline_ms)
         cached = self.client_cache.get(req.key())
         if cached is not None:
             return cached

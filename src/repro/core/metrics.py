@@ -149,13 +149,75 @@ def metrics_snapshot(server, batch=None) -> dict:
             "coalesced_requests": batch.coalesced_requests,
             "max_batch_seen": batch.max_batch_seen,
             "mean_batch": batch.mean_batch,
+            "shed": batch.shed,
         }
+        out["resilience"] = resilience_section(shed=batch.shed)
     return out
 
 
 # Pre-PR-7 name for the same snapshot; callers should migrate to
 # metrics_snapshot (one schema, shared with GET /metrics).
 layer_metrics = metrics_snapshot
+
+
+def resilience_section(retries: int = 0, hedges: int = 0,
+                       hedge_wins: int = 0, shed: int = 0,
+                       deadline_exceeded: int = 0, giveups: int = 0,
+                       breaker: Optional[dict] = None) -> dict:
+    """The ``"resilience"`` section of :func:`metrics_snapshot`
+    (docs/resilience.md) -- one schema for every surface that reports
+    fault-tolerance accounting:
+
+    * a lone async front end reports only ``shed`` (its deadline-aware
+      shedding is the one resilience mechanism that lives server-side);
+    * the replica router adds the summed replica ``shed`` plus its
+      ``breaker`` sub-section (state machine transitions/opens/failovers
+      per docs/resilience.md);
+    * a :class:`~repro.serving.resilience.ResilientTransport` overlays
+      its client-side ``retries`` / ``hedges`` / ``hedge_wins`` /
+      ``deadline_exceeded`` / ``giveups`` when asked for metrics, so
+      ``GET /metrics`` through a resilient client shows the whole
+      retry/hedge/shed story in one envelope.
+    """
+    out = {
+        "retries": int(retries),
+        "hedges": int(hedges),
+        "hedge_wins": int(hedge_wins),
+        "shed": int(shed),
+        "deadline_exceeded": int(deadline_exceeded),
+        "giveups": int(giveups),
+    }
+    if breaker is not None:
+        out["breaker"] = breaker
+    return out
+
+
+def chaos_summary(ok: int, failed: int, failed_queries: int,
+                  samples_s: Sequence[float],
+                  wall_s: Optional[float] = None,
+                  parity: float = 1.0) -> dict:
+    """Outcome schema of the chaos benchmark (``benchmarks/chaos.py``)
+    -- the quantities the ``chaos_c16:*`` budget gates bound.
+
+    ``ok``/``failed`` count client-visible request outcomes AFTER the
+    resilience layer did its work (a request that succeeded on retry 3
+    is one ``ok``); ``failed_queries`` counts whole BGP executions
+    abandoned because one of their requests exhausted every attempt;
+    ``parity`` is 1.0 iff every query that completed under faults
+    produced byte-identical solutions to the fault-free oracle.
+    Latency quantiles ride along via :func:`latency_summary` so the same
+    run gates both availability and tail latency.
+    """
+    total = ok + failed
+    out = {
+        "ok": int(ok),
+        "failed": int(failed),
+        "failed_queries": int(failed_queries),
+        "success_rate": ok / total if total else 0.0,
+        "parity": float(parity),
+    }
+    out.update(latency_summary(samples_s, wall_s))
+    return out
 
 
 def shard_balance(launches: Sequence[int], rows: Sequence[int],

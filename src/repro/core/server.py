@@ -82,12 +82,22 @@ class Request:
     Count results live under their own memo key -- a count probe can be
     answered FROM a resident data fragment, but never populates (or
     poisons) the data memo the other way round.
+
+    ``timeout_ms`` is the request's REMAINING deadline budget in
+    milliseconds (docs/resilience.md): the batching front end sheds the
+    request with :class:`~repro.core.batching.DeadlineExceeded` instead
+    of burning a launch on it once the budget is exhausted, and both
+    transports bound their wait on it. It deliberately does NOT enter
+    :meth:`key`: a fragment's identity is (pattern, omega, page), so a
+    retried request with a smaller remaining budget still hits every
+    cache/memo layer.
     """
 
     pattern: TriplePattern
     omega: Optional[np.ndarray] = None
     page: int = 0
     count_only: bool = False
+    timeout_ms: Optional[float] = None
 
     def key(self):
         om = None

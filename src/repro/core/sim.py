@@ -741,6 +741,11 @@ class LiveValidation:
     # placement layer's per-shard agreement surface.
     simulated_shard: tuple = ()
     observed_shard: tuple = ()
+    # resilience cross-check (docs/resilience.md): replayed requests
+    # carry no deadlines, so the live front end must shed NOTHING --
+    # a non-zero count here means expired-deadline shedding leaked into
+    # a deadline-free replay and the launch comparison above is void.
+    observed_shed: int = 0
 
     @property
     def agreement(self) -> float:
@@ -859,6 +864,7 @@ def live_replay(traces_per_client: Sequence[Sequence[QueryTrace]],
                                  - base.fused_segments),
         simulated_shard=sim.shard_launches,
         observed_shard=shard_obs,
+        observed_shed=front.stats.shed,
     )
 
 

@@ -97,6 +97,11 @@ def request_to_wire(req) -> dict:
     # from pre-fusion clients stay byte-identical
     if getattr(req, "count_only", False):
         out["count_only"] = True
+    # remaining deadline budget (docs/resilience.md): same
+    # emit-only-when-set rule, so deadline-less clients keep producing
+    # byte-identical request bodies
+    if getattr(req, "timeout_ms", None) is not None:
+        out["timeout_ms"] = float(req.timeout_ms)
     return out
 
 
@@ -126,8 +131,15 @@ def request_from_wire(obj):
     count_only = obj.get("count_only", False)
     if not isinstance(count_only, bool):
         raise WireError("'count_only' must be a bool")
+    timeout_ms = obj.get("timeout_ms")
+    if timeout_ms is not None:
+        if (isinstance(timeout_ms, bool)
+                or not isinstance(timeout_ms, (int, float))
+                or not timeout_ms > 0):
+            raise WireError("'timeout_ms' must be a positive number")
+        timeout_ms = float(timeout_ms)
     return Request(pattern=tp, omega=omega, page=page,
-                   count_only=count_only)
+                   count_only=count_only, timeout_ms=timeout_ms)
 
 
 # ---------------------------------------------------------------------------
@@ -183,8 +195,24 @@ def fragment_from_wire(obj):
 # ---------------------------------------------------------------------------
 
 
-def error_to_wire(status: int, message: str,
-                  retryable: bool = False) -> dict:
+# Machine-readable error codes (docs/serving.md has the full table of
+# status <-> code <-> retryability). Strings, not ints: a code names the
+# CONDITION (so clients can branch without parsing messages), while the
+# status stays the HTTP mapping.
+ERROR_CODES = (
+    "BAD_REQUEST",         # 400 -- malformed brtpf/v1 envelope
+    "NOT_FOUND",           # 404 -- unknown route
+    "METHOD_NOT_ALLOWED",  # 405 -- wrong verb on a known route
+    "MAX_MPR_EXCEEDED",    # 414 -- |Omega| > maxMpR (paper's URL bound)
+    "QUEUE_SATURATED",     # 503 -- admission control; retryable
+    "DEADLINE_EXCEEDED",   # 504 -- deadline budget exhausted; retryable
+    "INTERNAL",            # 500 -- unclassified server failure
+)
+
+
+def error_to_wire(status: int, message: str, retryable: bool = False,
+                  code: Optional[str] = None,
+                  retry_after_ms: Optional[float] = None) -> dict:
     out = envelope(KIND_ERROR, status=int(status), error=str(message))
     if retryable:
         # advisory: the condition is transient (e.g. 503 admission
@@ -192,7 +220,47 @@ def error_to_wire(status: int, message: str,
         # the client should retry after backoff. Omitted when False so
         # pre-existing error envelopes stay byte-identical.
         out["retryable"] = True
+    if code is not None:
+        if code not in ERROR_CODES:
+            raise ValueError(f"unknown wire error code {code!r}")
+        out["code"] = code
+    if retry_after_ms is not None:
+        # RETRY_AFTER hint (docs/resilience.md): a floor for the
+        # client's backoff, e.g. one batching window on 503. Like
+        # retryable/code it is emitted only when set.
+        out["retry_after_ms"] = float(retry_after_ms)
     return out
+
+
+def error_from_wire(obj) -> dict:
+    """Decode an ``error`` envelope (strict; the round-trip inverse of
+    :func:`error_to_wire`). Returns a normalized dict with ``status``,
+    ``error``, ``retryable`` (defaulted False), ``code`` and
+    ``retry_after_ms`` (defaulted None) -- what a transport needs to
+    build a :class:`~repro.serving.transport.TransportError`."""
+    obj = check_envelope(obj, KIND_ERROR)
+    status = obj.get("status")
+    if isinstance(status, bool) or not isinstance(status, int):
+        raise WireError("'status' must be an int")
+    message = obj.get("error")
+    if not isinstance(message, str):
+        raise WireError("'error' must be a string")
+    retryable = obj.get("retryable", False)
+    if not isinstance(retryable, bool):
+        raise WireError("'retryable' must be a bool")
+    code = obj.get("code")
+    if code is not None and code not in ERROR_CODES:
+        raise WireError(f"unknown wire error code {code!r}")
+    retry_after_ms = obj.get("retry_after_ms")
+    if retry_after_ms is not None:
+        if (isinstance(retry_after_ms, bool)
+                or not isinstance(retry_after_ms, (int, float))
+                or not retry_after_ms >= 0):
+            raise WireError("'retry_after_ms' must be a non-negative "
+                            "number")
+        retry_after_ms = float(retry_after_ms)
+    return {"status": status, "error": message, "retryable": retryable,
+            "code": code, "retry_after_ms": retry_after_ms}
 
 
 def dumps(obj: dict) -> bytes:

@@ -5,7 +5,13 @@
 * ``repro.serving.transport`` -- client-side transports speaking the
   brtpf/v1 wire schema (in-process loopback and ASGI/HTTP).
 * ``repro.serving.router`` -- front-end router fanning requests across
-  N server replicas.
+  N server replicas, with per-replica circuit breakers and health-gated
+  failover (docs/resilience.md).
+* ``repro.serving.resilience`` -- client-side retry/backoff, hedged
+  requests and deadline budgets over any transport.
+* ``repro.serving.faults`` -- deterministic seeded fault injection
+  (delay / error / drop / stall / crash) for chaos tests and
+  ``benchmarks/chaos.py``.
 * ``repro.serving.engine`` -- the LM serving engine (jax; imported
   lazily so the brTPF edge stays usable without an accelerator stack).
 """

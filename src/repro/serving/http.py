@@ -42,7 +42,8 @@ from typing import Deque, Dict, List, Optional, Tuple
 from urllib.parse import parse_qs
 
 from ..core.batching import (DEFAULT_BATCH_WINDOW_S, DEFAULT_MAX_BATCH,
-                             AsyncBrTPFServer, QueueSaturated)
+                             AsyncBrTPFServer, DeadlineExceeded,
+                             QueueSaturated)
 from ..core.metrics import latency_summary
 from ..core.server import MaxMprExceeded
 from ..core.wire import (WIRE_VERSION, KIND_REQUEST, WireError, dumps,
@@ -138,10 +139,12 @@ class BrTPFApp:
             elif path in _ROUTED_PATHS:
                 await self._send_json(
                     send, 405, error_to_wire(405, f"method {method} not "
-                                                  f"allowed on {path}"))
+                                                  f"allowed on {path}",
+                                             code="METHOD_NOT_ALLOWED"))
             else:
                 await self._send_json(
-                    send, 404, error_to_wire(404, f"unknown path {path!r}"))
+                    send, 404, error_to_wire(404, f"unknown path {path!r}",
+                                             code="NOT_FOUND"))
         finally:
             if path in _ROUTED_PATHS:
                 now = time.perf_counter()
@@ -185,7 +188,8 @@ class BrTPFApp:
                 req = request_from_wire(
                     _query_to_request_envelope(scope["query_string"]))
         except WireError as exc:
-            await self._send_json(send, 400, error_to_wire(400, str(exc)))
+            await self._send_json(send, 400, error_to_wire(
+                400, str(exc), code="BAD_REQUEST"))
             return
         # The wire boundary charges the attached mappings (in-process
         # clients charge Counters.mappings_sent themselves).
@@ -195,13 +199,27 @@ class BrTPFApp:
         except MaxMprExceeded as exc:
             # the paper's maxMpR bound exists because Omega rides the
             # request URL: too many mappings = URI too long
-            await self._send_json(send, 414, error_to_wire(414, str(exc)))
+            await self._send_json(send, 414, error_to_wire(
+                414, str(exc), code="MAX_MPR_EXCEEDED"))
             return
         except QueueSaturated as exc:
             # admission control (docs/serving.md): the batching queue is
-            # full; retryable -- it drains within one batching window
+            # full; retryable -- it drains within one batching window,
+            # which is exactly the retry_after_ms floor advertised here
+            window_s = getattr(self.backend, "batch_window_s", None)
             await self._send_json(
-                send, 503, error_to_wire(503, str(exc), retryable=True))
+                send, 503, error_to_wire(
+                    503, str(exc), retryable=True, code="QUEUE_SATURATED",
+                    retry_after_ms=(None if window_s is None
+                                    else max(window_s, 0.0) * 1e3)))
+            return
+        except DeadlineExceeded as exc:
+            # deadline-aware shedding (docs/resilience.md): the request's
+            # budget expired in the batching queue; retryable -- the next
+            # attempt may hit a resident page or a healthier replica
+            await self._send_json(
+                send, 504, error_to_wire(504, str(exc), retryable=True,
+                                         code="DEADLINE_EXCEEDED"))
             return
         await self._send_json(send, 200, fragment_to_wire(frag))
 

@@ -1,0 +1,19 @@
+"""RS001 bad: a blind retry loop -- catches TransportError inside a
+bounded-attempt loop without consulting the central is_retryable()
+predicate, so permanent errors get retried like transient ones."""
+import asyncio
+
+
+class TransportError(RuntimeError):
+    status = 503
+
+
+async def fetch(transport, req):
+    attempt = 0
+    while attempt < 3:
+        try:
+            return await transport.handle(req)
+        except TransportError:  # BAD: blind retry, no is_retryable()
+            attempt += 1
+            await asyncio.sleep(0.01)
+    return None

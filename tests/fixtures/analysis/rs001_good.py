@@ -1,0 +1,30 @@
+"""RS001 good: the retry loop consults is_retryable(), and the
+non-loop handler records the failure before absorbing it."""
+import asyncio
+
+from repro.serving.resilience import is_retryable
+
+
+class TransportError(RuntimeError):
+    status = 503
+
+
+async def fetch(transport, req, stats):
+    attempt = 0
+    while attempt < 3:
+        try:
+            return await transport.handle(req)
+        except TransportError as exc:
+            if not is_retryable(exc):
+                raise
+            attempt += 1
+            await asyncio.sleep(0.01)
+    return None
+
+
+async def fetch_once(transport, req, stats):
+    try:
+        return await transport.handle(req)
+    except TransportError:
+        stats.failures += 1
+        return None

@@ -37,6 +37,7 @@ CASES = [
     ("as001_asgi", "AS001"),
     ("dc001", "DC001"),
     ("dc002", "DC002"),
+    ("rs001", "RS001"),
 ]
 
 

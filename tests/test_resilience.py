@@ -1,0 +1,626 @@
+"""Fault-tolerant serving (PR 10): faults, retries, breakers, deadlines.
+
+The contract under test (docs/resilience.md): seeded fault plans are
+deterministic; client retries consult the central ``is_retryable``
+predicate and never change result bytes; per-replica circuit breakers
+open after consecutive failures and re-admit via a half-open probe;
+deadlines propagate over the wire (``Request.timeout_ms``) and expire
+identically on the loopback and ASGI transports; the batching front end
+sheds work whose deadline cannot be met; and every counter surfaces in
+the canonical ``resilience`` metrics section.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core import (AsyncBrTPFClient, BrTPFServer, DeadlineExceeded,
+                        QueueSaturated, Request, ServerConfig,
+                        TriplePattern, TripleStore, WireError, encode_var,
+                        fragment_to_wire)
+from repro.core.batching import AsyncBrTPFServer
+from repro.core.wire import dumps
+from repro.serving.faults import (FaultPlan, FaultSpec, FaultyApp,
+                                  FaultyBackend, InjectedFault)
+from repro.serving.http import create_app
+from repro.serving.resilience import (ResilientTransport, RetryPolicy,
+                                      is_retryable)
+from repro.serving.router import (BREAKER_CLOSED, BREAKER_HALF_OPEN,
+                                  BREAKER_OPEN, CircuitBreaker,
+                                  ReplicaRouter)
+from repro.serving.transport import (AsgiTransport, LoopbackTransport,
+                                     TransportError)
+
+pytestmark = pytest.mark.tier1
+
+V = encode_var
+
+
+def make_store(seed=0, n=400, terms=16):
+    rng = np.random.default_rng(seed)
+    return TripleStore(rng.integers(0, terms, size=(n, 3)))
+
+
+def sample_requests(store, seed=3, count=10, max_mpr=30):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(count):
+        s, p, o = store.triples[rng.integers(len(store.triples))]
+        m = int(rng.integers(1, max_mpr + 1))
+        omega = np.full((m, 1), int(s), dtype=np.int32)
+        out.append(Request(pattern=TriplePattern(V(0), int(p), int(o)),
+                           omega=omega, page=0))
+    return out
+
+
+def run(coro):
+    return asyncio.run(coro)
+
+
+# ---------------------------------------------------------------------------
+# is_retryable: the one predicate (repro-lint RS001)
+# ---------------------------------------------------------------------------
+
+
+class TestIsRetryable:
+    def test_transient_conditions_are_retryable(self):
+        assert is_retryable(QueueSaturated("full"))
+        assert is_retryable(DeadlineExceeded("late"))
+        assert is_retryable(asyncio.TimeoutError())
+        assert is_retryable(TransportError(503, "busy", retryable=True))
+        # transient statuses retry even without the envelope flag
+        for status in (408, 500, 502, 503, 504):
+            assert is_retryable(TransportError(status, "x"))
+
+    def test_permanent_conditions_are_not(self):
+        assert not is_retryable(TransportError(400, "bad envelope"))
+        assert not is_retryable(TransportError(414, "over maxMpR"))
+        assert not is_retryable(TransportError(404, "nope"))
+        assert not is_retryable(WireError("garbled"))
+        assert not is_retryable(ValueError("client bug"))
+
+
+# ---------------------------------------------------------------------------
+# Seeded fault plans: deterministic, per-replica streams
+# ---------------------------------------------------------------------------
+
+
+class TestFaultPlan:
+    def _decisions(self, faults, n=40):
+        async def main():
+            out = []
+            for _ in range(n):
+                try:
+                    await faults.perturb()
+                    out.append("ok")
+                except InjectedFault as exc:
+                    out.append(f"err{exc.status}")
+            return out
+        return run(main())
+
+    def test_same_seed_same_stream(self):
+        plan = FaultPlan(seed=7, default=FaultSpec(error_rate=0.5))
+        a = self._decisions(plan.for_replica(2))
+        b = self._decisions(plan.for_replica(2))
+        assert a == b
+        assert "err503" in a and "ok" in a
+
+    def test_replicas_draw_distinct_streams(self):
+        plan = FaultPlan(seed=7, default=FaultSpec(error_rate=0.5))
+        assert (self._decisions(plan.for_replica(0))
+                != self._decisions(plan.for_replica(1)))
+
+    def test_crash_after_is_a_cliff(self):
+        plan = FaultPlan(per_replica={0: FaultSpec(crash_after=3)})
+        got = self._decisions(plan.for_replica(0), n=6)
+        assert got == ["ok"] * 3 + ["err500"] * 3
+
+    def test_spec_validation(self):
+        with pytest.raises(ValueError):
+            FaultSpec(error_rate=1.5)
+        with pytest.raises(ValueError):
+            FaultSpec(delay_s=-1)
+        assert FaultSpec().is_noop
+
+
+# ---------------------------------------------------------------------------
+# Circuit breaker state machine (injected clock: fully deterministic)
+# ---------------------------------------------------------------------------
+
+
+class TestCircuitBreaker:
+    def _breaker(self, threshold=3, reset=10.0):
+        clock = {"t": 0.0}
+        cb = CircuitBreaker(failure_threshold=threshold,
+                            reset_after_s=reset,
+                            clock=lambda: clock["t"])
+        return cb, clock
+
+    def test_opens_after_consecutive_failures(self):
+        cb, _ = self._breaker(threshold=3)
+        for _ in range(2):
+            cb.record_failure()
+        assert cb.state == BREAKER_CLOSED and cb.allow()
+        cb.record_failure()
+        assert cb.state == BREAKER_OPEN
+        assert not cb.allow()
+        assert cb.opens == 1
+
+    def test_success_resets_the_consecutive_count(self):
+        cb, _ = self._breaker(threshold=2)
+        cb.record_failure()
+        cb.record_success()
+        cb.record_failure()
+        assert cb.state == BREAKER_CLOSED
+
+    def test_half_open_admits_one_probe(self):
+        cb, clock = self._breaker(threshold=1, reset=5.0)
+        cb.record_failure()
+        assert not cb.allow()
+        clock["t"] = 5.1
+        assert cb.allow()                      # the probe
+        assert cb.state == BREAKER_HALF_OPEN
+        assert not cb.allow()                  # nothing else until it lands
+        cb.record_success()
+        assert cb.state == BREAKER_CLOSED and cb.allow()
+
+    def test_failed_probe_reopens(self):
+        cb, clock = self._breaker(threshold=1, reset=5.0)
+        cb.record_failure()
+        clock["t"] = 6.0
+        assert cb.allow()
+        cb.record_failure()
+        assert cb.state == BREAKER_OPEN
+        assert cb.opens == 2
+
+    def test_invalid_construction(self):
+        with pytest.raises(ValueError):
+            CircuitBreaker(failure_threshold=0)
+        with pytest.raises(ValueError):
+            CircuitBreaker(reset_after_s=0)
+
+
+# ---------------------------------------------------------------------------
+# ResilientTransport: retries, giveups, deadlines, hedging
+# ---------------------------------------------------------------------------
+
+
+class _Flaky:
+    """Fails the first ``failures`` calls, then delegates to ``inner``
+    (or returns ``payload`` when there is nothing to delegate to)."""
+
+    max_mpr = 30
+
+    def __init__(self, failures, exc=None, inner=None, payload="frag"):
+        self.remaining = failures
+        self.exc = exc or TransportError(503, "busy", retryable=True)
+        self.inner = inner
+        self.payload = payload
+        self.calls = 0
+
+    async def handle(self, req):
+        self.calls += 1
+        if self.remaining > 0:
+            self.remaining -= 1
+            raise self.exc
+        if self.inner is not None:
+            return await self.inner.handle(req)
+        return self.payload
+
+    async def metrics(self):
+        return {} if self.inner is None else await self.inner.metrics()
+
+    async def aclose(self):
+        if self.inner is not None:
+            await self.inner.aclose()
+
+
+FAST = dict(base_backoff_s=1e-4, max_backoff_s=1e-3)
+
+
+class TestResilientTransport:
+    def test_retry_to_success_preserves_bytes(self):
+        store = make_store()
+        cfg = ServerConfig(page_size=25)
+        oracle = BrTPFServer(store, config=cfg)
+        reqs = sample_requests(store, count=6, max_mpr=cfg.max_mpr)
+        expected = [dumps(fragment_to_wire(oracle.handle(r)))
+                    for r in reqs]
+
+        async def main():
+            inner = _Flaky(4, inner=LoopbackTransport(
+                AsyncBrTPFServer.from_config(store, cfg,
+                                             batch_window_s=1e-3)))
+            tr = ResilientTransport(inner, RetryPolicy(max_attempts=6,
+                                                       **FAST))
+            try:
+                frags = [await tr.handle(r) for r in reqs]
+            finally:
+                await tr.aclose()
+            return frags, tr.stats
+
+        frags, stats = run(main())
+        assert [dumps(fragment_to_wire(f)) for f in frags] == expected
+        assert stats.retries == 4
+        assert stats.giveups == 0
+
+    def test_non_retryable_raises_immediately(self):
+        flaky = _Flaky(10, exc=TransportError(400, "bad envelope"))
+        tr = ResilientTransport(flaky, RetryPolicy(max_attempts=5, **FAST))
+        with pytest.raises(TransportError):
+            run(tr.handle(Request(pattern=TriplePattern(1, 2, 3))))
+        assert flaky.calls == 1
+        assert tr.stats.retries == 0
+
+    def test_gives_up_after_max_attempts(self):
+        flaky = _Flaky(10)
+        tr = ResilientTransport(flaky, RetryPolicy(max_attempts=3, **FAST))
+        with pytest.raises(TransportError):
+            run(tr.handle(Request(pattern=TriplePattern(1, 2, 3))))
+        assert flaky.calls == 3
+        assert tr.stats.retries == 2
+        assert tr.stats.giveups == 1
+
+    def test_deadline_budget_bounds_the_retry_loop(self):
+        flaky = _Flaky(10 ** 6)
+        tr = ResilientTransport(flaky, RetryPolicy(
+            max_attempts=10 ** 6, base_backoff_s=0.01,
+            max_backoff_s=0.02, deadline_ms=60.0))
+        with pytest.raises(DeadlineExceeded):
+            run(tr.handle(Request(pattern=TriplePattern(1, 2, 3))))
+        assert tr.stats.deadline_exceeded == 1
+        assert 1 <= flaky.calls < 100
+
+    def test_retry_after_hint_floors_the_backoff(self):
+        flaky = _Flaky(1, exc=TransportError(503, "busy", retryable=True,
+                                             retry_after_ms=40.0))
+        tr = ResilientTransport(flaky, RetryPolicy(max_attempts=3, **FAST))
+
+        async def main():
+            loop = asyncio.get_running_loop()
+            t0 = loop.time()
+            await tr.handle(Request(pattern=TriplePattern(1, 2, 3)))
+            return loop.time() - t0
+
+        assert run(main()) >= 0.04
+
+    def test_hedge_cuts_a_slow_primary(self):
+        class SlowFirst:
+            max_mpr = 30
+
+            def __init__(self):
+                self.calls = 0
+
+            async def handle(self, req):
+                self.calls += 1
+                if self.calls == 1:
+                    await asyncio.sleep(0.5)
+                    return "slow"
+                return "fast"
+
+            async def metrics(self):
+                return {}
+
+            async def aclose(self):
+                pass
+
+        tr = ResilientTransport(SlowFirst(), RetryPolicy(
+            hedge=True, hedge_after_s=0.01, **FAST))
+        got = run(tr.handle(Request(pattern=TriplePattern(1, 2, 3))))
+        assert got == "fast"
+        assert tr.stats.hedges == 1
+        assert tr.stats.hedge_wins == 1
+
+    def test_metrics_overlay_resilience_section(self):
+        flaky = _Flaky(2)
+        tr = ResilientTransport(flaky, RetryPolicy(max_attempts=5, **FAST))
+
+        async def main():
+            await tr.handle(Request(pattern=TriplePattern(1, 2, 3)))
+            return await tr.metrics()
+
+        section = run(main())["resilience"]
+        assert section["retries"] == 2
+        assert section["hedges"] == 0
+        assert "giveups" in section and "deadline_exceeded" in section
+
+    def test_policy_validation(self):
+        with pytest.raises(ValueError):
+            RetryPolicy(max_attempts=0)
+        with pytest.raises(ValueError):
+            RetryPolicy(deadline_ms=0)
+        with pytest.raises(ValueError):
+            RetryPolicy(attempt_timeout_ms=-1)
+
+
+# ---------------------------------------------------------------------------
+# Deadline propagation: loopback and ASGI expire identically
+# ---------------------------------------------------------------------------
+
+
+class TestDeadlineParity:
+    def _slow_front(self, store, cfg):
+        front = AsyncBrTPFServer.from_config(store, cfg,
+                                             batch_window_s=1e-3)
+        faults = FaultPlan(default=FaultSpec(delay_s=0.3)).for_replica(0)
+        return FaultyBackend(front, faults), faults
+
+    @pytest.mark.parametrize("kind", ["loopback", "asgi"])
+    def test_tight_deadline_expires_on_both_transports(self, kind):
+        store = make_store()
+        cfg = ServerConfig(page_size=25)
+        front, faults = self._slow_front(store, cfg)
+        if kind == "loopback":
+            tr = LoopbackTransport(front)
+        else:
+            tr = AsgiTransport(FaultyApp(create_app(front),
+                                         faults))
+        req = Request(pattern=TriplePattern(V(0), 2, V(1)),
+                      timeout_ms=25.0)
+
+        async def main():
+            try:
+                with pytest.raises(DeadlineExceeded):
+                    await tr.handle(req)
+            finally:
+                await tr.aclose()
+
+        run(main())
+
+    def test_generous_deadline_succeeds(self):
+        store = make_store()
+        front = AsyncBrTPFServer.from_config(store, ServerConfig(),
+                                             batch_window_s=1e-3)
+        tr = LoopbackTransport(front)
+        req = Request(pattern=TriplePattern(V(0), 2, V(1)),
+                      timeout_ms=30_000.0)
+
+        async def main():
+            try:
+                return await tr.handle(req)
+            finally:
+                await tr.aclose()
+
+        assert run(main()).cnt >= 0
+
+
+# ---------------------------------------------------------------------------
+# Deadline-aware shedding in the batching front end
+# ---------------------------------------------------------------------------
+
+
+class TestShedding:
+    def test_expired_work_is_shed_at_flush(self):
+        store = make_store()
+        front = AsyncBrTPFServer.from_config(store, ServerConfig(),
+                                             batch_window_s=0.05)
+        req = Request(pattern=TriplePattern(V(0), 2, V(1)),
+                      timeout_ms=1.0)
+
+        async def main():
+            tr = LoopbackTransport(front)
+            try:
+                with pytest.raises(DeadlineExceeded):
+                    await front.handle(req)
+                return await tr.metrics()
+            finally:
+                await tr.aclose()
+
+        snap = run(main())
+        assert front.stats.shed == 1
+        assert snap["batch"]["shed"] == 1
+        assert snap["resilience"]["shed"] == 1
+
+    def test_already_expired_request_is_shed_at_enqueue(self):
+        store = make_store()
+        front = AsyncBrTPFServer.from_config(store, ServerConfig(),
+                                             batch_window_s=1e-3)
+        req = Request(pattern=TriplePattern(V(0), 2, V(1)),
+                      timeout_ms=0.0)
+
+        async def main():
+            try:
+                with pytest.raises(DeadlineExceeded):
+                    await front.handle(req)
+            finally:
+                await front.aclose()
+
+        run(main())
+        assert front.stats.shed == 1
+        assert front.stats.flushes == 0
+
+    def test_deadline_free_requests_never_shed(self):
+        store = make_store()
+        front = AsyncBrTPFServer.from_config(store, ServerConfig(),
+                                             batch_window_s=1e-3)
+        reqs = sample_requests(store, count=8)
+
+        async def main():
+            try:
+                await asyncio.gather(*[front.handle(r) for r in reqs])
+            finally:
+                await front.aclose()
+
+        run(main())
+        assert front.stats.shed == 0
+
+
+# ---------------------------------------------------------------------------
+# Health-gated failover in the replica router
+# ---------------------------------------------------------------------------
+
+
+class TestRouterFailover:
+    def test_breaker_detours_around_a_dead_replica(self):
+        store = make_store(seed=13)
+        cfg = ServerConfig(page_size=30)
+        oracle = BrTPFServer(store, config=cfg)
+        reqs = sample_requests(store, seed=17, count=12,
+                               max_mpr=cfg.max_mpr)
+        expected = [dumps(fragment_to_wire(oracle.handle(r)))
+                    for r in reqs]
+        # replica 0 fails every request from the start; the breaker
+        # must open and affinity must degrade to the next healthy one
+        plan = FaultPlan(seed=3,
+                         per_replica={0: FaultSpec(crash_after=0)})
+
+        async def main():
+            router = ReplicaRouter(store, cfg, replicas=3,
+                                   batch_window_s=1e-3,
+                                   failure_threshold=2,
+                                   reset_after_s=60.0,
+                                   fault_plan=plan)
+            # affinity must actually prefer the dead replica for some
+            # of the traffic, else there is nothing to fail over from
+            assert any(router.route(r) == 0 for r in reqs)
+            tr = ResilientTransport(LoopbackTransport(router),
+                                    RetryPolicy(max_attempts=6, **FAST))
+            try:
+                frags = [await tr.handle(r) for r in reqs]
+                return frags, router.metrics_snapshot()
+            finally:
+                await tr.aclose()
+
+        frags, snap = run(main())
+        assert [dumps(fragment_to_wire(f)) for f in frags] == expected
+        breaker = snap["resilience"]["breaker"]
+        assert breaker["opens"] >= 1
+        assert breaker["states"][0] == BREAKER_OPEN
+        assert breaker["failovers"] > 0
+        assert breaker["replica_failures"] >= 2
+        faults = snap["faults"]
+        assert faults[0]["crashes"] >= 2
+
+    def test_half_open_probe_readmits_a_recovered_replica(self):
+        store = make_store()
+        cfg = ServerConfig()
+
+        async def main():
+            router = ReplicaRouter(store, cfg, replicas=2,
+                                   batch_window_s=1e-3,
+                                   failure_threshold=1,
+                                   reset_after_s=0.02)
+            try:
+                # find a request whose affinity prefers replica 0, then
+                # fail its breaker by hand (the replica is healthy --
+                # the probe must succeed and close it again)
+                req = next(
+                    r for r in sample_requests(store, seed=23, count=32)
+                    if router.route(r) == 0)
+                breaker = router.breakers[0]
+                breaker.record_failure()
+                assert not breaker.allow()
+                assert breaker.state == BREAKER_OPEN
+                await asyncio.sleep(0.05)   # > reset_after_s
+                await router.handle(req)    # the half-open probe
+                return router.metrics_snapshot()
+            finally:
+                await router.aclose()
+
+        snap = run(main())
+        states = snap["resilience"]["breaker"]["states"]
+        assert BREAKER_OPEN not in states
+        assert states[0] == BREAKER_CLOSED
+
+    def test_router_metrics_have_resilience_section(self):
+        store = make_store()
+
+        async def main():
+            router = ReplicaRouter(store, ServerConfig(), replicas=2,
+                                   batch_window_s=1e-3)
+            try:
+                await router.handle(
+                    Request(pattern=TriplePattern(V(0), 2, V(1))))
+                return router.metrics_snapshot()
+            finally:
+                await router.aclose()
+
+        snap = run(main())
+        section = snap["resilience"]
+        assert section["breaker"]["states"] == [BREAKER_CLOSED] * 2
+        assert section["breaker"]["opens"] == 0
+        assert "faults" not in snap  # no plan -> no faults section
+
+
+# ---------------------------------------------------------------------------
+# Wire-level error surface over a real ASGI edge
+# ---------------------------------------------------------------------------
+
+
+class TestErrorSurfaceOverAsgi:
+    def test_injected_503_decodes_with_code_and_retryable(self):
+        store = make_store()
+        front = AsyncBrTPFServer.from_config(store, ServerConfig(),
+                                             batch_window_s=1e-3)
+        faults = FaultPlan(default=FaultSpec(error_rate=1.0)) \
+            .for_replica(0)
+        tr = AsgiTransport(FaultyApp(create_app(front), faults))
+
+        async def main():
+            try:
+                with pytest.raises(TransportError) as ei:
+                    await tr.handle(
+                        Request(pattern=TriplePattern(V(0), 2, V(1))))
+                return ei.value
+            finally:
+                await tr.aclose()
+
+        exc = run(main())
+        assert exc.status == 503
+        assert exc.retryable
+        assert exc.code == "QUEUE_SATURATED"
+
+    def test_queue_saturation_carries_retry_after_hint(self):
+        store = make_store()
+        front = AsyncBrTPFServer.from_config(store, ServerConfig(),
+                                             batch_window_s=0.2,
+                                             queue_depth=1)
+        tr = AsgiTransport(create_app(front))
+        r1, r2 = sample_requests(store, count=2)
+
+        async def main():
+            first = asyncio.ensure_future(tr.handle(r1))
+            await asyncio.sleep(0.02)   # let it enqueue
+            try:
+                with pytest.raises(TransportError) as ei:
+                    await tr.handle(r2)
+                await first
+                return ei.value
+            finally:
+                await tr.aclose()
+
+        exc = run(main())
+        assert exc.status == 503
+        assert exc.retryable
+        assert exc.code == "QUEUE_SATURATED"
+        assert exc.retry_after_ms == pytest.approx(200.0)
+
+    def test_resilient_client_rides_out_injected_errors(self):
+        """End-to-end: AsyncBrTPFClient -> ResilientTransport -> ASGI
+        edge with 30% injected 503s still returns correct solutions."""
+        store = make_store(seed=5)
+        cfg = ServerConfig(page_size=30)
+        oracle = BrTPFServer(store, config=cfg)
+        from repro.core import BrTPFClient, bgp_from_arrays
+        bgp = bgp_from_arrays([(V(0), 2, V(1)), (V(1), 3, V(2))])
+        want = BrTPFClient(oracle).execute(bgp).solutions
+
+        front = AsyncBrTPFServer.from_config(store, cfg,
+                                             batch_window_s=1e-3)
+        faults = FaultPlan(seed=7, default=FaultSpec(error_rate=0.5)) \
+            .for_replica(0)
+        tr = ResilientTransport(
+            AsgiTransport(FaultyApp(create_app(front), faults)),
+            RetryPolicy(max_attempts=12, **FAST), seed=7)
+
+        async def main():
+            try:
+                client = AsyncBrTPFClient(tr)
+                return (await client.execute(bgp)).solutions
+            finally:
+                await tr.aclose()
+
+        got = run(main())
+        assert np.array_equal(np.unique(got, axis=0),
+                              np.unique(want, axis=0))
+        assert tr.stats.retries > 0

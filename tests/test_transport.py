@@ -8,8 +8,9 @@ malformed envelopes as 400; ``GET /metrics`` speaks the same canonical
 snapshot schema as ``metrics_snapshot()``; and ``ServerConfig`` is
 equivalent to the deprecated per-kwarg constructor surface.
 
-Replica-router tests live at the bottom and are deliberately NOT
-tier1-marked: they spin up N batching front ends per test.
+Replica-router tests live at the bottom; the deterministic ones
+(routing/affinity/fleet parity with tiny batching windows) are tier1 --
+failover-under-faults behavior is exercised in test_resilience.py.
 """
 import asyncio
 import json
@@ -27,7 +28,8 @@ from repro.core import (AsyncBrTPFClient, BrTPFClient, BrTPFServer,
                         request_to_wire)
 from repro.core.batching import AsyncBrTPFServer
 from repro.core.metrics import latency_summary
-from repro.core.wire import dumps, loads
+from repro.core.wire import (ERROR_CODES, dumps, error_from_wire,
+                             error_to_wire, loads)
 from repro.serving.http import TestClient, app_from_config, create_app
 from repro.serving.router import ReplicaRouter, stable_replica_index
 from repro.serving.transport import AsgiTransport, LoopbackTransport
@@ -181,6 +183,87 @@ class TestWireRoundTrip:
         assert ServerConfig.from_wire(
             json.loads(dumps(cfg.to_wire()))) == cfg
 
+    def test_request_timeout_ms_round_trips(self):
+        req = Request(pattern=TriplePattern(V(0), 2, 3), timeout_ms=250.0)
+        env = request_to_wire(req)
+        assert env["timeout_ms"] == 250.0
+        out = request_from_wire(loads(dumps(env)))
+        assert out.timeout_ms == 250.0
+        # the deadline is delivery metadata, NOT cache identity
+        assert out.key() == Request(pattern=req.pattern).key()
+
+    def test_request_without_timeout_is_byte_identical(self):
+        """New field must not perturb the brtpf/v1 bytes of existing
+        traffic (it is emitted only when set)."""
+        req = Request(pattern=TriplePattern(V(0), 2, 3))
+        env = request_to_wire(req)
+        assert "timeout_ms" not in env
+        assert request_from_wire(loads(dumps(env))).timeout_ms is None
+
+    @pytest.mark.parametrize("bad", [0, -5, "100", True, [100]])
+    def test_invalid_timeout_ms_rejected(self, bad):
+        env = request_to_wire(Request(pattern=TriplePattern(1, 2, 3)))
+        env["timeout_ms"] = bad
+        with pytest.raises(WireError):
+            request_from_wire(env)
+
+
+class TestErrorEnvelope:
+    """Wire error schema (docs/serving.md error-code table)."""
+
+    pytestmark = TIER1
+
+    def test_round_trip_all_codes(self):
+        for code in ERROR_CODES:
+            env = error_to_wire(503, "busy", retryable=True, code=code,
+                                retry_after_ms=12.5)
+            out = error_from_wire(loads(dumps(env)))
+            assert out["status"] == 503
+            assert out["error"] == "busy"
+            assert out["retryable"] is True
+            assert out["code"] == code
+            assert out["retry_after_ms"] == 12.5
+
+    def test_wire_is_byte_stable(self):
+        env = error_to_wire(504, "deadline", retryable=True,
+                            code="DEADLINE_EXCEEDED")
+        once = dumps(env)
+        decoded = error_from_wire(loads(once))
+        again = dumps(error_to_wire(decoded["status"], decoded["error"],
+                                    retryable=decoded["retryable"],
+                                    code=decoded["code"],
+                                    retry_after_ms=decoded["retry_after_ms"]))
+        assert once == again
+
+    def test_optional_fields_emitted_only_when_set(self):
+        """Pre-PR-10 consumers must see pre-PR-10 bytes for plain
+        errors: code/retry_after_ms appear only when provided."""
+        env = error_to_wire(400, "bad request")
+        assert "code" not in env and "retry_after_ms" not in env
+        out = error_from_wire(loads(dumps(env)))
+        assert out["code"] is None
+        assert out["retry_after_ms"] is None
+        assert out["retryable"] is False
+
+    def test_unknown_code_rejected_at_encode(self):
+        with pytest.raises(ValueError):
+            error_to_wire(500, "boom", code="EXPLODED")
+
+    @pytest.mark.parametrize("mutate", [
+        lambda e: e.update(kind="fragment"),
+        lambda e: e.update(status="503"),
+        lambda e: e.pop("error"),
+        lambda e: e.update(code="NOT_A_CODE"),
+        lambda e: e.update(retryable="yes"),
+        lambda e: e.update(retry_after_ms=-1),
+    ])
+    def test_malformed_error_rejected(self, mutate):
+        env = error_to_wire(503, "busy", retryable=True,
+                            code="QUEUE_SATURATED", retry_after_ms=5.0)
+        mutate(env)
+        with pytest.raises(WireError):
+            error_from_wire(env)
+
 
 # hypothesis-gated stability sweep (optional dep, like test_pruning.py)
 try:
@@ -213,8 +296,12 @@ if HAVE_HYPOTHESIS:
             om = np.asarray(rows, dtype=np.int32).reshape(m, nvars)
             om[om < 0] = UNBOUND
             omega = om
+        timeout_ms = draw(st.one_of(
+            st.none(),
+            st.floats(min_value=0.5, max_value=60_000.0,
+                      allow_nan=False, allow_infinity=False)))
         return Request(pattern=TriplePattern(*comps), omega=omega,
-                       page=page)
+                       page=page, timeout_ms=timeout_ms)
 
     @pytest.mark.tier1
     class TestHypothesisWireStability:
@@ -225,6 +312,7 @@ if HAVE_HYPOTHESIS:
             out = request_from_wire(loads(once))
             assert out.key() == req.key()
             assert dumps(request_to_wire(out)) == once
+            assert out.timeout_ms == req.timeout_ms
 
 
 # ---------------------------------------------------------------------------
@@ -487,11 +575,14 @@ class TestTransportParity:
 
 
 # ---------------------------------------------------------------------------
-# Replica router (NOT tier1: spins up N batching front ends per test)
+# Replica router. The deterministic routing/affinity/parity tests are
+# tier1 (tiny batching windows keep them fast); only the full
+# ASGI-wrapped fleet test stays out of the fast gate.
 # ---------------------------------------------------------------------------
 
 
 class TestReplicaRouter:
+    @TIER1
     def test_stable_replica_index_deterministic(self):
         tp = (V(0), 3, 7)
         assert stable_replica_index(tp, 4) == stable_replica_index(tp, 4)
@@ -499,6 +590,7 @@ class TestReplicaRouter:
                 for s in range(64)}
         assert len(hits) > 1  # patterns spread across the fleet
 
+    @TIER1
     def test_pattern_affinity_pins_requests(self):
         store = make_store()
         router = ReplicaRouter(store, ServerConfig(), replicas=3,
@@ -508,6 +600,7 @@ class TestReplicaRouter:
         assert len(idxs) == 1
         asyncio.run(router.aclose())
 
+    @TIER1
     def test_round_robin_advances(self):
         store = make_store()
         router = ReplicaRouter(store, ServerConfig(), replicas=3,
@@ -516,12 +609,14 @@ class TestReplicaRouter:
         assert [router.route(req) for _ in range(6)] == [0, 1, 2, 0, 1, 2]
         asyncio.run(router.aclose())
 
+    @TIER1
     def test_invalid_construction(self):
         with pytest.raises(ValueError):
             ReplicaRouter(make_store(), replicas=0)
         with pytest.raises(ValueError):
             ReplicaRouter(make_store(), policy="sticky")
 
+    @TIER1
     @pytest.mark.parametrize("policy", ["pattern", "round_robin"])
     def test_fleet_parity_and_merged_metrics(self, policy):
         store = make_store(seed=13)
